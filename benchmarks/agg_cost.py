@@ -1,0 +1,68 @@
+"""Paper §1/§2 complexity claim: BrSGD aggregation is O(md); Krum is
+O(m²(d + log m)); coordinate-wise median via sort is O(dm log m).
+
+We time the jitted aggregators over a grid of (m, d), print the raw
+wall-times, and fit the scaling exponents:
+  * brsgd time ~ m^a d^b with a ~ 1, b ~ 1
+  * krum grows ~ m² at fixed d (ratio check)
+"""
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ByzantineConfig
+from repro.core import aggregators as A
+
+from .common import time_fn
+
+MS = [8, 16, 32, 64]
+DS = [10_000, 40_000, 160_000]
+
+
+def main():
+    cfg = ByzantineConfig()
+    kcfg = ByzantineConfig(aggregator="krum", alpha=0.25)
+    fns = {
+        "brsgd": jax.jit(lambda G: A.brsgd(G, cfg)),
+        "median": jax.jit(lambda G: A.cwise_median(G)),
+        "mean": jax.jit(lambda G: A.mean(G)),
+        "krum": jax.jit(lambda G: A.krum(G, kcfg)),
+    }
+    rng = np.random.default_rng(0)
+    times = {}
+    print("aggregator,m,d,us_per_call")
+    for m in MS:
+        for d in DS:
+            G = jnp.asarray(rng.normal(size=(m, d)).astype("f4"))
+            for name, fn in fns.items():
+                us = time_fn(fn, G)
+                times[(name, m, d)] = us
+                print(f"{name},{m},{d},{us:.1f}", flush=True)
+
+    # scaling fits (log-log least squares) for brsgd
+    for name in ("brsgd", "mean"):
+        xs, ys = [], []
+        for (n, m, d), us in times.items():
+            if n == name:
+                xs.append([np.log(m), np.log(d), 1.0])
+                ys.append(np.log(us))
+        coef, *_ = np.linalg.lstsq(np.asarray(xs), np.asarray(ys), rcond=None)
+        print(f"# {name} scaling: time ~ m^{coef[0]:.2f} * d^{coef[1]:.2f}")
+
+    # krum m-scaling at fixed d (expect ~quadratic at large m)
+    d = DS[-1]
+    r64_16 = times[("krum", 64, d)] / times[("krum", 16, d)]
+    rb = times[("brsgd", 64, d)] / times[("brsgd", 16, d)]
+    print(f"# m 16->64 (4x): krum x{r64_16:.1f} (O(m^2)->16x), "
+          f"brsgd x{rb:.1f} (O(m)->4x)")
+    print(f"# CLAIM brsgd O(md): "
+          f"{'PASS' if rb < (r64_16 + 1) / 2 or rb < 8 else 'FAIL'}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

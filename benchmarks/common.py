@@ -1,0 +1,54 @@
+"""Shared harness for the paper-repro benchmarks."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ByzantineConfig
+from repro.configs.lenet_fmnist import LeNetConfig
+from repro.core.simulate import make_sim_step
+from repro.data.pipeline import ImageWorkerPipeline
+from repro.models import lenet
+from repro.models.params import init_params
+
+M = 20   # paper: 20 workers
+
+
+def train_lenet(aggregator: str, attack: str, alpha: float, steps: int = 60,
+                lr: float = 0.05, seed: int = 0, batch: int = 8,
+                record_every: int = 5):
+    """One paper-style run.  Returns (final_acc, curve[(step, acc)])."""
+    cfg = LeNetConfig()
+    bcfg = ByzantineConfig(aggregator=aggregator, attack=attack, alpha=alpha)
+    pipe = ImageWorkerPipeline(M, n_per_worker=128, seed=seed, byz=bcfg)
+    params = init_params(lenet.lenet_defs(cfg), jax.random.PRNGKey(seed))
+    step_fn = make_sim_step(lambda p, b: lenet.lenet_loss(p, b), bcfg, lr)
+    key = jax.random.PRNGKey(seed + 1)
+    test_x = jnp.asarray(pipe.test_images[:512])
+    test_y = jnp.asarray(pipe.test_labels[:512])
+    curve = []
+    for s in range(steps):
+        b = {k: jnp.asarray(v) for k, v in pipe.batch(s, batch).items()}
+        params, _ = step_fn(params, b, jax.random.fold_in(key, s))
+        if s % record_every == 0 or s == steps - 1:
+            acc = float(lenet.lenet_accuracy(params, test_x, test_y))
+            if not np.isfinite(np.asarray(
+                    jax.tree.leaves(params)[0]).sum()):
+                acc = float("nan")
+            curve.append((s, acc))
+    return curve[-1][1], curve
+
+
+def time_fn(fn, *args, reps: int = 5, warmup: int = 2):
+    """Median wall-time (us) of jitted fn."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)

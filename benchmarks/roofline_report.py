@@ -1,0 +1,60 @@
+"""Roofline report: renders EXPERIMENTS.md §Dry-run / §Roofline tables
+from the JSON records produced by ``repro.launch.dryrun``."""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+DEFAULT = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load(out: pathlib.Path, mesh: str = "single", tag: str = ""):
+    rows = []
+    for f in sorted(out.glob("*.json")):
+        r = json.loads(f.read_text())
+        parts = f.stem.split("__")
+        rtag = parts[3] if len(parts) > 3 else ""
+        if r.get("mesh") != mesh or rtag != tag:
+            continue
+        rows.append(r)
+    return rows
+
+
+def fmt_table(rows):
+    out = ["| arch | shape | scope/layout | compute s | memory s | coll s | "
+           "dominant | model TF | useful | bound-MFU |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if not r.get("ok"):
+            out.append(f"| {r.get('arch')} | {r.get('shape')} | FAIL |||||||")
+            continue
+        rl = r["roofline"]
+        sl = r.get("scope", r["mode"])
+        if r.get("layout"):
+            sl += "/" + r["layout"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {sl} "
+            f"| {rl['compute_s']:.3e} | {rl['memory_s']:.3e} "
+            f"| {rl['collective_s']:.3e} | {rl['dominant']} "
+            f"| {rl['model_flops']/1e12:.1f} | {rl['useful_ratio']:.2f} "
+            f"| {rl['mfu_bound']*100:.1f}% |")
+    return "\n".join(out)
+
+
+def main():
+    out = pathlib.Path(sys.argv[1]) if len(sys.argv) > 1 else DEFAULT
+    rows = load(out, "single")
+    if not rows:
+        print("no dry-run records found; run `python -m repro.launch.dryrun --all`")
+        return 1
+    print("## Roofline (single-pod 16x16, per-device terms)\n")
+    print(fmt_table(rows))
+    multi = load(out, "multi")
+    n_ok = sum(1 for r in multi if r.get("ok"))
+    print(f"\nmulti-pod (2x16x16): {n_ok}/{len(multi)} cases compiled ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

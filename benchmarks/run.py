@@ -1,0 +1,39 @@
+"""Run every benchmark (one per paper table/figure + this build's
+roofline report).  ``python -m benchmarks.run [--quick]``."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> int:
+    quick = "--quick" in sys.argv
+    steps = 30 if quick else 60
+    rc = 0
+    from . import (ablation, agg_cost, fig3, rate, robustness,
+                   roofline_report, table1)
+    for name, fn in [
+        ("table1 (acc x attack x alpha x aggregator)",
+         lambda: table1.main(steps)),
+        ("fig3 (convergence curves)", lambda: fig3.main(steps)),
+        ("agg_cost (O(md) complexity claim)", agg_cost.main),
+        ("rate (Theorem 1 statistical rate)", rate.main),
+        ("ablation (beta / threshold contributions)", ablation.main),
+        ("robustness (6 attacks x 6 aggregators, ALIE/IPM)",
+         robustness.main),
+        ("roofline (dry-run derived)", roofline_report.main),
+    ]:
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.time()
+        try:
+            r = fn() or 0
+        except Exception as e:  # keep the harness going, report at the end
+            print(f"ERROR in {name}: {type(e).__name__}: {e}")
+            r = 1
+        rc = rc or r
+        print(f"===== done in {time.time() - t0:.1f}s (rc={r}) =====")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

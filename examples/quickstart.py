@@ -1,0 +1,39 @@
+"""Quickstart: the BrSGD aggregation rule in 40 lines.
+
+Builds a worker-gradient matrix G for a toy strongly convex problem,
+corrupts 25% of the rows with the paper's Gradient Scale attack, and
+shows that  mean() is destroyed while  brsgd() recovers the honest mean.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ByzantineConfig
+from repro.core import aggregators, attacks
+
+m, d = 20, 1_000
+rng = np.random.default_rng(0)
+
+# honest workers: gradient = true_grad + noise
+true_grad = rng.normal(size=d).astype("f4")
+G = jnp.asarray(true_grad[None] + 0.1 * rng.normal(size=(m, d)).astype("f4"))
+
+# the paper's Gradient Scale attack on 25% of the workers
+bcfg = ByzantineConfig(aggregator="brsgd", attack="scale", alpha=0.25,
+                       attack_scale=1e10)
+G_attacked = attacks.apply_attack(G, jax.random.PRNGKey(0), bcfg)
+
+naive = aggregators.mean(G_attacked)
+robust, state = aggregators.brsgd(G_attacked, bcfg, return_state=True)
+
+err = lambda v: float(jnp.linalg.norm(v - jnp.asarray(true_grad)))
+print(f"workers m={m}, dims d={d}, byzantine={int(0.25 * m)}")
+print(f"naive mean error : {err(naive):.3e}   <- destroyed by one attack")
+print(f"brsgd error      : {err(robust):.3e}")
+print(f"selected workers : {np.flatnonzero(np.asarray(state.selected)).tolist()}")
+print(f"l1-filter kept   : {int(state.c1.sum())}, score-filter kept: "
+      f"{int(state.c2.sum())} (beta={bcfg.beta})")
+assert err(robust) < 1.0 < err(naive)
+print("OK: BrSGD recovered the honest gradient.")

@@ -1,0 +1,28 @@
+"""Serving demo: batched prefill + greedy decode for any assigned
+architecture (reduced variant on CPU).
+
+  PYTHONPATH=src python examples/serve_demo.py --arch zamba2-2.7b
+  PYTHONPATH=src python examples/serve_demo.py --arch rwkv6-7b --gen 32
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    args = ap.parse_args()
+
+    from repro.launch import serve as S
+    S.main(["--arch", args.arch, "--reduced", "--batch", str(args.batch),
+            "--prompt-len", str(args.prompt_len), "--gen", str(args.gen)])
+
+
+if __name__ == "__main__":
+    main()

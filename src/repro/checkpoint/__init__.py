@@ -1,0 +1,1 @@
+from .ckpt import latest_step, restore, save

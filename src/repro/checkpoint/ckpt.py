@@ -1,0 +1,64 @@
+"""Flat-file checkpointing (orbax-free, offline-friendly).
+
+Saves a pytree of arrays as one ``.npz`` per save plus a JSON treedef
+manifest.  Arrays are gathered to host (fine at example scale; the
+dry-run path never checkpoints).  Restore rebuilds the exact pytree and
+optionally re-places leaves onto provided shardings.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree, step: int = 0, extra: Optional[dict] = None):
+    os.makedirs(path, exist_ok=True)
+    arrays = _flatten_with_paths(tree)
+    np.savez(os.path.join(path, f"step_{step:08d}.npz"), **arrays)
+    manifest = {"step": step, "keys": sorted(arrays), "extra": extra or {}}
+    with open(os.path.join(path, f"step_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(f[5:13]) for f in os.listdir(path)
+             if f.startswith("step_") and f.endswith(".npz")]
+    return max(steps) if steps else None
+
+
+def restore(path: str, like, step: Optional[int] = None, shardings=None):
+    """Restore into the structure of ``like``.  ``shardings``: optional
+    matching pytree of jax.sharding.Sharding for device placement."""
+    if step is None:
+        step = latest_step(path)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {path}")
+    data = np.load(os.path.join(path, f"step_{step:08d}.npz"))
+    saved = _flatten_with_paths(like)  # for key order/shape check
+    flat, tdef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    sh_flat = (jax.tree.leaves(shardings) if shardings is not None
+               else [None] * len(flat))
+    for (pathk, leaf), sh in zip(flat, sh_flat):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in pathk)
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None else arr)
+    return jax.tree_util.tree_unflatten(jax.tree.structure(like), out), step

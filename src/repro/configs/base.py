@@ -1,0 +1,222 @@
+"""Config dataclasses for the model zoo and the training system.
+
+Every assigned architecture is expressed as a ``ModelConfig``; the
+reduced smoke variants are derived with ``reduced()``.  All fields are
+plain data so configs hash/compare and never touch jax at import time.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class AttentionSpec:
+    """Attention family description.
+
+    kind:
+      - "gqa": grouped-query attention (n_kv_heads <= n_heads)
+      - "mla": multi-head latent attention (DeepSeek-V2 / MiniCPM3)
+      - "none": attention-free layer stack (rwkv6)
+    """
+
+    kind: str = "gqa"
+    n_heads: int = 8
+    n_kv_heads: int = 8
+    head_dim: int = 128
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    # sliding window (tokens); 0 = full attention.  The long_500k shape
+    # auto-selects window attention for full-attention archs.
+    window: int = 0
+    # --- MLA-only fields ---
+    q_lora_rank: int = 0          # 0 = full-rank q projection
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+
+@dataclass(frozen=True)
+class MoESpec:
+    n_experts: int = 0            # 0 = dense FFN
+    top_k: int = 1
+    n_shared: int = 0             # shared (always-on) experts
+    d_ff_expert: int = 0          # per-expert hidden size
+    capacity_factor: float = 1.25
+    router_zloss: float = 1e-3
+    aux_loss: float = 1e-2
+
+
+@dataclass(frozen=True)
+class SSMSpec:
+    """Mamba2 (SSD) block spec."""
+
+    state_dim: int = 64
+    head_dim: int = 64
+    n_heads: int = 0              # derived: d_inner // head_dim if 0
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256
+
+
+@dataclass(frozen=True)
+class RWKVSpec:
+    """RWKV6 ("Finch") block spec — data-dependent decay WKV."""
+
+    head_dim: int = 64
+    decay_lora: int = 64
+    mix_lora: int = 32
+    # 0 = paper-baseline per-token scan; Q > 0 = chunked-parallel WKV
+    # (flash-linear-attention form, §Perf) with Q-token chunks.
+    chunk: int = 0
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: str                # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    attention: AttentionSpec
+    activation: str = "silu"      # silu | gelu | relu2 (squared relu)
+    moe: MoESpec = field(default_factory=MoESpec)
+    ssm: Optional[SSMSpec] = None
+    rwkv: Optional[RWKVSpec] = None
+    # hybrid layout: every ``hybrid_attn_every`` ssm layers, apply the
+    # single SHARED attention block (zamba2 style).  0 = not hybrid.
+    hybrid_attn_every: int = 0
+    # moe layout: first ``n_dense_layers`` layers use the dense FFN
+    # (deepseek-v2 uses 1 dense layer before the MoE stack).
+    n_dense_layers: int = 0
+    # modality frontend: "none" | "vision" | "audio".  Frontends are
+    # stubs — input_specs() provides precomputed patch/frame embeddings.
+    frontend: str = "none"
+    n_prefix_tokens: int = 0      # patch/frame embedding count for vlm/audio
+    tie_embeddings: bool = False
+    rms_eps: float = 1e-5
+    dtype: str = "bfloat16"       # activation/param dtype
+    source: str = ""              # citation
+
+    # ------------------------------------------------------------------
+    @property
+    def is_moe(self) -> bool:
+        return self.moe.n_experts > 0
+
+    @property
+    def d_head_total(self) -> int:
+        return self.attention.n_heads * self.attention.head_dim
+
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test variant: same family, tiny dims (<=512 d_model,
+        2 layers, <=4 experts)."""
+        att = self.attention
+        d_model = min(self.d_model, 256)
+        n_heads = min(att.n_heads, 4)
+        n_kv = min(att.n_kv_heads, max(1, n_heads // 2)) if att.kind != "none" else 0
+        head_dim = min(att.head_dim, 64)
+        red_att = replace(
+            att,
+            n_heads=n_heads,
+            n_kv_heads=max(1, n_kv),
+            head_dim=head_dim,
+            q_lora_rank=min(att.q_lora_rank, 64) if att.q_lora_rank else 0,
+            kv_lora_rank=min(att.kv_lora_rank, 32) if att.kv_lora_rank else 0,
+            qk_nope_dim=min(att.qk_nope_dim, 32) if att.qk_nope_dim else 0,
+            qk_rope_dim=min(att.qk_rope_dim, 16) if att.qk_rope_dim else 0,
+            v_head_dim=min(att.v_head_dim, 32) if att.v_head_dim else 0,
+            window=min(att.window, 64) if att.window else 0,
+        )
+        moe = self.moe
+        if self.is_moe:
+            moe = replace(
+                moe,
+                n_experts=min(moe.n_experts, 4),
+                top_k=min(moe.top_k, 2),
+                n_shared=min(moe.n_shared, 1),
+                d_ff_expert=min(moe.d_ff_expert, 128),
+            )
+        ssm = None
+        if self.ssm is not None:
+            ssm = replace(self.ssm, state_dim=min(self.ssm.state_dim, 16),
+                          head_dim=32, chunk=32)
+        rwkv = None
+        if self.rwkv is not None:
+            rwkv = replace(self.rwkv, head_dim=32, decay_lora=16, mix_lora=8)
+        n_layers = 2 if self.hybrid_attn_every == 0 else 4
+        return replace(
+            self,
+            name=self.name + "-smoke",
+            n_layers=n_layers,
+            d_model=d_model,
+            d_ff=min(self.d_ff, 512),
+            vocab=min(self.vocab, 512),
+            attention=red_att,
+            moe=moe,
+            ssm=ssm,
+            rwkv=rwkv,
+            hybrid_attn_every=2 if self.hybrid_attn_every else 0,
+            n_dense_layers=min(self.n_dense_layers, 1),
+            n_prefix_tokens=min(self.n_prefix_tokens, 8),
+            dtype="float32",
+        )
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                     # "train" | "prefill" | "decode"
+
+
+@dataclass(frozen=True)
+class ByzantineConfig:
+    """Robust-aggregation config — the paper's technique knobs."""
+
+    aggregator: str = "brsgd"     # mean | median | trimmed_mean | krum | brsgd
+    beta: float = 0.5             # kept fraction (paper: beta = 1/2)
+    threshold: float = 0.0        # 𝔗; 0.0 = auto (median of l1 distances)
+    trim_frac: float = 0.1        # trimmed_mean only
+    krum_f: int = 0               # assumed byzantine count for krum; 0=auto
+    # attack simulation (training-time fault injection for experiments)
+    attack: str = "none"          # none|gaussian|negation|scale|label_flip|sign_flip
+    alpha: float = 0.0            # fraction of byzantine workers
+    attack_scale: float = 1e10
+    gaussian_std: float = 200.0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    model: ModelConfig
+    byzantine: ByzantineConfig = field(default_factory=ByzantineConfig)
+    optimizer: str = "adamw"      # sgd | momentum | adamw
+    lr: float = 3e-4
+    momentum: float = 0.9
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    seed: int = 0
+    microbatch: int = 0           # 0 = no grad accumulation
+    remat: str = "none"           # none | block  (activation checkpointing)
+    # robust-aggregation execution strategy (DESIGN.md §2):
+    #   scope  "global"  — paper-faithful: full per-worker gradient matrix
+    #                      materialized, one global C1∩C2 selection.
+    #          "blocked" — streaming: aggregation runs inside the backward
+    #                      scan per layer-bucket (custom-VJP barrier) with
+    #                      per-bucket selections; params are FSDP-sharded
+    #                      over the worker axes.  Required for >20B archs.
+    #          "auto"    — blocked iff param count > 20e9.
+    agg_scope: str = "auto"
+    #   layout "gather"  — master-collects-G baseline (all_gather over
+    #                      workers, m x transient memory).
+    #          "a2a"     — all_to_all re-shard: workers x dims transpose,
+    #                      1x memory, stats local per dim shard.
+    #          "auto"    — a2a iff param count > 5e9 (or scope blocked).
+    agg_layout: str = "auto"
+
+
+def asdict(cfg) -> dict:
+    return dataclasses.asdict(cfg)

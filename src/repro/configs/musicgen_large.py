@@ -1,0 +1,25 @@
+"""musicgen-large [audio] — decoder-only transformer over EnCodec tokens.
+[arXiv:2306.05284]
+
+The EnCodec tokenizer / conditioning encoder is a STUB: ``input_specs()``
+provides the discrete audio-token stream plus precomputed conditioning
+frame embeddings (prepended, 64 frames) of the right shape.
+"""
+from .base import AttentionSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-large",
+    arch_type="audio",
+    n_layers=48,
+    d_model=2048,
+    d_ff=8192,
+    vocab=2048,                 # EnCodec codebook size
+    attention=AttentionSpec(
+        kind="gqa", n_heads=32, n_kv_heads=32, head_dim=64,
+        rope_theta=10_000.0,
+    ),
+    activation="gelu",
+    frontend="audio",
+    n_prefix_tokens=64,         # conditioning frame embeddings (stub)
+    source="arXiv:2306.05284",
+)

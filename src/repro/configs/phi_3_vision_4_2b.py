@@ -1,0 +1,25 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini backbone + CLIP vision frontend.
+[hf:microsoft/Phi-3-vision-128k-instruct]
+
+The CLIP ViT-L/14-336 encoder + projector is a STUB per the build rules:
+``input_specs()`` provides precomputed patch embeddings (576 patches,
+already projected to d_model) that are prepended to the token stream.
+"""
+from .base import AttentionSpec, ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    arch_type="vlm",
+    n_layers=32,
+    d_model=3072,
+    d_ff=8192,
+    vocab=32_064,
+    attention=AttentionSpec(
+        kind="gqa", n_heads=32, n_kv_heads=32, head_dim=96,
+        rope_theta=10_000.0,
+    ),
+    activation="silu",
+    frontend="vision",
+    n_prefix_tokens=576,        # ViT-L/14 @ 336px -> 24x24 patches
+    source="hf:microsoft/Phi-3-vision-128k-instruct",
+)

@@ -1,0 +1,7 @@
+"""The paper's contribution: BrSGD robust aggregation (Algorithm 2),
+baseline aggregators, Byzantine attack models, and the distributed
+(shard_map) and single-process (vmap) execution paths."""
+from .aggregators import AGGREGATORS, aggregate, brsgd, brsgd_select, krum
+from .attacks import GRADIENT_ATTACKS, apply_attack, byzantine_mask
+from .distributed import inject_attack, robust_aggregate
+from .simulate import make_sim_step, tree_to_vec, vec_to_tree, worker_grad_matrix

@@ -1,0 +1,91 @@
+"""Byzantine attack models (paper §5.1).
+
+Gradient-space attacks transform the worker-gradient matrix G [m, d]
+given a byzantine mask [m]; the *label-flip* attack lives in the data
+pipeline (labels y -> 9 - y on byzantine workers) because it corrupts
+data, not gradients.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ByzantineConfig
+
+
+def byzantine_mask(m: int, alpha: float):
+    """First ⌊αm⌋ workers are byzantine (worker identity is arbitrary)."""
+    n_byz = int(alpha * m)
+    return jnp.arange(m) < n_byz
+
+
+def gaussian_attack(G, mask, key, cfg: ByzantineConfig):
+    """Replace byzantine rows with N(0, std²) noise (paper: std=200)."""
+    noise = jax.random.normal(key, G.shape, jnp.float32) * cfg.gaussian_std
+    return jnp.where(mask[:, None], noise.astype(G.dtype), G)
+
+
+def negation_attack(G, mask, key, cfg: ByzantineConfig):
+    """Model Negation: byzantine rows = -(sum of correct gradients) * c."""
+    honest_sum = jnp.sum(jnp.where(mask[:, None], 0, G.astype(jnp.float32)), axis=0)
+    evil = (-cfg.attack_scale * honest_sum).astype(G.dtype)
+    return jnp.where(mask[:, None], evil[None], G)
+
+
+def scale_attack(G, mask, key, cfg: ByzantineConfig):
+    """Gradient Scale: byzantine rows scaled by a large constant."""
+    return jnp.where(mask[:, None], G * cfg.attack_scale, G)
+
+
+def sign_flip_attack(G, mask, key, cfg: ByzantineConfig):
+    """Extra (not in paper): byzantine rows negate their own gradient."""
+    return jnp.where(mask[:, None], -G, G)
+
+
+def alie_attack(G, mask, key, cfg: ByzantineConfig):
+    """ALIE — "A Little Is Enough" (Baruch et al., 2019).
+
+    Byzantine rows move z standard deviations from the honest mean, per
+    coordinate — small enough to pass distance filters, coordinated
+    enough to bias the aggregate.  z defaults to the classic z_max
+    heuristic ~ 1.5 when attack_scale is the (huge) paper default."""
+    Gf = G.astype(jnp.float32)
+    hon = jnp.where(mask[:, None], jnp.nan, Gf)
+    mu = jnp.nanmean(hon, axis=0)
+    sd = jnp.nanstd(hon, axis=0)
+    z = jnp.float32(cfg.attack_scale if cfg.attack_scale < 100 else 1.5)
+    evil = (mu - z * sd).astype(G.dtype)
+    return jnp.where(mask[:, None], evil[None], G)
+
+
+def ipm_attack(G, mask, key, cfg: ByzantineConfig):
+    """IPM — Inner-Product Manipulation (Xie et al., 2020).
+
+    Byzantine rows are -eps * mean(honest): for small eps the corrupted
+    mean keeps a POSITIVE inner product with the honest direction but is
+    shrunk/reversed enough to stall convergence."""
+    Gf = G.astype(jnp.float32)
+    hon = jnp.where(mask[:, None], jnp.nan, Gf)
+    mu = jnp.nanmean(hon, axis=0)
+    eps = jnp.float32(cfg.attack_scale if cfg.attack_scale < 100 else 0.5)
+    evil = (-eps * mu).astype(G.dtype)
+    return jnp.where(mask[:, None], evil[None], G)
+
+
+GRADIENT_ATTACKS = {
+    "gaussian": gaussian_attack,
+    "negation": negation_attack,
+    "scale": scale_attack,
+    "sign_flip": sign_flip_attack,
+    "alie": alie_attack,
+    "ipm": ipm_attack,
+}
+
+
+def apply_attack(G, key, cfg: ByzantineConfig):
+    """Apply cfg.attack to the first ⌊αm⌋ rows of G.  label_flip and
+    none are no-ops here (label_flip happens in the data pipeline)."""
+    if cfg.attack in ("none", "label_flip") or cfg.alpha <= 0:
+        return G
+    mask = byzantine_mask(G.shape[0], cfg.alpha)
+    return GRADIENT_ATTACKS[cfg.attack](G, mask, key, cfg)

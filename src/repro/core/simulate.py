@@ -1,0 +1,57 @@
+"""Single-process m-worker Byzantine SGD simulation.
+
+This is the harness for the paper's own experimental scale (m=20,
+LeNet/FashionMNIST): per-worker gradients via ``vmap`` over a leading
+worker axis, gradient-space attacks on the G matrix, then any of the
+aggregation rules.  It runs on one CPU device — no mesh required — and
+shares the aggregator/attack implementations with the distributed path.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ByzantineConfig
+from . import aggregators, attacks
+
+
+def tree_to_vec(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.concatenate([l.reshape(-1).astype(jnp.float32) for l in leaves])
+
+
+def vec_to_tree(vec, like):
+    leaves, tdef = jax.tree.flatten(like)
+    out, o = [], 0
+    for l in leaves:
+        out.append(vec[o:o + l.size].reshape(l.shape).astype(l.dtype))
+        o += l.size
+    return jax.tree.unflatten(tdef, out)
+
+
+def worker_grad_matrix(loss_fn: Callable, params, worker_batches):
+    """G [m, d]: per-worker flattened gradients.
+
+    worker_batches: pytree with leading worker axis m on every leaf.
+    """
+    grads = jax.vmap(jax.grad(loss_fn), in_axes=(None, 0))(params, worker_batches)
+    return jax.vmap(tree_to_vec)(grads)
+
+
+def make_sim_step(loss_fn: Callable, bcfg: ByzantineConfig, lr: float):
+    """Plain-SGD simulation step (the paper trains with vanilla SGD)."""
+
+    @jax.jit
+    def step(params, worker_batches, key):
+        G = worker_grad_matrix(loss_fn, params, worker_batches)
+        G = attacks.apply_attack(G, key, bcfg)
+        agg = aggregators.aggregate(G, bcfg)
+        new_params = jax.tree.map(
+            lambda p, g: p - lr * g.astype(p.dtype), params,
+            vec_to_tree(agg, params))
+        return new_params, jnp.linalg.norm(agg)
+
+    return step

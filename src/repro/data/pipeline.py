@@ -1,0 +1,74 @@
+"""Per-worker sharded batch pipeline.
+
+Produces batches with a leading worker axis [m, b, ...] — the layout
+both the vmap simulation path and the shard_map distributed path
+consume (the distributed path shards the worker axis over the mesh's
+worker axes).  Byzantine *data* corruption (label flip) happens here,
+on the shards of the byzantine workers, exactly as in the paper where
+byzantine machines "compute gradients on these data".
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from ..configs.base import ByzantineConfig, InputShape, ModelConfig
+from .synthetic import TokenStream, flip_labels, fmnist_like
+
+
+class LMWorkerPipeline:
+    """Token batches [m, b, S] for LM training."""
+
+    def __init__(self, cfg: ModelConfig, n_workers: int, batch_per_worker: int,
+                 seq_len: int, seed: int = 0,
+                 byz: Optional[ByzantineConfig] = None):
+        self.cfg = cfg
+        self.m = n_workers
+        self.b = batch_per_worker
+        self.seq = seq_len
+        self.stream = TokenStream(cfg.vocab, seed=seed)
+        self.byz = byz
+
+    def batch(self, step: int) -> dict:
+        toks = self.stream.batch(step, self.m * self.b, self.seq)
+        toks = toks.reshape(self.m, self.b, self.seq)
+        if (self.byz is not None and self.byz.attack == "label_flip"
+                and self.byz.alpha > 0):
+            n_byz = int(self.byz.alpha * self.m)
+            # corrupt the byzantine workers' target stream: reverse tokens
+            toks[:n_byz] = self.cfg.vocab - 1 - toks[:n_byz]
+        out = {"tokens": toks}
+        if self.cfg.n_prefix_tokens:
+            rng = np.random.default_rng(step)
+            out["prefix_embed"] = rng.normal(
+                0, 0.02, size=(self.m, self.b, self.cfg.n_prefix_tokens,
+                               self.cfg.d_model)).astype(np.float32)
+        return out
+
+
+class ImageWorkerPipeline:
+    """FashionMNIST-like shards for the LeNet repro: each worker owns n
+    samples (paper: i.i.d. per-worker datasets); byzantine workers' labels
+    are flipped when the attack is label_flip."""
+
+    def __init__(self, n_workers: int, n_per_worker: int, seed: int = 0,
+                 byz: Optional[ByzantineConfig] = None, n_classes: int = 10):
+        self.m, self.n = n_workers, n_per_worker
+        imgs, labels = fmnist_like(n_workers * n_per_worker, seed=seed)
+        self.images = imgs.reshape(n_workers, n_per_worker, *imgs.shape[1:])
+        labels = labels.reshape(n_workers, n_per_worker)
+        if byz is not None and byz.attack == "label_flip" and byz.alpha > 0:
+            n_byz = int(byz.alpha * n_workers)
+            labels[:n_byz] = flip_labels(labels[:n_byz], n_classes)
+        self.labels = labels
+        self.test_images, self.test_labels = fmnist_like(2048, seed=seed + 777)
+
+    def batch(self, step: int, batch_per_worker: int) -> dict:
+        rng = np.random.default_rng(step)
+        idx = rng.integers(0, self.n, size=(self.m, batch_per_worker))
+        take = np.take_along_axis
+        return {
+            "images": np.stack([self.images[w, idx[w]] for w in range(self.m)]),
+            "labels": np.stack([self.labels[w, idx[w]] for w in range(self.m)]),
+        }

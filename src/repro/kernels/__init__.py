@@ -1,0 +1,2 @@
+from .ops import brsgd_stats, cwise_median, masked_mean
+from . import ref

@@ -1,0 +1,159 @@
+"""Pallas TPU kernel: fused BrSGD aggregation statistics.
+
+The aggregation is memory-bound (O(1) FLOP per byte of G), so the win
+on TPU is reading G from HBM ONCE and producing all per-column /
+per-worker statistics in a single pass:
+
+  * column mean                       a_c           [d]
+  * coordinate-wise median            g_med         [d]
+  * majority-score partial sums       s_i (partial) [grid, m]
+  * l1-distance-to-median partials    l1_i(partial) [grid, m]
+
+Tiling: grid over d; each step loads a (m, d_blk) tile into VMEM
+(m <= 64 workers is a compile-time constant; d_blk default 2048 →
+m*d_blk*4B = 512 KiB << 16 MiB VMEM).  The median uses a bitonic
+sorting network over the (padded pow2) worker axis — static
+compare-exchange stages of jnp.minimum/maximum, MXU-free, fully
+vectorized over the d_blk lanes.
+
+Per-worker partials are emitted per grid step and reduced by the ops.py
+wrapper (they are tiny: [grid, m]).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bitonic_stages(n: int):
+    """Compare-exchange index pairs for a bitonic sort network of size n
+    (n a power of two).  Returns list of (i, j) stage arrays."""
+    stages = []
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            pairs = []
+            for i in range(n):
+                l = i ^ j
+                if l > i:
+                    asc = (i & k) == 0
+                    pairs.append((i, l, asc))
+            stages.append(pairs)
+            j //= 2
+        k *= 2
+    return stages
+
+
+def _sorted_rows(x, m: int):
+    """Sort rows of x [mp, d_blk] (mp = padded pow2; rows >= m are +inf)
+    along axis 0 with a static bitonic network."""
+    mp = x.shape[0]
+    rows = [x[i] for i in range(mp)]
+    for stage in _bitonic_stages(mp):
+        for i, l, asc in stage:
+            lo = jnp.minimum(rows[i], rows[l])
+            hi = jnp.maximum(rows[i], rows[l])
+            rows[i], rows[l] = (lo, hi) if asc else (hi, lo)
+    return rows
+
+
+def _stats_kernel(g_ref, med_ref, mean_ref, score_ref, l1_ref, *, m: int):
+    g = g_ref[...].astype(jnp.float32)                       # [m, d_blk]
+    d_blk = g.shape[1]
+    # ---- column mean & majority score ----
+    mean_c = jnp.sum(g, axis=0, keepdims=True) / m           # [1, d_blk]
+    above = g >= mean_c
+    n_above = jnp.sum(above.astype(jnp.int32), axis=0, keepdims=True)
+    majority_is_above = (n_above * 2) >= m
+    M = jnp.where(majority_is_above, above, ~above)
+    score_ref[0, :] = jnp.sum(M.astype(jnp.float32), axis=1)
+    mean_ref[...] = mean_c[0]
+    # ---- median via bitonic network (pad workers to pow2 with +inf) ----
+    mp = 1 << max(1, math.ceil(math.log2(m)))
+    if mp > m:
+        pad = jnp.full((mp - m, d_blk), jnp.inf, jnp.float32)
+        gp = jnp.concatenate([g, pad], axis=0)
+    else:
+        gp = g
+    rows = _sorted_rows(gp, m)
+    med = rows[(m - 1) // 2] if m % 2 else 0.5 * (rows[m // 2 - 1] + rows[m // 2])
+    med_ref[...] = med
+    # ---- l1 partials ----
+    l1_ref[0, :] = jnp.sum(jnp.abs(g - med[None, :]), axis=1)
+
+
+def brsgd_stats_pallas(G, d_blk: int = 2048, interpret: bool = True):
+    """G: [m, d] -> (median [d], mean [d], scores [m], l1 [m])."""
+    m, d = G.shape
+    d_blk = min(d_blk, d)
+    pad = (-d) % d_blk
+    if pad:
+        # pad columns with zeros: median/mean of a zero column is zero,
+        # the extra score/l1 contributions are constant across workers
+        # for score (all equal -> majority=everyone) and zero for l1 —
+        # score gets +pad for every worker, which we subtract below.
+        G = jnp.pad(G, ((0, 0), (0, pad)))
+    dp = G.shape[1]
+    grid = dp // d_blk
+    kern = functools.partial(_stats_kernel, m=m)
+    med, mean, score_p, l1_p = pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((m, d_blk), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((d_blk,), lambda i: (i,)),
+            pl.BlockSpec((d_blk,), lambda i: (i,)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((dp,), jnp.float32),
+            jax.ShapeDtypeStruct((dp,), jnp.float32),
+            jax.ShapeDtypeStruct((grid, m), jnp.float32),
+            jax.ShapeDtypeStruct((grid, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(G)
+    scores = jnp.sum(score_p, axis=0)
+    if pad:
+        scores = scores - pad                                # zero-pad columns scored 1 for all
+    l1 = jnp.sum(l1_p, axis=0)
+    return med[:d], mean[:d], scores, l1
+
+
+def masked_mean_kernel(g_ref, w_ref, out_ref):
+    g = g_ref[...].astype(jnp.float32)                       # [m, d_blk]
+    w = w_ref[...].astype(jnp.float32)                       # [m]
+    out_ref[...] = w @ g
+
+
+def masked_mean_pallas(G, mask, d_blk: int = 2048, interpret: bool = True):
+    """Mean over selected rows.  mask: [m] bool."""
+    m, d = G.shape
+    d_blk = min(d_blk, d)
+    pad = (-d) % d_blk
+    if pad:
+        G = jnp.pad(G, ((0, 0), (0, pad)))
+    dp = G.shape[1]
+    w = mask.astype(jnp.float32)
+    out = pl.pallas_call(
+        masked_mean_kernel,
+        grid=(dp // d_blk,),
+        in_specs=[pl.BlockSpec((m, d_blk), lambda i: (0, i)),
+                  pl.BlockSpec((m,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((d_blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
+        interpret=interpret,
+    )(G, w)
+    return out[:d] / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def cwise_median_pallas(G, d_blk: int = 2048, interpret: bool = True):
+    """Coordinate-wise median baseline (same bitonic machinery)."""
+    med, _, _, _ = brsgd_stats_pallas(G, d_blk, interpret)
+    return med

@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: flash (online-softmax) causal/windowed attention.
+
+The dry-run roofline shows full attention's S×T f32 score tensor is the
+dominant memory term for every dense arch at train_4k/prefill_32k
+(EXPERIMENTS.md §Roofline).  XLA alone cannot keep the score block
+VMEM-resident across the max/exp/sum/PV chain — that fusion is exactly
+what a hand kernel buys: per (batch, head, q-block) program, stream KV
+in blocks, maintain running max/normalizer, touch HBM only for
+q/k/v/out.
+
+Grid: (B, H, S/qb).  VMEM per program (qb=128, kb=128, D<=128, T<=8k):
+q [qb,D] + k,v blocks [kb,D] + acc [qb,D] + scores [qb,kb] ≈ 200 KiB.
+
+GQA: the wrapper maps query head h to kv head h // (H/Hkv); the kernel
+itself sees one q head against one kv head.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, kb: int, causal: bool,
+                  window: int, scale: float):
+    qb, D = q_ref.shape[-2:]
+    T = k_ref.shape[-2]
+    qi = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # [qb, D]
+    q_pos = qi * qb + jax.lax.broadcasted_iota(jnp.int32, (qb, 1), 0)
+
+    nkb = T // kb
+
+    def body(j, carry):
+        m_prev, l_prev, acc = carry
+        k = k_ref[0, 0, pl.dslice(j * kb, kb)].astype(jnp.float32)
+        v = v_ref[0, 0, pl.dslice(j * kb, kb)].astype(jnp.float32)
+        s = q @ k.T                                          # [qb, kb]
+        k_pos = j * kb + jax.lax.broadcasted_iota(jnp.int32, (1, kb), 1)
+        mask = jnp.ones((qb, kb), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc = acc * corr + p @ v
+        return m_new, l_new, acc
+
+    m0 = jnp.full((qb, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((qb, 1), jnp.float32)
+    a0 = jnp.zeros((qb, D), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, nkb, body, (m0, l0, a0))
+    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, window: int = 0,
+                           qb: int = 128, kb: int = 128,
+                           interpret: bool = True):
+    """q [B,H,S,D], k/v [B,Hkv,T,D] with H a multiple of Hkv.
+
+    Returns [B,H,S,D].  S must divide by qb and T by kb (wrapper pads).
+    """
+    B, H, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = 1.0 / math.sqrt(D)
+    kern = functools.partial(_flash_kernel, kb=kb, causal=causal,
+                             window=window, scale=scale)
+    out = pl.pallas_call(
+        kern,
+        grid=(B, H, S // qb),
+        in_specs=[
+            pl.BlockSpec((1, 1, qb, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, T, D), lambda b, h, i: (b, h // G, 0, 0)),
+            pl.BlockSpec((1, 1, T, D), lambda b, h, i: (b, h // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qb, D), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+    return out
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    qb: int = 128, kb: int = 128, interpret: bool = True):
+    """Padding wrapper: arbitrary S/T (pad keys get masked out by the
+    causal/positional logic as long as padding is on the right and
+    causal=True; for non-causal, T must already divide)."""
+    B, H, S, D = q.shape
+    T = k.shape[2]
+    qb = min(qb, max(8, 1 << (S - 1).bit_length() if S < qb else qb))
+    kb = min(kb, max(8, 1 << (T - 1).bit_length() if T < kb else kb))
+    ps, pt = (-S) % qb, (-T) % kb
+    if ps:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, ps), (0, 0)))
+    if pt:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pt), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pt), (0, 0)))
+        assert causal or window, "non-causal padding would attend to pads"
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 qb=qb, kb=kb, interpret=interpret)
+    return out[:, :, :S]
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """jnp oracle."""
+    B, H, S, D = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    G = H // Hkv
+    kx = jnp.repeat(k, G, axis=1)
+    vx = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhsd,bhtd->bhst", q, kx).astype(jnp.float32)
+    s = s / math.sqrt(D)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kp <= qp
+    if window:
+        mask &= (qp - kp) < window
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", w, vx).astype(q.dtype)

@@ -1,0 +1,45 @@
+"""jit'd public wrappers for the aggregation kernels.
+
+On TPU the Pallas kernels run compiled (interpret=False); everywhere
+else (this CPU container, unit tests) they run in interpret mode or
+fall back to the jnp reference — selected once at import.  Both paths
+are numerically validated against ref.py in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .brsgd_stats import brsgd_stats_pallas, cwise_median_pallas, masked_mean_pallas
+
+_BACKEND = jax.default_backend()
+_INTERPRET = _BACKEND != "tpu"
+# Pallas interpret mode is Python-slow for large d; production (TPU) runs
+# compiled.  On CPU we default to the jnp reference for speed and keep
+# the interpret path exercised by the kernel test-suite.
+_USE_PALLAS_DEFAULT = _BACKEND == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "d_blk"))
+def brsgd_stats(G, use_pallas: bool = _USE_PALLAS_DEFAULT, d_blk: int = 2048):
+    """G [m,d] -> (median [d], mean [d], scores [m], l1 [m])."""
+    if use_pallas:
+        return brsgd_stats_pallas(G, d_blk=d_blk, interpret=_INTERPRET)
+    return ref.brsgd_stats_ref(G)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "d_blk"))
+def masked_mean(G, mask, use_pallas: bool = _USE_PALLAS_DEFAULT, d_blk: int = 2048):
+    if use_pallas:
+        return masked_mean_pallas(G, mask, d_blk=d_blk, interpret=_INTERPRET)
+    return ref.masked_mean_ref(G, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "d_blk"))
+def cwise_median(G, use_pallas: bool = _USE_PALLAS_DEFAULT, d_blk: int = 2048):
+    if use_pallas:
+        return cwise_median_pallas(G, d_blk=d_blk, interpret=_INTERPRET)
+    return ref.cwise_median_ref(G)

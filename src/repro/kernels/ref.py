@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for the aggregation kernels.
+
+These are the ground truth the Pallas kernels are validated against and
+the fallback implementation on non-TPU backends.  All operate on the
+gradient matrix ``G`` of shape [m, d] (m workers, d dimensions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def column_mean_ref(G):
+    return jnp.mean(G.astype(jnp.float32), axis=0)
+
+
+def cwise_median_ref(G):
+    """Coordinate-wise median over workers (axis 0)."""
+    return jnp.median(G.astype(jnp.float32), axis=0)
+
+
+def majority_score_ref(G):
+    """Paper Algorithm 2, Constraint-2 scores.
+
+    Per column: split workers by the column mean; workers in the larger
+    subset score 1 (ties at exactly m/2 favour the >= mean subset, per
+    the paper's ``counter < m/2`` negation rule).  Score_i = row sum.
+    """
+    m = G.shape[0]
+    Gf = G.astype(jnp.float32)
+    mean_c = jnp.mean(Gf, axis=0, keepdims=True)             # [1,d]
+    above = Gf >= mean_c                                     # [m,d]
+    n_above = jnp.sum(above, axis=0, keepdims=True)          # [1,d]
+    majority_is_above = n_above * 2 >= m                     # counter >= m/2
+    M = jnp.where(majority_is_above, above, ~above)
+    return jnp.sum(M.astype(jnp.float32), axis=1)            # [m]
+
+
+def l1_to_median_ref(G, med=None):
+    if med is None:
+        med = cwise_median_ref(G)
+    return jnp.sum(jnp.abs(G.astype(jnp.float32) - med[None]), axis=1)
+
+
+def brsgd_stats_ref(G):
+    """One fused pass: (median [d], mean [d], scores [m], l1 [m])."""
+    med = cwise_median_ref(G)
+    return med, column_mean_ref(G), majority_score_ref(G), l1_to_median_ref(G, med)
+
+
+def masked_mean_ref(G, mask):
+    """Mean of the selected rows.  mask: [m] bool/float."""
+    w = mask.astype(jnp.float32)
+    return (w @ G.astype(jnp.float32)) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def trimmed_mean_ref(G, trim_frac: float):
+    """Coordinate-wise trimmed mean (Yin et al. 2018 baseline)."""
+    m = G.shape[0]
+    k = int(trim_frac * m)
+    Gs = jnp.sort(G.astype(jnp.float32), axis=0)
+    if k:
+        Gs = Gs[k:m - k]
+    return jnp.mean(Gs, axis=0)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: one WKV6 chunk (the §Perf hot spot).
+
+The chunked-parallel WKV6 (models/rwkv6._wkv_chunked) is the dominant
+compute of rwkv6 training after the hillclimb.  On TPU the win is
+keeping the whole per-(batch, head) chunk pipeline — cumulative
+log-decay, the [Q,Q] intra-chunk score matmul, the state update —
+resident in VMEM, reading r/k/v/w once from HBM and writing y/S_out
+once.  Grid: one program per (batch, head); VMEM working set for
+Q=K=64 is a handful of 16 KiB tiles.
+
+Math (matches _wkv_chunked / _wkv_scan — see models/rwkv6.py):
+
+  c_t  = Σ_{s<=t} log w_s            (inclusive, per channel)
+  ce_t = c_t - log w_t               (exclusive)
+  A[t,j] = (r_t e^{ce_t - mid}) · (k_j e^{mid - c_j}),  j < t
+  y_t  = Σ_{j<t} A[t,j] v_j + (r_t ⊙ u)·k_t v_t + (r_t e^{ce_t})·S_in
+  S'   = e^{c_Q} ⊙ S_in + Σ_j (k_j e^{c_Q - c_j}) v_j^T
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LOG_CLAMP = 40.0
+
+
+def _wkv_chunk_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s_ref,
+                      y_ref, s_out_ref):
+    r = r_ref[0, 0].astype(jnp.float32)          # [Q, K]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)             # [K]
+    S_in = s_ref[0, 0].astype(jnp.float32)       # [K, K]
+
+    logw = jnp.log(w)
+    c = jnp.cumsum(logw, axis=0)                 # inclusive [Q, K]
+    ce = c - logw                                # exclusive
+    mid = 0.5 * c[-1:]
+    r_dec = r * jnp.exp(jnp.clip(ce - mid, -LOG_CLAMP, LOG_CLAMP))
+    k_grow = k * jnp.exp(jnp.clip(mid - c, -LOG_CLAMP, LOG_CLAMP))
+    Q = r.shape[0]
+    A = r_dec @ k_grow.T                         # [Q, Q]
+    tri = jnp.tril(jnp.ones((Q, Q), jnp.float32), k=-1)
+    y = (A * tri) @ v
+    y = y + jnp.sum(r * u[None] * k, axis=1, keepdims=True) * v
+    r_state = r * jnp.exp(jnp.maximum(ce, -2 * LOG_CLAMP))
+    y = y + r_state @ S_in
+    k_end = k * jnp.exp(jnp.maximum(c[-1:] - c, -2 * LOG_CLAMP))
+    S_out = (jnp.exp(jnp.maximum(c[-1], -2 * LOG_CLAMP))[:, None] * S_in
+             + k_end.T @ v)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+    s_out_ref[0, 0] = S_out.astype(s_out_ref.dtype)
+
+
+def wkv6_chunk_pallas(r, k, v, w, u, S_in, interpret: bool = True):
+    """One chunk for all (batch, head) programs.
+
+    r/k/v/w: [B, H, Q, K]; u: [H, K]; S_in: [B, H, K, K].
+    Returns (y [B,H,Q,K], S_out [B,H,K,K]).
+    """
+    B, H, Q, K = r.shape
+    io = pl.BlockSpec((1, 1, Q, K), lambda b, h: (b, h, 0, 0))
+    st = pl.BlockSpec((1, 1, K, K), lambda b, h: (b, h, 0, 0))
+    uu = pl.BlockSpec((1, K), lambda b, h: (h, 0))
+    y, S_out = pl.pallas_call(
+        _wkv_chunk_kernel,
+        grid=(B, H),
+        in_specs=[io, io, io, io, uu, st],
+        out_specs=[io, st],
+        out_shape=[jax.ShapeDtypeStruct((B, H, Q, K), jnp.float32),
+                   jax.ShapeDtypeStruct((B, H, K, K), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, S_in)
+    return y, S_out
+
+
+def wkv6_chunk_ref(r, k, v, w, u, S_in):
+    """jnp oracle: sequential recurrence over the chunk."""
+    B, H, Q, K = r.shape
+    f32 = jnp.float32
+    S = S_in.astype(f32)
+    ys = []
+    for t in range(Q):
+        rt, kt, vt, wt = (x[:, :, t].astype(f32) for x in (r, k, v, w))
+        kv = kt[..., :, None] * vt[..., None, :]
+        y = jnp.einsum("bhk,bhkj->bhj", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        ys.append(y)
+    return jnp.stack(ys, axis=2), S

@@ -1,0 +1,341 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture × input-shape × mesh)
+lowers AND compiles on the production mesh, and harvest the roofline
+inputs (cost_analysis FLOPs/bytes, collective bytes parsed from the
+post-SPMD HLO, memory_analysis) without allocating a single real array.
+
+The XLA_FLAGS line above MUST run before any jax import — jax locks the
+device count on first init.  This module is the only place the 512
+placeholder devices exist; tests/benches see the real single device.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all            # every case, subprocess-isolated
+  python -m repro.launch.dryrun --summary        # table from recorded JSONs
+"""
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+import traceback
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# single-case runner (imports jax lazily, after the XLA_FLAGS line)
+# ---------------------------------------------------------------------------
+
+def run_case(arch: str, shape_name: str, mesh_kind: str,
+             overrides: dict | None = None, hlo_dir=None,
+             hlo_name: str = "") -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from ..configs import ByzantineConfig, TrainConfig, get_config, get_shape
+    from ..models import params as PM
+    from ..models import transformer as TF
+    from ..serving.engine import build_serve_step
+    from ..training.step import build_train_step
+    from .hlo_stats import collective_bytes
+    from .mesh import make_production_mesh
+    from .roofline import derive_terms, model_flops
+    from .specs import (decode_inputs, key_struct, prefill_inputs,
+                        train_inputs, variant_for_shape)
+
+    overrides = overrides or {}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    shape = get_shape(shape_name)
+    cfg = variant_for_shape(get_config(arch), shape)
+    # "model.<path>=<int|float|str>" overrides nest into the ModelConfig,
+    # e.g. --set model.rwkv.chunk=32 or --set model.attention.window=1024
+    import dataclasses as _dc
+
+    def _set_path(obj, path, value):
+        head, *tail = path
+        cur = getattr(obj, head)
+        if tail:
+            cur = _set_path(cur, tail, value)
+        else:
+            old = getattr(obj, head)
+            if old is not None and not isinstance(old, str):
+                value = type(old)(float(value)) if isinstance(old, float) \
+                    else type(old)(value)
+            cur = value
+        return _dc.replace(obj, **{head: cur})
+
+    model_ovr = {k: v for k, v in overrides.items() if k.startswith("model.")}
+    for k, v in model_ovr.items():
+        cfg = _set_path(cfg, k.split(".")[1:], v)
+        overrides.pop(k)
+    pdtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def structs(defs, specs, dtype):
+        return jax.tree.map(
+            lambda d, s: jax.ShapeDtypeStruct(
+                d.shape, dtype, sharding=NamedSharding(mesh, s)),
+            defs, specs,
+            is_leaf=lambda x: isinstance(x, PM.ParamDef))
+
+    defs = TF.param_defs(cfg)
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "chips": chips, "mode": shape.mode,
+           "params": PM.count_params(defs), **overrides}
+
+    t0 = time.time()
+    if shape.mode == "train":
+        tcfg = TrainConfig(model=cfg, byzantine=ByzantineConfig(),
+                           optimizer="adamw",
+                           **{k: v for k, v in overrides.items()
+                              if k in ("agg_scope", "agg_layout", "remat")})
+        bundle = build_train_step(tcfg, mesh)
+        rec.update(scope=bundle.scope, layout=bundle.layout)
+        p_structs = structs(defs, bundle.param_specs, pdtype)
+        f32 = jnp.float32
+        o_structs = {"m": structs(defs, bundle.param_specs, f32),
+                     "v": structs(defs, bundle.param_specs, f32)}
+        batch = train_inputs(cfg, shape, mesh)
+        step_s = jax.ShapeDtypeStruct((), jnp.int32)
+        lowered = bundle.step_fn.lower(p_structs, o_structs, batch,
+                                       step_s, key_struct())
+    else:
+        bundle = build_serve_step(cfg, shape, mesh)
+        p_structs = structs(defs, bundle.param_specs, pdtype)
+        if shape.mode == "prefill":
+            batch = prefill_inputs(cfg, shape, mesh)
+            lowered = bundle.prefill_fn.lower(p_structs, batch)
+        else:
+            cache, token, pos = decode_inputs(cfg, shape, mesh,
+                                              bundle.cache_spec_tree)
+            lowered = bundle.decode_fn.lower(p_structs, cache, token, pos)
+    rec["lower_s"] = round(time.time() - t0, 2)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    # ---- cost analysis (cross-check only: XLA counts while bodies ONCE,
+    # so scans over L layers under-report by ~L; the authoritative numbers
+    # come from hlo_stats.module_stats which multiplies trip counts) ----
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    rec["xla_flops_body_once"] = float(ca.get("flops", 0.0))
+    rec["xla_bytes_body_once"] = float(ca.get("bytes accessed", 0.0))
+
+    # ---- memory analysis (not implemented on all backends) ----
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                rec[k] = int(v)
+        if ("argument_size_in_bytes" in rec and "temp_size_in_bytes" in rec):
+            rec["peak_bytes_per_dev"] = (
+                rec["argument_size_in_bytes"] + rec["temp_size_in_bytes"]
+                + rec.get("output_size_in_bytes", 0)
+                - rec.get("alias_size_in_bytes", 0))
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis_error"] = str(e)
+
+    # ---- flops / bytes / collective traffic from post-SPMD HLO ----
+    from .hlo_stats import module_stats
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = lowered.as_text()
+    if hlo_dir is not None:
+        import gzip
+        hlo_dir.mkdir(parents=True, exist_ok=True)
+        with gzip.open(hlo_dir / f"{hlo_name}.txt.gz", "wt") as f:
+            f.write(hlo)
+    stats = module_stats(hlo)
+    flops = stats["flops"]
+    nbytes = stats["bytes"]
+    rec["hlo_flops_per_dev"] = flops
+    rec["hlo_bytes_per_dev"] = nbytes
+    coll = stats["collectives"]
+    rec["collective_bytes_per_dev"] = coll.pop("total", 0.0)
+    rec["collective_detail"] = {k: v for k, v in coll.items() if v}
+    rec["unknown_trip_whiles"] = stats["unknown_trip_whiles"]
+    rec["hlo_lines"] = hlo.count("\n")
+
+    # ---- roofline terms ----
+    rec["roofline"] = derive_terms(
+        flops, nbytes, rec["collective_bytes_per_dev"], chips,
+        model_flops(cfg, shape))
+    rec["ok"] = True
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# sweep driver
+# ---------------------------------------------------------------------------
+
+def case_id(arch, shape, mesh, tag=""):
+    t = f"__{tag}" if tag else ""
+    return f"{arch}__{shape}__{mesh}{t}"
+
+
+def all_cases(meshes=("single", "multi")):
+    from ..configs import ARCHS, SHAPES
+    for mesh in meshes:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                yield arch, shape, mesh
+
+
+def run_all(out: pathlib.Path, meshes, timeout: int, skip_done: bool):
+    out.mkdir(parents=True, exist_ok=True)
+    env = dict(os.environ)
+    src = str(pathlib.Path(__file__).resolve().parents[2])
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    failures = []
+    cases = list(all_cases(meshes))
+    for i, (arch, shape, mesh) in enumerate(cases):
+        cid = case_id(arch, shape, mesh)
+        f = out / f"{cid}.json"
+        if skip_done and f.exists():
+            try:
+                if json.loads(f.read_text()).get("ok"):
+                    print(f"[{i+1}/{len(cases)}] {cid} cached", flush=True)
+                    continue
+            except Exception:
+                pass
+        t0 = time.time()
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+             "--shape", shape, "--mesh", mesh, "--out", str(out)],
+            env=env, capture_output=True, text=True, timeout=timeout)
+        dt = time.time() - t0
+        status = "ok" if proc.returncode == 0 else "FAIL"
+        print(f"[{i+1}/{len(cases)}] {cid} {status} ({dt:.0f}s)", flush=True)
+        if proc.returncode != 0:
+            failures.append(cid)
+            tail = (proc.stderr or proc.stdout or "").strip().splitlines()[-25:]
+            f.write_text(json.dumps(
+                {"arch": arch, "shape": shape, "mesh": mesh, "ok": False,
+                 "error": "\n".join(tail)}, indent=1))
+            print("\n".join("   " + t for t in tail[-8:]), flush=True)
+    print(f"\ndone: {len(cases) - len(failures)}/{len(cases)} ok")
+    if failures:
+        print("failed:", *failures, sep="\n  ")
+    return 1 if failures else 0
+
+
+def rescore(out: pathlib.Path):
+    """Re-derive flops/bytes/collectives/roofline from the saved HLO of
+    every recorded case (accounting changes without recompiling)."""
+    import gzip
+
+    from ..configs import get_config, get_shape
+    from .hlo_stats import module_stats
+    from .roofline import derive_terms, model_flops
+    from .specs import variant_for_shape
+
+    n = 0
+    for f in sorted(out.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if not rec.get("ok"):
+            continue
+        h = out / "hlo" / f"{f.stem}.txt.gz"
+        if not h.exists():
+            continue
+        with gzip.open(h, "rt") as fh:
+            stats = module_stats(fh.read())
+        rec["hlo_flops_per_dev"] = stats["flops"]
+        rec["hlo_bytes_per_dev"] = stats["bytes"]
+        coll = stats["collectives"]
+        rec["collective_bytes_per_dev"] = coll.pop("total", 0.0)
+        rec["collective_detail"] = {k: v for k, v in coll.items() if v}
+        rec["unknown_trip_whiles"] = stats["unknown_trip_whiles"]
+        shape = get_shape(rec["shape"])
+        cfg = variant_for_shape(get_config(rec["arch"]), shape)
+        rec["roofline"] = derive_terms(
+            stats["flops"], stats["bytes"], rec["collective_bytes_per_dev"],
+            rec["chips"], model_flops(cfg, shape))
+        f.write_text(json.dumps(rec, indent=1, default=str))
+        n += 1
+    print(f"rescored {n} cases")
+    return 0
+
+
+def summary(out: pathlib.Path):
+    rows = []
+    for f in sorted(out.glob("*.json")):
+        r = json.loads(f.read_text())
+        if not r.get("ok"):
+            rows.append((f.stem, "FAIL", "", "", "", "", ""))
+            continue
+        rl = r["roofline"]
+        rows.append((
+            f.stem, r["mode"],
+            f"{rl['compute_s']:.3e}", f"{rl['memory_s']:.3e}",
+            f"{rl['collective_s']:.3e}", rl["dominant"],
+            f"{rl['useful_ratio']:.2f}"))
+    w = [max(len(r[i]) for r in rows) for i in range(7)]
+    hdr = ("case", "mode", "compute_s", "memory_s", "coll_s", "dom", "useful")
+    print("  ".join(h.ljust(x) for h, x in zip(hdr, w)))
+    for r in rows:
+        print("  ".join(c.ljust(x) for c, x in zip(r, w)))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--out", type=pathlib.Path, default=DEFAULT_OUT)
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--no-skip", action="store_true")
+    ap.add_argument("--summary", action="store_true")
+    ap.add_argument("--rescore", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for the result file")
+    ap.add_argument("--set", action="append", default=[],
+                    help="override TrainConfig field, e.g. agg_layout=a2a")
+    args = ap.parse_args()
+
+    if args.rescore:
+        return rescore(args.out)
+    if args.summary:
+        summary(args.out)
+        return 0
+    if args.all:
+        return run_all(args.out, args.meshes.split(","), args.timeout,
+                       not args.no_skip)
+
+    overrides = dict(kv.split("=", 1) for kv in args.set)
+    try:
+        rec = run_case(args.arch, args.shape, args.mesh, overrides,
+                       hlo_dir=args.out / "hlo",
+                       hlo_name=case_id(args.arch, args.shape, args.mesh,
+                                        args.tag))
+    except Exception:
+        traceback.print_exc()
+        return 1
+    args.out.mkdir(parents=True, exist_ok=True)
+    f = args.out / f"{case_id(args.arch, args.shape, args.mesh, args.tag)}.json"
+    f.write_text(json.dumps(rec, indent=1, default=str))
+    rl = rec["roofline"]
+    print(json.dumps({k: rec[k] for k in
+                      ("arch", "shape", "mesh", "chips", "lower_s",
+                       "compile_s", "hlo_flops_per_dev", "hlo_bytes_per_dev",
+                       "collective_bytes_per_dev")}, indent=1))
+    print(f"roofline: compute={rl['compute_s']:.3e}s memory={rl['memory_s']:.3e}s "
+          f"collective={rl['collective_s']:.3e}s dominant={rl['dominant']} "
+          f"useful={rl['useful_ratio']:.2f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,484 @@
+"""FLOP / HBM-byte / collective-traffic accounting from HLO text.
+
+``compiled.cost_analysis()`` counts every while body ONCE (scans over L
+layers report 1 layer of work) and reports no communication at all, so
+the roofline terms are derived here instead: we walk the call graph of
+the post-SPMD module, multiplying each ``while`` body by its trip count
+(XLA CPU records ``backend_config={"known_trip_count":{"n":L}}``;
+fallback: recover the bound from the loop condition's
+``compare(..., constant)``).
+
+Per computation we accumulate:
+
+  flops   dot: 2 * prod(result_dims) * prod(contracting dims)
+          convolution: 2 * prod(result) * prod(kernel) / out_features
+          elementwise arithmetic: 1 * prod(result)  (transcendental: 6x)
+  bytes   per top-level op: result bytes + operand bytes (fusions count
+          at the call site only — their internals never touch HBM)
+  coll    ring-algorithm per-device volume:
+            all-gather          result_bytes * (G-1)/G
+            all-reduce          2 * bytes * (G-1)/G
+            reduce-scatter      operand_bytes * (G-1)/G
+            all-to-all          bytes * (G-1)/G
+            collective-permute  bytes
+
+Post-partitioning HLO shapes are per-device, so every number here is a
+PER-DEVICE quantity.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# "%name = TYPE opcode(" — TYPE may be a tuple "(f32[..], /*index=5*/...)"
+# (tuple types embed /*index=N*/ comments, so the type group is lazy and
+# the opcode is the first " word(" occurrence after the '=').
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*"
+    r"(.*?)\s+"
+    r"([\w\-]+?)(?:-start)?\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_CALLS_RE = re.compile(r"(?:to_apply|calls|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[\\"\s:{]+n[\\"\s:]+(\d+)')
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONST_RE = re.compile(r"%?([\w.\-]+)\s*=\s*s32\[\]\s*constant\((\d+)\)")
+_CMP_RE = re.compile(
+    r"compare\(\s*%?([\w.\-]+),\s*%?([\w.\-]+)\s*\),?.*direction=(LT|LE|GT|GE)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_DIMLBL_RE = re.compile(r"dim_labels=(\w+)_(\w+)->(\w+)")
+
+_ELEMWISE_1 = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum",
+    "negate", "abs", "compare", "select", "and", "or", "xor", "not",
+    "sign", "floor", "ceil", "round-nearest-afz", "clamp",
+}
+_ELEMWISE_6 = {"exponential", "tanh", "log", "rsqrt", "sqrt", "power",
+               "logistic", "cosine", "sine", "expm1", "log1p", "erf"}
+# ops whose HBM traffic is proportional to the SLICE, not the operand
+# buffer: dynamic-slice reads `result` bytes from the buffer;
+# dynamic-update-slice reads+writes the update region (the rest of the
+# buffer aliases in place on TPU).  Counting full operands here inflates
+# scan-heavy models (decode caches, recurrent states) by the trip count.
+_SLICE_OPS = {"dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+              "slice", "pad"}
+_REDUCE_OPS = {"reduce", "reduce-window"}
+_SKIP_BYTES = {"tuple", "get-tuple-element", "parameter", "constant",
+               "bitcast", "after-all", "iota", "while", "call",
+               "conditional", "custom-call", "opt-barrier"}
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def _dims(type_str: str):
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = [int(d) for d in dims.split(",") if d] if dims else []
+        out.append((dt, shape))
+    return out
+
+def _nelems(shape) -> int:
+    n = 1
+    for d in shape:
+        n *= d
+    return n
+
+def _type_bytes(type_str: str) -> int:
+    return sum(_nelems(s) * _DTYPE_BYTES[dt] for dt, s in _dims(type_str))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _split_computations(text: str) -> dict:
+    comps: dict = {}
+    cur, name = [], None
+    for line in text.splitlines():
+        stripped = line.strip()
+        m = (_COMP_RE.match(stripped)
+             if ("{" in line and "->" in line
+                 and not stripped.startswith("HloModule")
+                 and "=" not in stripped.split("(", 1)[0])
+             else None)
+        if m:
+            name = m.group(1)
+            cur = [line]
+            comps[name] = cur
+        elif stripped == "}":
+            name = None
+        elif name is not None:
+            cur.append(line)
+    return comps
+
+
+def _trip_count_from_cond(cond_lines) -> int | None:
+    consts = {}
+    for l in cond_lines:
+        m = _CONST_RE.search(l)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for l in cond_lines:
+        m = _CMP_RE.search(l)
+        if m:
+            a, b, d = m.groups()
+            c = consts.get(b, consts.get(a))
+            if c is not None:
+                return c + (1 if d in ("LE", "GE") else 0)
+    return None
+
+
+_PARAM_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s+parameter\((\d+)\)")
+
+# shape/element-preserving ops that are register-level inside a fusion —
+# the slice/full-read analysis looks THROUGH them
+_TRANSPARENT = {"convert", "bitcast", "copy", "reshape", "transpose",
+                "negate", "abs"}
+
+
+def _fusion_table(fused_lines):
+    """name -> (type, op, rest) for every op in a fused computation, plus
+    the root name."""
+    tab, root = {}, None
+    for l in fused_lines:
+        m = _OP_RE.match(l)
+        if not m:
+            pm = _PARAM_RE.match(l)
+            if pm:
+                tab[pm.group(1)] = (pm.group(2), "parameter", "")
+                if l.lstrip().startswith("ROOT"):
+                    root = pm.group(1)
+            continue
+        tab[m.group(1)] = (m.group(2), m.group(3), l[m.end():])
+        if l.lstrip().startswith("ROOT"):
+            root = m.group(1)
+    return tab, root
+
+
+def _param_read_costs(fused_lines) -> dict:
+    """index -> bytes the fused kernel actually READS per parameter.
+
+    Interior ops of a fusion are register/VMEM-level: a fusion reads a
+    parameter from HBM on demand.  If every dataflow path from the
+    parameter (through transparent convert/bitcast/... chains) ends in a
+    slice-type op, only the slice is read; the buffer operand of a
+    root dynamic-update-slice aliases in place (read ~0).  Any other
+    consumer implies a full read."""
+    tab, _ = _fusion_table(fused_lines)
+    if not tab:
+        return {}
+    # uses: name -> list of (consumer op, consumer result bytes, position)
+    uses: dict = {}
+    for name, (rtype, op, rest) in tab.items():
+        if op == "parameter":
+            continue
+        for pos, o in enumerate(_OPERAND_RE.findall(rest)):
+            uses.setdefault(o, []).append((op, _type_bytes(rtype), pos))
+
+    def read_cost(name, full, depth=0):
+        """bytes read from HBM for value `name` of size `full`."""
+        if depth > 8:
+            return full
+        total = 0.0
+        for op, rb, pos in uses.get(name, ()):
+            if op == "dynamic-update-slice" and pos == 0:
+                continue                      # aliased in place
+            if op in _SLICE_OPS:
+                total += rb                   # slice-sized read
+            elif op in _TRANSPARENT:
+                # find the transparent op's own name to follow its uses
+                t_names = [n for n, (t, o2, r2) in tab.items()
+                           if o2 == op and name in _OPERAND_RE.findall(r2)]
+                if not t_names:
+                    return full
+                for tn in t_names:
+                    total += read_cost(tn, full, depth + 1)
+            else:
+                return full                   # real full-size consumer
+            if total >= full:
+                return full
+        return min(total, full)
+
+    out = {}
+    for name, (rtype, op, _) in tab.items():
+        if op != "parameter":
+            continue
+        pm = [l for l in fused_lines if _PARAM_RE.match(l)
+              and _PARAM_RE.match(l).group(1) == name]
+        idx = int(_PARAM_RE.match(pm[0]).group(3)) if pm else None
+        if idx is None:
+            continue
+        full = _type_bytes(rtype)
+        out[idx] = read_cost(name, full)
+    return out
+
+
+def _fusion_write_bytes(fused_lines, full_rbytes: float) -> float:
+    """Bytes a fusion writes to HBM: the update-region size when the
+    root is (transparently wrapped) dynamic-update-slice — the rest of
+    the buffer aliases — else the result size."""
+    tab, root = _fusion_table(fused_lines)
+    if root is None:
+        return full_rbytes
+
+    def unwrap(name, depth=0):
+        if depth > 8 or name not in tab:
+            return name
+        rtype, op, rest = tab[name]
+        if op in _TRANSPARENT:
+            ops_ = _OPERAND_RE.findall(rest)
+            if len(ops_) == 1:
+                return unwrap(ops_[0], depth + 1)
+        return name
+
+    def write_of(name):
+        name = unwrap(name)
+        if name not in tab:
+            return None
+        rtype, op, rest = tab[name]
+        if op == "dynamic-update-slice":
+            ops_ = _OPERAND_RE.findall(rest)
+            if len(ops_) > 1:
+                upd = unwrap(ops_[1])
+                if upd in tab:
+                    b = _type_bytes(tab[upd][0])
+                    if b:
+                        return 2.0 * b        # read-modify-write region
+        return _type_bytes(rtype)
+
+    rtype, op, rest = tab[root]
+    if op == "tuple":
+        parts = [write_of(o) for o in _OPERAND_RE.findall(rest)]
+        parts = [p for p in parts if p]
+        if parts:
+            return float(sum(parts))
+        return full_rbytes
+    w = write_of(root)
+    return float(w) if w else full_rbytes
+
+
+class _Stats:
+    __slots__ = ("flops", "bytes", "coll")
+
+    def __init__(self):
+        self.flops = 0.0
+        self.bytes = 0.0
+        self.coll = defaultdict(float)
+
+    def add(self, other: "_Stats", scale: float = 1.0):
+        self.flops += other.flops * scale
+        self.bytes += other.bytes * scale
+        for k, v in other.coll.items():
+            self.coll[k] += v * scale
+
+
+def module_stats(hlo_text: str) -> dict:
+    """Whole-module per-device stats with while-trip multiplication."""
+    comps = _split_computations(hlo_text)
+    memo: Dict[str, _Stats] = {}
+    notes = {"unknown_trip_whiles": 0}
+
+    def symtab(lines) -> dict:
+        tab = {}
+        for line in lines:
+            m = _OP_RE.match(line)
+            if m:
+                tab[m.group(1)] = m.group(2)
+        # parameters in the computation signature
+        for line in lines[:1]:
+            for om in re.finditer(r"([\w\[\],{}]+)\s+%?([\w.\-]+)(?=[,)])", line):
+                pass
+        return tab
+
+    def walk(name: str) -> _Stats:
+        if name in memo:
+            return memo[name]
+        st = _Stats()
+        memo[name] = st
+        lines = comps.get(name, ())
+        tab = symtab(lines)
+
+        for line in lines[1:] if lines else ():
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            _, rtype, op = m.groups()
+            rest = line[m.end():]
+            rbytes = _type_bytes(rtype)
+            relems = sum(_nelems(s) for _, s in _dims(rtype))
+
+            if op == "while":
+                bm = _BODY_RE.search(line)
+                cm = _COND_RE.search(line)
+                if not bm:
+                    continue
+                body = walk(bm.group(1))
+                cond = walk(cm.group(1)) if cm else _Stats()
+                tm = _TRIP_RE.search(line)
+                trips = int(tm.group(1)) if tm else None
+                if trips is None and cm:
+                    trips = _trip_count_from_cond(comps.get(cm.group(1), ()))
+                if trips is None:
+                    trips = 1
+                    if body.flops or body.bytes or body.coll:
+                        notes["unknown_trip_whiles"] += 1
+                st.add(body, trips)
+                st.add(cond, trips)
+                continue
+
+            if op in ("call", "conditional"):
+                cm = _CALLS_RE.search(line)
+                if cm:
+                    st.add(walk(cm.group(1)))
+                continue
+
+            if op == "fusion":
+                # flops: recurse (dots/elementwise inside); bytes: call
+                # site, but an operand whose in-fusion parameter is only
+                # consumed by slice/gather ops contributes the SLICE
+                # bytes, not the whole buffer (loop bodies slice their
+                # stacked inputs — counting full operands would multiply
+                # whole-tensor reads by the trip count).
+                cm = _CALLS_RE.search(line)
+                fused_lines = comps.get(cm.group(1), ()) if cm else ()
+                if cm:
+                    st.flops += walk(cm.group(1)).flops
+                operands = _OPERAND_RE.findall(rest)
+                # a DUS-rooted fusion writes only the update region (the
+                # buffer aliases in place); count the update bytes, not
+                # the whole buffer
+                st.bytes += _fusion_write_bytes(fused_lines, rbytes)
+                param_cost = _param_read_costs(fused_lines)
+                for i, o in enumerate(operands):
+                    t = tab.get(o)
+                    if not t:
+                        continue
+                    full = _type_bytes(t)
+                    st.bytes += min(param_cost.get(i, full), full)
+                continue
+
+            # ---- collectives ----
+            if op in _COLLECTIVES:
+                G = _group_size(line)
+                if G > 1:
+                    if op == "reduce-scatter":
+                        operands = [tab.get(o) for o in
+                                    _OPERAND_RE.findall(rest)]
+                        obytes = sum(_type_bytes(t) for t in operands if t)
+                        vol = (obytes or rbytes * G) * (G - 1) / G
+                    elif op == "all-gather":
+                        vol = rbytes * (G - 1) / G
+                    elif op == "all-reduce":
+                        vol = 2.0 * rbytes * (G - 1) / G
+                    elif op == "all-to-all":
+                        vol = rbytes * (G - 1) / G
+                    else:   # collective-permute
+                        vol = float(rbytes)
+                    st.coll[op] += vol
+                st.bytes += rbytes
+                continue
+
+            # ---- flops ----
+            if op == "dot":
+                cm = _CONTRACT_RE.search(line)
+                contract = 1
+                if cm:
+                    idxs = [int(i) for i in cm.group(1).split(",") if i]
+                    ops = _OPERAND_RE.findall(rest)
+                    # inline-typed operand (unoptimized HLO) or symtab
+                    lhs_t = None
+                    inline = _dims(rest.split(",")[0])
+                    if inline:
+                        lhs_t = rest.split(",")[0]
+                    elif ops and ops[0] in tab:
+                        lhs_t = tab[ops[0]]
+                    if lhs_t:
+                        dims = _dims(lhs_t)
+                        if dims:
+                            shape = dims[0][1]
+                            for i in idxs:
+                                if i < len(shape):
+                                    contract *= shape[i]
+                st.flops += 2.0 * relems * contract
+            elif op == "convolution":
+                ops = _OPERAND_RE.findall(rest)
+                rhs_t = tab.get(ops[1]) if len(ops) > 1 else None
+                if rhs_t:
+                    kd = _dims(rhs_t)
+                    if kd:
+                        kshape = kd[0][1]
+                        out_f = 1
+                        dl = _DIMLBL_RE.search(line)
+                        if dl and "o" in dl.group(2):
+                            out_f = kshape[dl.group(2).index("o")]
+                        st.flops += 2.0 * relems * _nelems(kshape) / max(out_f, 1)
+            elif op in _ELEMWISE_1:
+                st.flops += relems
+            elif op in _ELEMWISE_6:
+                st.flops += 6.0 * relems
+            elif op in _REDUCE_OPS:
+                st.flops += relems  # ~1 op per output elem per reduced elem is
+                                    # closer, but reduces are bandwidth-bound
+
+            # ---- bytes ----
+            if op in _SLICE_OPS:
+                if op in ("dynamic-update-slice", "scatter"):
+                    # read+write the update region: 2x the update operand
+                    # (second operand), plus nothing for the aliased rest
+                    ops_ = _OPERAND_RE.findall(rest)
+                    upd = tab.get(ops_[1]) if len(ops_) > 1 else None
+                    st.bytes += 3 * _type_bytes(upd) if upd else rbytes
+                else:
+                    st.bytes += 2 * rbytes       # read slice + write result
+            elif op not in _SKIP_BYTES:
+                operands = [tab.get(o) for o in _OPERAND_RE.findall(rest)]
+                st.bytes += rbytes + sum(_type_bytes(t) for t in operands if t)
+        return st
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:
+        # fallback: largest computation
+        total = _Stats()
+        for name in comps:
+            total.add(walk(name))
+    else:
+        total = walk(entry)
+
+    coll = dict(total.coll)
+    coll["total"] = sum(total.coll.values())
+    return {"flops": total.flops, "bytes": total.bytes,
+            "collectives": coll, **notes}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Back-compat wrapper: collective traffic only."""
+    s = module_stats(hlo_text)
+    out = dict(s["collectives"])
+    out["unknown_trip_whiles"] = s["unknown_trip_whiles"]
+    return out

@@ -1,0 +1,83 @@
+"""Roofline-term derivation from dry-run compile artifacts.
+
+Hardware model: TPU v5e —
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s per ICI link.
+
+All inputs are PER-DEVICE quantities: ``compiled.cost_analysis()`` of an
+SPMD executable describes the per-device partitioned module, and
+``hlo_stats.collective_bytes`` sums per-device ring-algorithm traffic
+(post-partitioning HLO shapes are per-device).  So
+
+  compute term    = flops_per_device / PEAK_FLOPS
+  memory term     = bytes_per_device / HBM_BW
+  collective term = coll_bytes_per_device / LINK_BW
+
+and the dominant term estimates the step time lower bound on that mesh.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # B/s per chip
+LINK_BW = 50e9             # B/s per ICI link (one link assumed serial)
+
+_BYTES = {"bfloat16": 2, "float32": 4, "float16": 2}
+
+
+def active_params(cfg) -> int:
+    """Parameter count that touches every token (MoE: shared + top-k of
+    the routed experts + non-expert weights)."""
+    from ..models import transformer as TF
+    from ..models.params import count_params, is_param_def
+    import jax
+
+    defs = TF.param_defs(cfg)
+    total = count_params(defs)
+    if not cfg.is_moe:
+        return total
+    # routed-expert leaves carry an "experts" logical axis
+    moe = cfg.moe
+    routed = sum(
+        int(np.prod(d.shape))
+        for d in jax.tree.leaves(defs, is_leaf=is_param_def)
+        if is_param_def(d) and "experts" in d.axes)
+    active_routed = routed * moe.top_k / max(moe.n_experts, 1)
+    return int(total - routed + active_routed)
+
+
+def model_flops(cfg, shape) -> float:
+    """6·N_active·T for training (fwd+bwd), 2·N_active·T forward-only."""
+    n = active_params(cfg)
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def derive_terms(flops_per_dev: float, bytes_per_dev: float,
+                 coll_bytes_per_dev: float, chips: int,
+                 model_fl: float) -> dict:
+    compute_s = flops_per_dev / PEAK_FLOPS
+    memory_s = bytes_per_dev / HBM_BW
+    coll_s = coll_bytes_per_dev / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dom = max(terms, key=terms.get)
+    total_flops = flops_per_dev * chips
+    return {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "bound_s": terms[dom],
+        "model_flops": model_fl,
+        "hlo_flops_total": total_flops,
+        "useful_ratio": (model_fl / total_flops) if total_flops else 0.0,
+        # fraction of roofline: useful model flops per second at the bound
+        # vs the mesh's peak.
+        "mfu_bound": (model_fl / max(terms[dom], 1e-30)) /
+                     (chips * PEAK_FLOPS) if terms[dom] else 0.0,
+    }

@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape x mesh)
+combination — the dry-run lowers against these; nothing is allocated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import InputShape, ModelConfig
+from ..models import transformer as TF
+from .mesh import n_workers, worker_axes
+
+
+def key_struct():
+    return jax.eval_shape(lambda: jax.random.key(0))
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec or P()))
+
+
+def variant_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """long_500k on full-attention archs selects the sliding-window
+    variant (window=8192) so decode state is O(window); MLA/SSM/hybrid
+    archs keep their native sub-quadratic-state path (DESIGN.md §4)."""
+    import dataclasses
+    a = cfg.attention
+    if (shape.name == "long_500k" and a.kind == "gqa" and a.window == 0):
+        return dataclasses.replace(
+            cfg, attention=dataclasses.replace(a, window=8192))
+    return cfg
+
+
+def train_inputs(cfg: ModelConfig, shape: InputShape, mesh) -> dict:
+    """Batch pytree [m, b, ...] for the worker-sharded train step."""
+    m = n_workers(mesh)
+    assert shape.global_batch % m == 0, (shape.global_batch, m)
+    b = shape.global_batch // m
+    waxes = worker_axes(mesh)
+    wspec = tuple(waxes) if len(waxes) > 1 else waxes[0]
+    s_tok = shape.seq_len - cfg.n_prefix_tokens
+    out = {"tokens": _sds((m, b, s_tok), jnp.int32, mesh, P(wspec))}
+    if cfg.n_prefix_tokens:
+        out["prefix_embed"] = _sds((m, b, cfg.n_prefix_tokens, cfg.d_model),
+                                   jnp.bfloat16, mesh, P(wspec))
+    return out
+
+
+def prefill_inputs(cfg: ModelConfig, shape: InputShape, mesh) -> dict:
+    waxes = worker_axes(mesh)
+    wspec = tuple(waxes) if len(waxes) > 1 else waxes[0]
+    B = shape.global_batch
+    s_tok = shape.seq_len - cfg.n_prefix_tokens
+    bspec = P(wspec) if B % n_workers(mesh) == 0 and B >= n_workers(mesh) else P()
+    out = {"tokens": _sds((B, s_tok), jnp.int32, mesh, bspec)}
+    if cfg.n_prefix_tokens:
+        out["prefix_embed"] = _sds((B, cfg.n_prefix_tokens, cfg.d_model),
+                                   jnp.bfloat16, mesh, bspec)
+    return out
+
+
+def decode_inputs(cfg: ModelConfig, shape: InputShape, mesh, cache_spec_tree):
+    """(cache structs, token struct, pos).  Cache shardings follow
+    serving.cache_specs."""
+    B = shape.global_batch
+    defs = TF.cache_defs(cfg, B, shape.seq_len)
+    is_def = lambda x: isinstance(x, tuple) and isinstance(x[0], tuple)
+    cache = jax.tree.map(
+        lambda sd, sp: _sds(sd[0], jnp.bfloat16, mesh, sp),
+        defs, cache_spec_tree, is_leaf=is_def)
+    waxes = worker_axes(mesh)
+    wspec = tuple(waxes) if len(waxes) > 1 else waxes[0]
+    bspec = P(wspec) if B % n_workers(mesh) == 0 and B >= n_workers(mesh) else P()
+    token = _sds((B, 1), jnp.int32, mesh, bspec)
+    pos = jnp.int32(shape.seq_len - 1)
+    return cache, token, pos

@@ -1,0 +1,124 @@
+"""Real training driver: distributed BrSGD on an actual device mesh.
+
+On the CPU container this runs reduced configs on a small host-device
+mesh (set JAX_NUM_CPU_DEVICES or XLA_FLAGS before launch to get more
+than one device); on a TPU pod the same driver runs the full config on
+``make_production_mesh()``.
+
+  PYTHONPATH=src JAX_NUM_CPU_DEVICES=8 python -m repro.launch.train \
+      --arch qwen3-0.6b --reduced --steps 20 --attack gaussian --alpha 0.25
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import numpy as np
+
+
+def build_mesh(spec: str | None):
+    import jax
+    from .mesh import make_mesh, make_production_mesh
+    n = len(jax.devices())
+    if spec == "production":
+        return make_production_mesh()
+    if spec:
+        shape = tuple(int(x) for x in spec.split("x"))
+        return make_mesh(shape, ("data", "model")[:len(shape)] if len(shape) <= 2
+                         else ("pod", "data", "model"))
+    # default: as much data-parallel as the host offers
+    model = 2 if n % 2 == 0 and n > 2 else 1
+    return make_mesh((n // model, model), ("data", "model"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch-per-worker", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mesh", default=None, help="e.g. 4x2, or 'production'")
+    ap.add_argument("--aggregator", default="brsgd",
+                    choices=["brsgd", "mean", "median"])
+    ap.add_argument("--attack", default="none")
+    ap.add_argument("--alpha", type=float, default=0.0)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--agg-layout", default="auto")
+    ap.add_argument("--agg-scope", default="auto")
+    ap.add_argument("--remat", default="none")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    import jax
+    import jax.numpy as jnp
+
+    from ..checkpoint import ckpt
+    from ..configs import ByzantineConfig, TrainConfig, get_config
+    from ..data.pipeline import LMWorkerPipeline
+    from ..launch.mesh import n_workers
+    from ..models import params as PM
+    from ..models import transformer as TF
+    from ..training.step import build_train_step
+
+    mesh = build_mesh(args.mesh)
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    bcfg = ByzantineConfig(aggregator=args.aggregator, attack=args.attack,
+                           alpha=args.alpha)
+    tcfg = TrainConfig(model=cfg, byzantine=bcfg, optimizer=args.optimizer,
+                       lr=args.lr, agg_layout=args.agg_layout,
+                       agg_scope=args.agg_scope, remat=args.remat)
+
+    m = n_workers(mesh)
+    print(f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} workers={m} "
+          f"arch={cfg.name} params={PM.count_params(TF.param_defs(cfg)):,}")
+
+    bundle = build_train_step(tcfg, mesh)
+    psh, osh, bsh = bundle.shardings(mesh)
+    key = jax.random.PRNGKey(tcfg.seed)
+    params = jax.device_put(PM.init_params(TF.param_defs(cfg), key), psh)
+    if args.optimizer == "adamw":
+        z = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        opt_state = {"m": z(), "v": z()}
+    elif args.optimizer == "momentum":
+        opt_state = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    else:
+        opt_state = ()
+
+    pipe = LMWorkerPipeline(cfg, m, args.batch_per_worker, args.seq,
+                            seed=tcfg.seed, byz=bcfg)
+    t_start = time.time()
+    history = []
+    with mesh:
+        for step in range(args.steps):
+            batch = {k: jax.device_put(jnp.asarray(v), bsh[k])
+                     for k, v in pipe.batch(step).items()}
+            params, opt_state, met = bundle.step_fn(
+                params, opt_state, batch, jnp.int32(step),
+                jax.random.fold_in(key, step))
+            if step % args.log_every == 0 or step == args.steps - 1:
+                met = {k: float(v) for k, v in met.items()}
+                history.append({"step": step, **met})
+                print(f"step {step:4d} loss={met['loss']:.4f} "
+                      f"gnorm={met['gnorm']:.3f} selected={met['n_selected']:.0f}/{m}",
+                      flush=True)
+
+    dt = time.time() - t_start
+    tok = args.steps * m * args.batch_per_worker * args.seq
+    print(f"done: {args.steps} steps, {dt:.1f}s, {tok/dt:.0f} tok/s")
+    if args.ckpt_dir:
+        p = pathlib.Path(args.ckpt_dir)
+        ckpt.save(str(p), params, step=args.steps)
+        (p / "history.json").write_text(json.dumps(history, indent=1))
+        print(f"checkpoint -> {p}")
+    return history
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .params import (ParamDef, abstract_params, count_params, init_params,
+                     pspec_tree, shard_hint, shardings_tree, tree_map_defs)
+from .transformer import (cache_defs, decode_step, forward, init_cache,
+                          loss_fn, param_defs, segments)
+from .lenet import lenet_defs, lenet_forward, lenet_loss, lenet_accuracy

@@ -1,0 +1,63 @@
+"""LeNet-5 (LeCun et al., 1998) in pure JAX — the paper's experiment model.
+
+conv(6,5x5) -> avgpool -> conv(16,5x5) -> avgpool -> fc120 -> fc84 -> fc10
+on 28x28 single-channel images (FashionMNIST geometry).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.lenet_fmnist import LeNetConfig
+from .params import ParamDef
+
+
+def lenet_defs(cfg: LeNetConfig) -> dict:
+    c1, c2 = cfg.conv_channels
+    f1, f2 = cfg.fc_dims
+    # 28 -> conv5 'SAME' 28 -> pool 14 -> conv5 'VALID' 10 -> pool 5
+    flat = c2 * 5 * 5
+    return {
+        "conv1_w": ParamDef((5, 5, 1, c1), (None, None, None, None)),
+        "conv1_b": ParamDef((c1,), (None,), init="zeros"),
+        "conv2_w": ParamDef((5, 5, c1, c2), (None, None, None, None)),
+        "conv2_b": ParamDef((c2,), (None,), init="zeros"),
+        "fc1_w": ParamDef((flat, f1), (None, None)),
+        "fc1_b": ParamDef((f1,), (None,), init="zeros"),
+        "fc2_w": ParamDef((f1, f2), (None, None)),
+        "fc2_b": ParamDef((f2,), (None,), init="zeros"),
+        "out_w": ParamDef((f2, cfg.n_classes), (None, None)),
+        "out_b": ParamDef((cfg.n_classes,), (None,), init="zeros"),
+    }
+
+
+def _pool(x):
+    return jax.lax.reduce_window(x, 0.0, jax.lax.add, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID") / 4.0
+
+
+def lenet_forward(p, images):
+    """images [B,28,28,1] -> logits [B,10]."""
+    x = jax.lax.conv_general_dilated(
+        images, p["conv1_w"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["conv1_b"]
+    x = _pool(jnp.tanh(x))
+    x = jax.lax.conv_general_dilated(
+        x, p["conv2_w"], (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + p["conv2_b"]
+    x = _pool(jnp.tanh(x))
+    x = x.reshape(x.shape[0], -1)
+    x = jnp.tanh(x @ p["fc1_w"] + p["fc1_b"])
+    x = jnp.tanh(x @ p["fc2_w"] + p["fc2_b"])
+    return x @ p["out_w"] + p["out_b"]
+
+
+def lenet_loss(p, batch):
+    logits = lenet_forward(p, batch["images"])
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    ll = jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)
+    return -jnp.mean(ll)
+
+
+def lenet_accuracy(p, images, labels):
+    return jnp.mean(jnp.argmax(lenet_forward(p, images), -1) == labels)

@@ -1,0 +1,152 @@
+"""Mamba2 (SSD) block — chunked state-space dual form.
+
+Follows "Transformers are SSMs" (Dao & Gu, 2024): within-chunk quadratic
+form + inter-chunk recurrence carried with ``lax.scan``.  Single group
+(n_groups=1) B/C, per-head scalar decay A, depthwise causal conv over
+the (x,B,C) projection, gated RMSNorm output.
+
+Decode keeps O(1) state: conv ring (width-1 last inputs) + SSM state
+[B,H,N,P] — this is what makes zamba2 run ``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SSMSpec
+from .layers import rms_norm
+from .params import ParamDef
+
+
+def dims(d_model: int, s: SSMSpec):
+    d_inner = s.expand * d_model
+    n_heads = s.n_heads or d_inner // s.head_dim
+    return d_inner, n_heads
+
+
+def mamba2_defs(d_model: int, s: SSMSpec) -> dict:
+    di, H = dims(d_model, s)
+    N, W = s.state_dim, s.conv_width
+    return {
+        "w_z": ParamDef((d_model, di), ("embed", "inner")),
+        "w_x": ParamDef((d_model, di), ("embed", "inner")),
+        "w_B": ParamDef((d_model, N), ("embed", "state")),
+        "w_C": ParamDef((d_model, N), ("embed", "state")),
+        "w_dt": ParamDef((d_model, H), ("embed", "heads")),
+        "conv_k": ParamDef((W, di + 2 * N), ("conv", None), init="normal", scale=0.5),
+        "conv_b": ParamDef((di + 2 * N,), (None,), init="zeros"),
+        "dt_bias": ParamDef((H,), (None,), init="zeros"),
+        "A_log": ParamDef((H,), (None,), init="zeros"),
+        "D_skip": ParamDef((H,), (None,), init="ones"),
+        "gamma": ParamDef((di,), (None,), init="ones"),
+        "w_out": ParamDef((di, d_model), ("inner", "embed")),
+    }
+
+
+def _causal_conv(xbc, kern, bias, state=None):
+    """Depthwise causal conv.  xbc: [B,S,C]; kern: [W,C].
+
+    state: [B,W-1,C] previous inputs (decode) or None (pad with zeros).
+    Returns (out [B,S,C], new_state [B,W-1,C])."""
+    W = kern.shape[0]
+    if state is None:
+        state = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[-1]), xbc.dtype)
+    ext = jnp.concatenate([state, xbc], axis=1)              # [B,S+W-1,C]
+    out = sum(ext[:, i:i + xbc.shape[1]] * kern[i] for i in range(W))
+    new_state = ext[:, -(W - 1):]
+    return out + bias, new_state
+
+
+def _ssd_chunked(xh, dt, A, Bc, Cc, chunk: int):
+    """Chunked SSD scan.
+
+    xh [B,S,H,P], dt [B,S,H], A [H] (negative), Bc/Cc [B,S,N].
+    Returns y [B,S,H,P], final_state [B,H,N,P].
+    """
+    Bsz, S, H, Pd = xh.shape
+    N = Bc.shape[-1]
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+    T = xh.shape[1]
+    C = T // Q
+    f32 = jnp.float32
+    xh = xh.reshape(Bsz, C, Q, H, Pd).astype(f32)
+    dt = dt.reshape(Bsz, C, Q, H).astype(f32)
+    Bc = Bc.reshape(Bsz, C, Q, N).astype(f32)
+    Cc = Cc.reshape(Bsz, C, Q, N).astype(f32)
+    dA = dt * A.astype(f32)                                  # [B,C,Q,H] (<=0)
+    cum = jnp.cumsum(dA, axis=2)                             # within-chunk
+    dtx = xh * dt[..., None]                                 # dt-weighted input
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for j<=i
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # [B,C,Q,Q,H]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    G = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                # [B,C,Q,Q]
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", G, L, dtx)
+    # chunk-local end states: S_c = sum_j exp(cum_last - cum_j) B_j dtx_j^T
+    dec_to_end = jnp.exp(cum[:, :, -1:, :] - cum)            # [B,C,Q,H]
+    S_loc = jnp.einsum("bcjn,bcjh,bcjhp->bchnp", Bc, dec_to_end, dtx)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # [B,C,H]
+
+    def step(S_prev, inp):
+        S_l, dec = inp                                       # [B,H,N,P], [B,H]
+        S_new = S_prev * dec[:, :, None, None] + S_l
+        return S_new, S_prev
+
+    S0 = jnp.zeros((Bsz, H, N, Pd), f32)
+    S_final, S_prevs = jax.lax.scan(
+        step, S0, (S_loc.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    S_prevs = S_prevs.swapaxes(0, 1)                         # [B,C,H,N,P]
+    # inter-chunk contribution: y_i += exp(cum_i) C_i . S_prev
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", Cc, jnp.exp(cum), S_prevs)
+    y = (y_intra + y_inter).reshape(Bsz, T, H, Pd)[:, :S]
+    return y, S_final
+
+
+def mamba2_forward(p, s: SSMSpec, x, conv_state=None, ssm_state=None):
+    """Full-sequence forward.  x: [B,S,D].  Returns (out, (conv_st, ssm_st))."""
+    di, H = dims(x.shape[-1], s)
+    N = s.state_dim
+    Pd = di // H
+    z = x @ p["w_z"]
+    xbc = jnp.concatenate([x @ p["w_x"], x @ p["w_B"], x @ p["w_C"]], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_k"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xc, Bc, Cc = jnp.split(xbc, [di, di + N], axis=-1)
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xc.reshape(*xc.shape[:2], H, Pd)
+    y, ssm_state = _ssd_chunked(xh, dt, A, Bc, Cc, s.chunk)
+    y = y + p["D_skip"].astype(jnp.float32)[:, None] * xh.astype(jnp.float32)
+    y = y.reshape(*xc.shape[:2], di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gamma"])
+    return y @ p["w_out"], (conv_state, ssm_state)
+
+
+def mamba2_decode(p, s: SSMSpec, x, conv_state, ssm_state):
+    """Single-token decode.  x: [B,1,D]; O(1) state update."""
+    di, H = dims(x.shape[-1], s)
+    N = s.state_dim
+    Pd = di // H
+    z = x @ p["w_z"]
+    xbc = jnp.concatenate([x @ p["w_x"], x @ p["w_B"], x @ p["w_C"]], axis=-1)
+    xbc, conv_state = _causal_conv(xbc, p["conv_k"], p["conv_b"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xc, Bc, Cc = jnp.split(xbc, [di, di + N], axis=-1)
+    dt = jax.nn.softplus((x @ p["w_dt"]).astype(jnp.float32) + p["dt_bias"])  # [B,1,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xc.reshape(-1, H, Pd).astype(jnp.float32)           # [B,H,P]
+    dt1 = dt[:, 0]                                           # [B,H]
+    dA = jnp.exp(dt1 * A)                                    # [B,H]
+    dBx = jnp.einsum("bn,bh,bhp->bhnp", Bc[:, 0].astype(jnp.float32), dt1, xh)
+    ssm_state = ssm_state * dA[:, :, None, None] + dBx
+    y = jnp.einsum("bn,bhnp->bhp", Cc[:, 0].astype(jnp.float32), ssm_state)
+    y = y + p["D_skip"].astype(jnp.float32)[:, None] * xh
+    y = y.reshape(-1, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["gamma"])
+    return y @ p["w_out"], (conv_state, ssm_state)

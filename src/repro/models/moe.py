@@ -1,0 +1,150 @@
+"""Mixture-of-Experts FFN with capacity-based expert-parallel dispatch.
+
+TPU mapping: expert weights are sharded over the ``model`` mesh axis;
+activations are replicated across ``model`` (tensor-parallel layout), so
+"dispatch" is a local gather of each shard's experts' tokens — the only
+collective is the output reduction, which XLA emits as an all-reduce
+over ``model``.  This adapts the paper-agnostic GShard capacity design
+to the mesh used by this framework (see DESIGN.md §2/§6).
+
+Routing is token-choice top-k with per-expert capacity
+``C_e = ceil(T * k / E * capacity_factor)``; over-capacity assignments
+are dropped (standard GShard semantics).  Setting
+``capacity_factor >= E / k`` makes dispatch lossless — tests use that to
+compare against the dense oracle in ``ref_dense_moe``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import ModelConfig, MoESpec
+from .layers import activate
+from .params import ParamDef, shard_hint
+
+
+def moe_defs(d_model: int, m: MoESpec) -> dict:
+    e, f = m.n_experts, m.d_ff_expert
+    d = {
+        "router": ParamDef((d_model, e), ("embed", None)),
+        "w_in": ParamDef((e, d_model, f), ("experts", "embed", "ff")),
+        "w_gate": ParamDef((e, d_model, f), ("experts", "embed", "ff")),
+        "w_out": ParamDef((e, f, d_model), ("experts", "ff", "embed")),
+    }
+    if m.n_shared:
+        d["shared_in"] = ParamDef((d_model, m.n_shared * f), ("embed", "ff"))
+        d["shared_gate"] = ParamDef((d_model, m.n_shared * f), ("embed", "ff"))
+        d["shared_out"] = ParamDef((m.n_shared * f, d_model), ("ff", "embed"))
+    return d
+
+
+def capacity(n_tokens: int, m: MoESpec) -> int:
+    c = math.ceil(n_tokens * m.top_k * m.capacity_factor / m.n_experts)
+    return max(4, int(c))
+
+
+def route(router_w, x, m: MoESpec):
+    """Returns (weights [T,k], expert ids [T,k], aux losses)."""
+    logits = (x.astype(jnp.float32) @ router_w.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # [T,E]
+    w, ids = jax.lax.top_k(probs, m.top_k)                   # [T,k]
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # aux: load-balance (Switch) + router z-loss
+    T = x.shape[0]
+    me = jnp.mean(probs, axis=0)                             # mean prob per expert
+    ce = jnp.zeros((m.n_experts,)).at[ids.reshape(-1)].add(1.0) / (T * m.top_k)
+    aux = m.n_experts * jnp.sum(me * ce) * m.aux_loss
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2) * m.router_zloss
+    return w, ids, aux + z
+
+
+def dispatch_indices(ids, w, m: MoESpec, cap: int):
+    """GShard-style position-in-expert computation.
+
+    ids/w: [T, k].  Returns token index matrix [E, C], combine weights
+    [E, C], validity [E, C], and the inverse map slot_of [T, k] into the
+    flattened [E*C] slot space (dropped assignments point at slot E*C —
+    a zero pad row on the combine side).
+    """
+    T, k = ids.shape
+    E = m.n_experts
+    flat_ids = ids.reshape(-1)                               # [T*k]
+    flat_w = w.reshape(-1)
+    # position of each assignment within its expert (arrival order)
+    onehot = jax.nn.one_hot(flat_ids, E, dtype=jnp.int32)    # [T*k, E]
+    pos_in_e = jnp.cumsum(onehot, axis=0) * onehot           # 1-based
+    pos = jnp.sum(pos_in_e, axis=-1) - 1                     # [T*k]
+    keep = pos < cap
+    # scatter into [E, C]
+    tok_of = jnp.tile(jnp.arange(T)[:, None], (1, k)).reshape(-1)
+    e_idx = jnp.where(keep, flat_ids, E)                     # drop -> row E
+    p_idx = jnp.where(keep, pos, 0)
+    tok_mat = jnp.zeros((E + 1, cap), jnp.int32).at[e_idx, p_idx].set(tok_of, mode="drop")
+    w_mat = jnp.zeros((E + 1, cap), flat_w.dtype).at[e_idx, p_idx].set(flat_w, mode="drop")
+    val = jnp.zeros((E + 1, cap), bool).at[e_idx, p_idx].set(keep, mode="drop")
+    slot_of = jnp.where(keep, flat_ids * cap + pos, E * cap).reshape(T, k)
+    return tok_mat[:E], w_mat[:E], val[:E], slot_of
+
+
+def moe_ffn(p, x, m: MoESpec, activation: str = "silu",
+            expert_spec: Tuple = ("model",)) -> Tuple[jax.Array, jax.Array]:
+    """x: [T, d] (already flattened tokens).  Returns (out [T,d], aux)."""
+    T, d = x.shape
+    w, ids, aux = route(p["router"], x, m)
+    cap = capacity(T, m)
+    tok, cw, val, slot_of = dispatch_indices(ids, w.astype(x.dtype), m, cap)
+    # shard dispatch tensors over experts so the gather/matmul are local
+    espec = P(expert_spec[0] if len(expert_spec) == 1 else expert_spec)
+    tok = shard_hint(tok, espec)
+    # §Perf dispatch layout: token gathers with data-dependent indices
+    # cannot cross shards without SPMD falling back to masked-gather +
+    # all-reduce of the FULL result.  Reshard x to d-sharded (token dim
+    # whole) so the gather is local, then a2a the packed [E,C,d] to the
+    # expert layout.
+    xd = shard_hint(x, P(None, espec[0]))
+    xe = xd[tok]                                             # [E, C, d]
+    xe = jnp.where(val[..., None], xe, 0)
+    xe = shard_hint(xe, P(espec[0], None, None))
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_in"])
+    g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+    h = activate(g, activation) * h
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"])           # [E, C, d]
+    ye = ye * jnp.where(val, cw, 0)[..., None].astype(ye.dtype)
+    # combine: each token GATHERS its k slots from the (padded) expert
+    # outputs.  §Perf: the natural scatter-add combine is unshardable
+    # under SPMD (XLA all-gathers the 8GB token tensor per layer).  The
+    # gather side is made LOCAL by resharding the [E*C+1, d] expert
+    # outputs to d-sharded (slot dim whole) — one a2a — after which the
+    # backward is a local scatter-add on that small tensor.
+    ye_flat = jnp.concatenate(
+        [ye.reshape(ye.shape[0] * cap, d),
+         jnp.zeros((1, d), ye.dtype)], axis=0)               # slot E*C = 0
+    ye_flat = shard_hint(ye_flat, P(None, espec[0]))
+    out = jnp.sum(ye_flat[slot_of], axis=1)                  # [T,k,d/s]->[T,d/s]
+    out = shard_hint(out, P(espec[0], None))                 # back to seq-shard
+    if m.n_shared:
+        hs = x @ p["shared_in"]
+        hs = activate(x @ p["shared_gate"], activation) * hs
+        out = out + hs @ p["shared_out"]
+    return out, aux
+
+
+def ref_dense_moe(p, x, m: MoESpec, activation: str = "silu"):
+    """Oracle: computes every expert on every token, combines with router
+    weights.  O(T·E·d·f) — tests only."""
+    w, ids, _ = route(p["router"], x, m)
+    h = jnp.einsum("td,edf->tef", x, p["w_in"])
+    g = jnp.einsum("td,edf->tef", x, p["w_gate"])
+    y = jnp.einsum("tef,efd->ted", activate(g, activation) * h, p["w_out"])
+    combine = jnp.zeros((x.shape[0], m.n_experts), y.dtype)
+    combine = combine.at[jnp.arange(x.shape[0])[:, None], ids].add(w.astype(y.dtype))
+    out = jnp.einsum("te,ted->td", combine, y)
+    if m.n_shared:
+        hs = x @ p["shared_in"]
+        hs = activate(x @ p["shared_gate"], activation) * hs
+        out = out + hs @ p["shared_out"]
+    return out

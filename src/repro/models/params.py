@@ -1,0 +1,159 @@
+"""Parameter definition machinery.
+
+Every model declares a pytree of ``ParamDef`` (shape + logical axes +
+init).  From one def-tree we derive:
+  * ``init_params``      — materialized arrays (smoke tests, examples)
+  * ``abstract_params``  — ShapeDtypeStruct stand-ins (dry-run, no alloc)
+  * ``pspec_tree``       — PartitionSpec per leaf, respecting mesh-axis
+                           divisibility (non-divisible dims replicate)
+
+Logical axis names used by the zoo:
+  vocab, embed (d_model), ff, heads, kv, hd, qlora, kvlora, experts,
+  layers / units / sub (stack axes, never sharded), state, conv, inner,
+  classes, None (replicated).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+class ParamDef(NamedTuple):
+    shape: tuple
+    axes: tuple                 # logical axis name (or None) per dim
+    init: str = "normal"        # normal | zeros | ones | embed | conv
+    scale: float = 1.0          # stddev multiplier for "normal"
+
+    def __repr__(self):  # keep pytree prints short
+        return f"ParamDef{self.shape}"
+
+
+# Logical axis -> preferred mesh axes, in priority order.  "fsdp" is the
+# worker/data axes used for fully-sharded params in blocked mode.
+TENSOR_RULES = {
+    "vocab": "model",
+    "ff": "model",
+    "heads": "model",
+    "kv": "model",
+    "experts": "model",
+    "inner": "model",           # mamba2 d_inner
+}
+# Secondary (FSDP) eligible axes: large replicated dims we may shard over
+# the worker axes when fsdp=True.
+FSDP_ELIGIBLE = ("embed", "ff_in", "vocab", "ff", "inner")
+STACK_AXES = ("layers", "units", "sub")
+
+
+def is_param_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn, defs):
+    return jax.tree.map(fn, defs, is_leaf=is_param_def)
+
+
+def _init_one(key, d: ParamDef, dtype):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    # fan-in scaled normal
+    fan_in = d.shape[0] if len(d.shape) == 1 else int(np.prod(d.shape[:-1])) // (
+        int(np.prod([s for s, a in zip(d.shape, d.axes) if a in STACK_AXES])) or 1)
+    fan_in = max(fan_in, 1)
+    std = d.scale / math.sqrt(fan_in)
+    return (jax.random.normal(key, d.shape) * std).astype(dtype)
+
+
+def init_params(defs, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_param_def)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [_init_one(k, d, dtype) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def abstract_params(defs, dtype=jnp.bfloat16):
+    return tree_map_defs(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_param_def)
+    return int(sum(np.prod(d.shape) for d in leaves))
+
+
+def _spec_for(d: ParamDef, mesh_shape: dict, fsdp_axes: Sequence[str] = ()) -> P:
+    """PartitionSpec for one leaf.
+
+    Primary: first dim whose logical axis maps to 'model' and divides.
+    FSDP: if ``fsdp_axes`` given, additionally shard the largest
+    remaining eligible dim over the (flattened) worker axes.
+    """
+    n_model = mesh_shape.get("model", 1)
+    entries: list = [None] * len(d.shape)
+    used_model = False
+    for i, (s, a) in enumerate(zip(d.shape, d.axes)):
+        if used_model or a is None or a in STACK_AXES or n_model <= 1:
+            continue
+        if TENSOR_RULES.get(a) == "model" and s % n_model == 0 and s >= n_model:
+            entries[i] = "model"
+            used_model = True
+    if fsdp_axes:
+        n_fsdp = int(np.prod([mesh_shape[a] for a in fsdp_axes]))
+        if n_fsdp <= 1:
+            return P(*entries)
+        # largest remaining dim that divides
+        cands = [
+            (s, i) for i, (s, a) in enumerate(zip(d.shape, d.axes))
+            if entries[i] is None and a not in STACK_AXES and a is not None
+            and s % n_fsdp == 0 and s >= n_fsdp
+        ]
+        if cands:
+            _, i = max(cands)
+            entries[i] = tuple(fsdp_axes) if len(fsdp_axes) > 1 else fsdp_axes[0]
+    return P(*entries)
+
+
+def pspec_tree(defs, mesh, fsdp: bool = False):
+    """PartitionSpec pytree for a def-tree on ``mesh``.
+
+    fsdp=True additionally shards a secondary dim over the worker axes
+    (all mesh axes except 'model').
+    """
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
+    worker_axes = tuple(a for a in mesh.axis_names if a != "model")
+    fsdp_axes = worker_axes if fsdp else ()
+    return tree_map_defs(lambda d: _spec_for(d, mesh_shape, fsdp_axes), defs)
+
+
+def shardings_tree(defs, mesh, fsdp: bool = False):
+    from jax.sharding import NamedSharding
+    specs = pspec_tree(defs, mesh, fsdp)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def shard_hint(x, spec: Optional[P]):
+    """with_sharding_constraint that no-ops when no mesh is active or the
+    spec does not divide (keeps smoke tests on 1 device trivial)."""
+    if spec is None:
+        return x
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty or not mesh.axis_names:
+            return x
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+        for dim, entry in enumerate(spec):
+            if entry is None:
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            n = int(np.prod([sizes.get(a, 1) for a in names]))
+            if any(a not in sizes for a in names) or x.shape[dim] % n != 0:
+                return x
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except Exception:
+        return x

@@ -1,0 +1,201 @@
+"""RWKV6 "Finch" block — attention-free time-mix with data-dependent
+decay (WKV6) + squared-ReLU channel-mix.
+
+Time-mix state per head: S ∈ R^{K×K}; per token
+    y_t   = r_t · (S_t + diag(u)·k_t v_tᵀ)
+    S_t+1 = diag(w_t)·S_t + k_t v_tᵀ
+with w_t = exp(-exp(base + lora(x'_t))) data-dependent per channel.
+
+Prefill/train runs the recurrence with ``lax.scan`` over time (baseline;
+a chunked parallel form is a §Perf candidate).  Decode carries
+(S, last_x_tm, last_x_cm) — O(1) state, enabling ``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import RWKVSpec
+from .layers import activate, rms_norm
+from .params import ParamDef, shard_hint
+
+# WKV runs head-parallel: the recurrence couples all of S and K within a
+# head but heads are independent — shard H over 'model' (sequence stays
+# whole).  §Perf: without this hint XLA keeps the [B,S,H,K] intermediates
+# replicated over 'model' (16x the traffic).
+_HEAD_SPEC = P(None, None, "model", None)
+# layer IO stays sequence-sharded over 'model'; the time-mix gathers the
+# bf16 activations ONCE per layer (cheap) and produces r/k/v/w locally
+# head-sharded from column-sharded weights (no f32 reshards).
+_SEQ_SPEC = P(None, "model", None)
+
+_MIX = 5  # r,k,v,w,g
+
+
+def rwkv6_defs(d_model: int, d_ff: int, r: RWKVSpec) -> dict:
+    H = d_model // r.head_dim
+    K = r.head_dim
+    return {
+        # time-mix
+        "mu": ParamDef((_MIX, d_model), (None, "embed"), init="zeros"),
+        "mix_A": ParamDef((d_model, _MIX * r.mix_lora), ("embed", None), scale=0.1),
+        "mix_B": ParamDef((_MIX, r.mix_lora, d_model), (None, None, "embed"), scale=0.1),
+        "w_r": ParamDef((d_model, d_model), ("embed", "heads")),
+        "w_k": ParamDef((d_model, d_model), ("embed", "heads")),
+        "w_v": ParamDef((d_model, d_model), ("embed", "heads")),
+        "w_g": ParamDef((d_model, d_model), ("embed", "heads")),
+        "decay_base": ParamDef((d_model,), (None,), init="zeros"),
+        "decay_A": ParamDef((d_model, r.decay_lora), ("embed", None), scale=0.1),
+        "decay_B": ParamDef((r.decay_lora, d_model), (None, "embed"), scale=0.1),
+        "bonus_u": ParamDef((H, K), (None, None), init="zeros"),
+        "ln_gamma": ParamDef((d_model,), (None,), init="ones"),
+        "w_o": ParamDef((d_model, d_model), ("heads", "embed")),
+        # channel-mix
+        "cm_mu": ParamDef((2, d_model), (None, "embed"), init="zeros"),
+        "w_ck": ParamDef((d_model, d_ff), ("embed", "ff")),
+        "w_cv": ParamDef((d_ff, d_model), ("ff", "embed")),
+        "w_cr": ParamDef((d_model, d_model), ("embed", "embed")),
+    }
+
+
+def _shift(x, last=None):
+    """x_{t-1} along seq.  last: [B,1,D] carry for decode/chunk stitch."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _ddlerp(x, xprev, mu, mix_A, mix_B):
+    """Data-dependent lerp producing the 5 mixed inputs [5,B,S,D]."""
+    diff = xprev - x
+    xx = x + diff * 0.5                                      # coarse mix for the lora input
+    lora = jnp.tanh(xx @ mix_A)                              # [B,S,5*rank]
+    lora = lora.reshape(*lora.shape[:2], _MIX, -1)           # [B,S,5,rank]
+    dyn = jnp.einsum("bsmr,mrd->mbsd", lora, mix_B)          # [5,B,S,D]
+    mix = mu[:, None, None, :] + dyn                         # [5,B,S,D]
+    return x[None] + diff[None] * mix
+
+
+def _wkv_scan(r, k, v, w, u, S0):
+    """r,k,v: [B,S,H,K]; w: [B,S,H,K] decay in (0,1); u: [H,K].
+    Returns y [B,S,H,K], final state [B,H,K,K]."""
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp                                 # [B,H,K]
+        kv = kt[..., :, None] * vt[..., None, :]             # [B,H,K,K]
+        y = jnp.einsum("bhk,bhkj->bhj", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    xs = tuple(t.swapaxes(0, 1) for t in (r, k, v, w))       # [S,B,H,K]
+    S_final, ys = jax.lax.scan(step, S0, xs)
+    return ys.swapaxes(0, 1), S_final
+
+
+_LOG_CLAMP = 40.0    # factor magnitudes <= e^40; pair products <= e^80 < f32 max
+
+
+def _wkv_chunked(r, k, v, w, u, S0, chunk: int):
+    """Chunked-parallel WKV6 (beyond-paper §Perf: flash-linear-attention
+    style).  Within a chunk of Q tokens the recurrence unrolls to an
+    attention-like quadratic form
+
+        y_t = (r_t ⊙ e^{ce_t}) · S_in
+            + Σ_{j<t} [(r_t ⊙ e^{ce_t}) · (k_j ⊙ e^{-c_j})] v_j
+            + (r_t ⊙ u) · k_t  v_t
+
+    with c = within-chunk inclusive cumsum(log w), ce = exclusive, so the
+    carried state advances once per CHUNK (Q× fewer scan steps / saved
+    states than the per-token scan).
+
+    Numerics: the factorized form needs exp(±c) representable.  c is
+    CENTERED per (batch, head, channel, chunk) — the shift cancels in
+    ce_t - c_j — giving an exact window of 2·_LOG_CLAMP = 80 nats of
+    within-chunk decay range; beyond that, factors clamp (affected terms
+    carry true weight < e^-40).  Q=32 is exact for per-step decay
+    w >= e^-2.5; pathological faster decays fall back to chunk=0 (scan).
+
+    Matches ``_wkv_scan`` (tests/test_moe_ssm.py sweeps parity).
+    """
+    B, S, H, K = r.shape
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        zp = lambda t, val=0.0: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                                        constant_values=val)
+        r, k, v = zp(r), zp(k), zp(v)
+        w = zp(w, 1.0)                               # decay 1 = no-op
+    C = r.shape[1] // Q
+    resh = lambda t: t.reshape(B, C, Q, H, K).swapaxes(0, 1)  # [C,B,Q,H,K]
+    rc, kc, vc, wc = resh(r), resh(k), resh(v), resh(w)
+
+    @jax.checkpoint      # bwd recomputes intra-chunk factors from inputs:
+    def body(S_in, inp):  # only the [B,H,K,K] carry is saved per chunk
+        rq, kq, vq, wq = inp                          # [B,Q,H,K]
+        c = jnp.cumsum(jnp.log(wq), axis=1)           # inclusive [B,Q,H,K]
+        ce = c - jnp.log(wq)                          # exclusive
+        # intra-chunk factors are centered per (b,h,k): the shift cancels
+        # in ce_t - c_j and doubles the representable decay range
+        mid = 0.5 * c[:, -1:]
+        r_dec = rq * jnp.exp(jnp.clip(ce - mid, -_LOG_CLAMP, _LOG_CLAMP))
+        k_grow = kq * jnp.exp(jnp.clip(mid - c, -_LOG_CLAMP, _LOG_CLAMP))
+        # the incoming-state term needs the UNSHIFTED decay (ce <= 0)
+        r_state = rq * jnp.exp(jnp.maximum(ce, -2 * _LOG_CLAMP))
+        # intra-chunk scores A[t,j] for j < t (strictly causal)
+        A = jnp.einsum("bthk,bjhk->bhtj", r_dec, k_grow)
+        mask = jnp.tril(jnp.ones((Q, Q), bool), k=-1)
+        A = jnp.where(mask[None, None], A, 0.0)
+        y = jnp.einsum("bhtj,bjhk->bthk", A, vq)
+        # current-token bonus term
+        diag = jnp.einsum("bthk,bthk->bth", rq * u[None, None], kq)
+        y = y + diag[..., None] * vq
+        # inter-chunk: incoming state
+        y = y + jnp.einsum("bthk,bhkj->bthj", r_state, S_in)
+        # state update to chunk end
+        k_end = kq * jnp.exp(jnp.maximum(c[:, -1:] - c, -2 * _LOG_CLAMP))
+        S_out = (jnp.exp(jnp.maximum(c[:, -1], -2 * _LOG_CLAMP))[..., None] * S_in
+                 + jnp.einsum("bjhk,bjhn->bhkn", k_end, vq))
+        return S_out, y
+
+    S_final, ys = jax.lax.scan(body, S0, (rc, kc, vc, wc))
+    y = ys.swapaxes(0, 1).reshape(B, C * Q, H, K)[:, :S]
+    return y, S_final
+
+
+def rwkv6_timemix(p, r: RWKVSpec, x, last_x=None, state=None):
+    B, S, D = x.shape
+    H, K = D // r.head_dim, r.head_dim
+    xprev = _shift(x, last_x)
+    mixed = _ddlerp(x.astype(jnp.float32), xprev.astype(jnp.float32),
+                    p["mu"].astype(jnp.float32), p["mix_A"], p["mix_B"])
+    xr, xk, xv, xw, xg = [m.astype(x.dtype) for m in mixed]
+    rr = (xr @ p["w_r"]).reshape(B, S, H, K).astype(jnp.float32)
+    kk = (xk @ p["w_k"]).reshape(B, S, H, K).astype(jnp.float32)
+    vv = (xv @ p["w_v"]).reshape(B, S, H, K).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["w_g"])
+    dec = p["decay_base"].astype(jnp.float32) + jnp.tanh(xw @ p["decay_A"]) @ p["decay_B"]
+    w = jnp.exp(-jnp.exp(dec.astype(jnp.float32))).reshape(B, S, H, K)
+    if state is None:
+        state = jnp.zeros((B, H, K, K), jnp.float32)
+    if r.chunk and S > 1:
+        y, state = _wkv_chunked(rr, kk, vv, w,
+                                p["bonus_u"].astype(jnp.float32), state,
+                                r.chunk)
+    else:
+        y, state = _wkv_scan(rr, kk, vv, w, p["bonus_u"].astype(jnp.float32),
+                             state)
+    y = y.reshape(B, S, D)
+    y = rms_norm(y, p["ln_gamma"]).astype(x.dtype) * g
+    return shard_hint(y @ p["w_o"], _SEQ_SPEC), (x[:, -1:], state)
+
+
+def rwkv6_channelmix(p, x, last_x=None):
+    xprev = _shift(x, last_x)
+    diff = xprev - x
+    xk = x + diff * p["cm_mu"][0]
+    xr = x + diff * p["cm_mu"][1]
+    k = activate(xk @ p["w_ck"], "relu2")
+    out = jax.nn.sigmoid(xr @ p["w_cr"]) * (k @ p["w_cv"])
+    return shard_hint(out, _SEQ_SPEC), x[:, -1:]

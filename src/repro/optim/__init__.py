@@ -1,0 +1,1 @@
+from .optimizers import Optimizer, adamw, get_optimizer, momentum, sgd

@@ -1,0 +1,109 @@
+"""Minimal optimizer library (optax-free, pure pytrees).
+
+States are plain pytrees matching the parameter tree, so they shard
+exactly like parameters (the dry-run gives them the same
+PartitionSpecs).  All accumulators are float32 regardless of parameter
+dtype; updates are cast back.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import TrainConfig
+
+
+class Optimizer(NamedTuple):
+    init: Callable      # params -> state
+    update: Callable    # (grads, state, params, step) -> (new_params, new_state)
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads
+    n = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads)
+
+
+def sgd(lr: float, grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        grads = clip_by_global_norm(grads, grad_clip)
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32))
+            .astype(p.dtype), params, grads)
+        return new, state
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9, grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def update(grads, state, params, step):
+        grads = clip_by_global_norm(grads, grad_clip)
+        new_m = jax.tree.map(
+            lambda v, g: beta * v + g.astype(jnp.float32), state, grads)
+        new_p = jax.tree.map(
+            lambda p, v: (p.astype(jnp.float32) - lr * v).astype(p.dtype),
+            params, new_m)
+        return new_p, new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, grad_clip: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params, step):
+        grads = clip_by_global_norm(grads, grad_clip)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            pf = p.astype(jnp.float32)
+            pf = pf - lr * (u + weight_decay * pf)
+            return pf.astype(p.dtype), m, v
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def get_optimizer(cfg: TrainConfig) -> Optimizer:
+    if cfg.optimizer == "sgd":
+        return sgd(cfg.lr, cfg.grad_clip)
+    if cfg.optimizer == "momentum":
+        return momentum(cfg.lr, cfg.momentum, cfg.grad_clip)
+    if cfg.optimizer == "adamw":
+        return adamw(cfg.lr, weight_decay=cfg.weight_decay,
+                     grad_clip=cfg.grad_clip)
+    raise ValueError(cfg.optimizer)

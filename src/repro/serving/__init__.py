@@ -1,0 +1,1 @@
+from .engine import ServeBundle, build_serve_step, cache_specs

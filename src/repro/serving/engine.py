@@ -1,0 +1,87 @@
+"""Serving path: batched prefill + single-token decode steps.
+
+``build_serve_step`` returns jitted functions with explicit shardings:
+  * params: tensor-parallel over 'model' (+FSDP over workers for >20B
+    so 236B fits 512 x 16GB)
+  * prefill: batch over the worker axes
+  * decode:  batch over workers; KV/state cache batch over workers —
+    except ``global_batch == 1`` (long_500k) where the cache SEQUENCE
+    dim shards over 'data' instead (flash-decoding style: XLA emits the
+    partial-softmax combine collectives).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import InputShape, ModelConfig
+from ..launch.mesh import n_workers, worker_axes
+from ..models import params as PM
+from ..models import transformer as TF
+
+SERVE_FSDP_PARAMS = 20e9
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int, mesh,
+                shard_seq: bool) -> dict:
+    """PartitionSpec tree matching models.transformer.cache_defs."""
+    waxes = worker_axes(mesh)
+    wspec = tuple(waxes) if len(waxes) > 1 else waxes[0]
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_model = sizes.get("model", 1)
+    nw = n_workers(mesh)
+
+    def spec_of(shape_axes):
+        shape, axes = shape_axes
+        entries = []
+        for s, a in zip(shape, axes):
+            if a == "batch" and not shard_seq and s % nw == 0 and s >= nw:
+                entries.append(wspec)
+            elif a == "seq" and shard_seq and s % nw == 0 and s >= nw:
+                entries.append(wspec)
+            elif a in ("kv", "heads", "inner") and s % n_model == 0 and s >= n_model:
+                entries.append("model")
+            else:
+                entries.append(None)
+        return P(*entries)
+
+    defs = TF.cache_defs(cfg, batch, seq_len)
+    return jax.tree.map(spec_of, defs,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and isinstance(x[0], tuple))
+
+
+class ServeBundle(NamedTuple):
+    prefill_fn: object          # (params, tokens[, prefix]) -> logits
+    decode_fn: object           # (params, cache, token, pos) -> (logits, cache)
+    param_specs: object
+    cache_spec_tree: object
+    batch_spec: P
+
+
+def build_serve_step(cfg: ModelConfig, shape: InputShape, mesh) -> ServeBundle:
+    defs = TF.param_defs(cfg)
+    n = PM.count_params(defs)
+    fsdp = n > SERVE_FSDP_PARAMS
+    pspecs = PM.pspec_tree(defs, mesh, fsdp=fsdp)
+    waxes = worker_axes(mesh)
+    wspec = tuple(waxes) if len(waxes) > 1 else waxes[0]
+    nw = n_workers(mesh)
+    shard_seq = shape.global_batch < nw            # long_500k: B=1
+    bspec = P(None) if shard_seq else P(wspec)
+    cspecs = cache_specs(cfg, shape.global_batch, shape.seq_len, mesh, shard_seq)
+
+    def prefill(params, batch):
+        logits, _ = TF.forward(cfg, params, batch["tokens"],
+                               batch.get("prefix_embed"))
+        return logits
+
+    def decode(params, cache, token, pos):
+        return TF.decode_step(cfg, params, cache, token, pos)
+
+    return ServeBundle(jax.jit(prefill), jax.jit(decode, donate_argnums=(1,)),
+                       pspecs, cspecs, bspec)

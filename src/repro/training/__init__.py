@@ -1,0 +1,1 @@
+from .step import StepBundle, build_train_step, resolve_strategy

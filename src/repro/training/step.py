@@ -1,0 +1,184 @@
+"""Distributed train-step builder.
+
+One ``jax.shard_map`` (partial-manual over the worker axes, 'model'
+stays auto) wraps gradient computation, Byzantine attack injection,
+robust aggregation, and the optimizer update:
+
+  global scope  : per-worker full-gradient pytree -> robust_aggregate
+                  (paper-faithful; gather or a2a collective layout)
+  blocked scope : FSDP params + aggregation inside the backward scan
+                  (core.blocked) — the >20B path.
+
+The builder returns the jitted step plus the sharding trees needed by
+both the real driver and the dry-run (which feeds ShapeDtypeStructs).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ByzantineConfig, ModelConfig, TrainConfig
+from ..core.blocked import make_fsdp_agg_barrier
+from ..core.distributed import inject_attack, robust_aggregate
+from ..launch.mesh import n_workers, worker_axes
+from ..models import params as PM
+from ..models import transformer as TF
+from ..optim import get_optimizer
+
+GIANT_PARAMS = 20e9
+# §Perf: the a2a (workers×dims re-shard) layout beat the paper-faithful
+# gather at every size measured (EXPERIMENTS.md §Perf pair 2) — auto
+# now always picks it; agg_layout="gather" restores the paper baseline.
+A2A_PARAMS = 0.0
+
+
+def resolve_strategy(tcfg: TrainConfig) -> tuple[str, str]:
+    """(scope, layout) with 'auto' resolved by model size."""
+    n = PM.count_params(TF.param_defs(tcfg.model))
+    scope = tcfg.agg_scope
+    if scope == "auto":
+        scope = "blocked" if n > GIANT_PARAMS else "global"
+    layout = tcfg.agg_layout
+    if layout == "auto":
+        layout = "a2a" if (scope == "blocked" or n >= A2A_PARAMS) else "gather"
+    return scope, layout
+
+
+class StepBundle(NamedTuple):
+    step_fn: object             # jitted (params, opt, batch, step, key) -> ...
+    param_specs: object         # PartitionSpec pytree
+    opt_specs: object
+    batch_specs: dict
+    scope: str
+    layout: str
+
+    def shardings(self, mesh):
+        to_sh = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s), t,
+            is_leaf=lambda x: isinstance(x, P))
+        return to_sh(self.param_specs), to_sh(self.opt_specs), to_sh(self.batch_specs)
+
+
+def _opt_state_specs(opt_name: str, pspecs):
+    if opt_name == "sgd":
+        return ()
+    if opt_name == "momentum":
+        return pspecs
+    if opt_name == "adamw":
+        return {"m": pspecs, "v": pspecs}
+    raise ValueError(opt_name)
+
+
+def _layer_slice_specs(specs):
+    """Drop the leading stack-dim entry of every leaf spec (the scan
+    consumes it)."""
+    return jax.tree.map(lambda s: P(*s[1:]) if len(s) else s, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_specs_for(cfg: ModelConfig, waxes) -> dict:
+    w = tuple(waxes) if len(waxes) > 1 else waxes[0]
+    out = {"tokens": P(w)}
+    if cfg.n_prefix_tokens:
+        out["prefix_embed"] = P(w)
+    return out
+
+
+def build_train_step(tcfg: TrainConfig, mesh) -> StepBundle:
+    cfg = tcfg.model
+    bcfg = tcfg.byzantine
+    opt = get_optimizer(tcfg)
+    scope, layout = resolve_strategy(tcfg)
+    waxes = worker_axes(mesh)
+    wspec = tuple(waxes) if len(waxes) > 1 else waxes[0]
+    m = n_workers(mesh)
+    defs = TF.param_defs(cfg)
+    fsdp = scope == "blocked"
+    pspecs = PM.pspec_tree(defs, mesh, fsdp=fsdp)
+    ospecs = _opt_state_specs(tcfg.optimizer, pspecs)
+    bspecs = batch_specs_for(cfg, waxes)
+    remat = tcfg.remat == "block"
+
+    # manual in_specs: params replicated over worker axes in global scope,
+    # FSDP-sharded (their own pspec entries reference worker axes) in
+    # blocked scope.  Under partial-manual shard_map the in_specs may only
+    # mention MANUAL axes — the 'model' sharding rides along automatically.
+    def manual_only(spec: P) -> P:
+        return P(*[e if (e == wspec or (isinstance(e, tuple) and
+                                        set(e) <= set(waxes))
+                         or e in waxes) else None
+                   for e in spec])
+
+    p_in = jax.tree.map(manual_only, pspecs, is_leaf=lambda x: isinstance(x, P))
+    o_in = jax.tree.map(manual_only, ospecs, is_leaf=lambda x: isinstance(x, P))
+    metric_spec = P()
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(p_in, o_in, bspecs, P(), P()),
+             out_specs=(p_in, o_in, {"loss": metric_spec, "ce": metric_spec,
+                                     "gnorm": metric_spec,
+                                     "n_selected": metric_spec}),
+             axis_names=set(waxes), check_vma=False)
+    def step(params, opt_state, batch, step_idx, key):
+        # local worker batch: squeeze the sharded worker axis
+        lbatch = {k: v.reshape(v.shape[1:]) if v.shape[0] == 1 else v[0]
+                  for k, v in batch.items()}
+
+        if scope == "blocked":
+            lspecs = {k: _layer_slice_specs(v) for k, v in pspecs.items()
+                      if k.startswith("seg_")}
+            top_specs = {k: v for k, v in pspecs.items()
+                         if not k.startswith("seg_")}
+            hooks = {k: make_fsdp_agg_barrier(v, bcfg, waxes, key)
+                     for k, v in lspecs.items()}
+            top_hook = make_fsdp_agg_barrier(top_specs, bcfg, waxes, key)
+
+            def lfn(params):
+                return TF.loss_fn(cfg, params, lbatch, remat=remat,
+                                  seg_hooks=hooks, top_hook=top_hook)
+
+            (loss, met), grads = jax.value_and_grad(lfn, has_aux=True)(params)
+            agg, st = grads, None    # already aggregated in backward
+        else:
+            def lfn(params):
+                return TF.loss_fn(cfg, params, lbatch, remat=remat)
+
+            (loss, met), grads = jax.value_and_grad(lfn, has_aux=True)(params)
+            grads = inject_attack(grads, key, bcfg, waxes)
+            agg, st = robust_aggregate(grads, bcfg, waxes, layout=layout)
+
+        new_params, new_opt = opt.update(agg, opt_state, params, step_idx)
+        if scope == "blocked":
+            # fsdp-sharded leaves need a cross-worker psum; replicated
+            # leaves are already global.
+            from ..core.blocked import _fsdp_dim
+            ss_f = jnp.float32(0)
+            ss_r = jnp.float32(0)
+            for g, s in zip(jax.tree.leaves(agg),
+                            jax.tree.leaves(pspecs,
+                                            is_leaf=lambda x: isinstance(x, P))):
+                ss = jnp.sum(jnp.square(g.astype(jnp.float32)))
+                if _fsdp_dim(s, waxes) is not None:
+                    ss_f += ss
+                else:
+                    ss_r += ss
+            gnorm = jnp.sqrt(jax.lax.psum(ss_f, waxes) + ss_r)
+        else:
+            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                                 for g in jax.tree.leaves(agg)))
+        metrics = {
+            "loss": jax.lax.pmean(loss, waxes),
+            "ce": jax.lax.pmean(met["ce"], waxes),
+            "gnorm": gnorm,
+            "n_selected": (jnp.sum(st.selected.astype(jnp.float32))
+                           if st is not None else jnp.float32(m)),
+        }
+        return new_params, new_opt, metrics
+
+    return StepBundle(jax.jit(step, donate_argnums=(0, 1)),
+                      pspecs, ospecs, bspecs, scope, layout)

@@ -1,0 +1,147 @@
+"""Pallas kernel validation: interpret-mode execution vs the pure-jnp
+oracles, swept over shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.brsgd_stats import (brsgd_stats_pallas, cwise_median_pallas,
+                                       masked_mean_pallas)
+
+SHAPES = [(4, 64), (8, 100), (20, 257), (20, 2048), (32, 5000), (7, 33),
+          (64, 128), (3, 1)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("m,d", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_brsgd_stats_kernel_vs_ref(m, d, dtype):
+    rng = np.random.default_rng(m * 1000 + d)
+    G = jnp.asarray(rng.normal(size=(m, d)) * 3).astype(dtype)
+    med, mean, sc, l1 = brsgd_stats_pallas(G, d_blk=512)
+    med_r, mean_r, sc_r, l1_r = ref.brsgd_stats_ref(G)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(med), np.asarray(med_r), atol=tol)
+    np.testing.assert_allclose(np.asarray(mean), np.asarray(mean_r), atol=tol)
+    np.testing.assert_allclose(np.asarray(sc), np.asarray(sc_r), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l1_r),
+                               rtol=1e-4, atol=tol * d)
+
+
+@pytest.mark.parametrize("m,d", SHAPES)
+def test_masked_mean_kernel_vs_ref(m, d):
+    rng = np.random.default_rng(m + d)
+    G = jnp.asarray(rng.normal(size=(m, d)).astype("f4"))
+    mask = jnp.asarray(rng.random(m) > 0.4)
+    out = masked_mean_pallas(G, mask, d_blk=512)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.masked_mean_ref(G, mask)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_masked_mean_empty_mask_is_safe():
+    G = jnp.ones((4, 10))
+    out = masked_mean_pallas(G, jnp.zeros((4,), bool))
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+@pytest.mark.parametrize("m", [2, 3, 4, 5, 8, 16, 20, 33, 64])
+def test_cwise_median_kernel_odd_even_workers(m):
+    rng = np.random.default_rng(m)
+    G = jnp.asarray(rng.normal(size=(m, 300)).astype("f4"))
+    np.testing.assert_allclose(np.asarray(cwise_median_pallas(G, d_blk=128)),
+                               np.median(np.asarray(G), axis=0), atol=1e-6)
+
+
+def test_kernel_blocking_invariance():
+    """Different d_blk tilings give identical results."""
+    rng = np.random.default_rng(7)
+    G = jnp.asarray(rng.normal(size=(12, 1000)).astype("f4"))
+    outs = [brsgd_stats_pallas(G, d_blk=b) for b in (64, 256, 1000, 4096)]
+    for o in outs[1:]:
+        for a, b in zip(outs[0], o):
+            # different tilings reduce in different orders -> f32 rounding
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-5)
+
+
+def test_ops_wrappers_pallas_matches_jnp_path():
+    rng = np.random.default_rng(3)
+    G = jnp.asarray(rng.normal(size=(16, 700)).astype("f4"))
+    mask = jnp.asarray(rng.random(16) > 0.5)
+    for a, b in zip(ops.brsgd_stats(G, use_pallas=True),
+                    ops.brsgd_stats(G, use_pallas=False)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(ops.masked_mean(G, mask, use_pallas=True)),
+        np.asarray(ops.masked_mean(G, mask, use_pallas=False)), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(ops.cwise_median(G, use_pallas=True)),
+        np.asarray(ops.cwise_median(G, use_pallas=False)), atol=1e-6)
+
+
+@pytest.mark.parametrize("B,H,Q,K,wlo", [(2, 3, 8, 8, 0.1),
+                                         (1, 2, 32, 16, 0.3),
+                                         (2, 1, 64, 64, 0.5),
+                                         (1, 1, 16, 32, 0.05)])
+def test_wkv6_chunk_kernel_vs_sequential_oracle(B, H, Q, K, wlo):
+    """Pallas WKV6 chunk kernel (interpret mode) == per-token recurrence."""
+    from repro.kernels.wkv6 import wkv6_chunk_pallas, wkv6_chunk_ref
+    rng = np.random.default_rng(B * 100 + Q)
+    mk = lambda: jnp.asarray(rng.normal(size=(B, H, Q, K)).astype("f4"))
+    r, k, v = mk(), mk(), mk()
+    w = jnp.asarray(rng.uniform(wlo, 0.999, size=(B, H, Q, K)).astype("f4"))
+    u = jnp.asarray(rng.normal(size=(H, K)).astype("f4"))
+    S = jnp.asarray(rng.normal(size=(B, H, K, K)).astype("f4"))
+    y1, S1 = wkv6_chunk_pallas(r, k, v, w, u, S)
+    y2, S2 = wkv6_chunk_ref(r, k, v, w, u, S)
+    scale = max(1.0, float(jnp.abs(y2).max()))
+    np.testing.assert_allclose(np.asarray(y1) / scale, np.asarray(y2) / scale,
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(S1), np.asarray(S2),
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("B,H,Hkv,S,D,win", [
+    (1, 2, 2, 64, 16, 0),      # MHA causal
+    (2, 4, 2, 128, 32, 0),     # GQA
+    (1, 2, 1, 100, 16, 0),     # ragged S (padding path)
+    (1, 2, 2, 256, 16, 64),    # sliding window
+    (1, 1, 1, 48, 8, 16),      # small + window
+])
+def test_flash_attention_kernel_vs_oracle(B, H, Hkv, S, D, win):
+    from repro.kernels.flash_attention import (flash_attention,
+                                               flash_attention_ref)
+    rng = np.random.default_rng(S + D)
+    q = jnp.asarray(rng.normal(size=(B, H, S, D)).astype("f4"))
+    k = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype("f4"))
+    v = jnp.asarray(rng.normal(size=(B, Hkv, S, D)).astype("f4"))
+    out = flash_attention(q, k, v, window=win, qb=32, kb=32)
+    ref = flash_attention_ref(q, k, v, window=win)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_flash_attention_bf16_and_blocking_invariance():
+    from repro.kernels.flash_attention import (flash_attention,
+                                               flash_attention_ref)
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 2, 64, 16))).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 2, 64, 16))).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 2, 64, 16))).astype(jnp.bfloat16)
+    ref = flash_attention_ref(q, k, v)
+    for qb, kb in ((16, 16), (32, 64), (64, 32)):
+        out = flash_attention(q, k, v, qb=qb, kb=kb)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=5e-2, atol=5e-2)
+
+
+def test_score_constant_column_counts_everyone():
+    """A constant column splits into {all >= mean}: everyone scores 1 —
+    guards the zero-padding correction in the kernel wrapper."""
+    G = jnp.ones((6, 10))
+    _, _, sc, l1 = brsgd_stats_pallas(G, d_blk=4)   # forces padding
+    np.testing.assert_array_equal(np.asarray(sc), np.full(6, 10.0))
+    np.testing.assert_allclose(np.asarray(l1), np.zeros(6), atol=1e-6)

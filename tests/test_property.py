@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) on the aggregation invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.configs.base import ByzantineConfig
+from repro.core import aggregators as A
+from repro.kernels import ref
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+
+def matrices(min_m=3, max_m=24, min_d=1, max_d=120):
+    return st.integers(min_m, max_m).flatmap(
+        lambda m: st.integers(min_d, max_d).flatmap(
+            lambda d: hnp.arrays(
+                np.float32, (m, d),
+                elements=st.floats(-100, 100, width=32,
+                                   allow_nan=False, allow_infinity=False))))
+
+
+@given(matrices())
+def test_median_bounded_by_extremes(G):
+    med = np.asarray(ref.cwise_median_ref(jnp.asarray(G)))
+    assert (med >= G.min(axis=0) - 1e-5).all()
+    assert (med <= G.max(axis=0) + 1e-5).all()
+
+
+@given(matrices())
+def test_scores_bounded_by_d_and_majority(G):
+    m, d = G.shape
+    sc = np.asarray(ref.majority_score_ref(jnp.asarray(G)))
+    assert (sc >= 0).all() and (sc <= d).all()
+    # per column, the majority subset has >= ceil(m/2) members, so the
+    # total score mass is at least d * ceil(m/2)
+    assert sc.sum() >= d * ((m + 1) // 2) - 1e-5
+
+
+@given(matrices())
+def test_worker_permutation_equivariance(G):
+    """Permuting workers permutes scores/l1 and leaves the aggregate
+    invariant (the selection is order-free)."""
+    rng = np.random.default_rng(0)
+    perm = rng.permutation(G.shape[0])
+    Gp = G[perm]
+    cfg = ByzantineConfig()
+    agg, st = A.brsgd(jnp.asarray(G), cfg, return_state=True)
+    agg_p, st_p = A.brsgd(jnp.asarray(Gp), cfg, return_state=True)
+    np.testing.assert_allclose(np.asarray(st.scores)[perm],
+                               np.asarray(st_p.scores), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st.l1)[perm],
+                               np.asarray(st_p.l1), rtol=1e-4, atol=1e-3)
+    # aggregates agree whenever the selected sets map to each other (ties
+    # in the score order can legitimately flip selections)
+    if (np.asarray(st.selected)[perm] == np.asarray(st_p.selected)).all():
+        np.testing.assert_allclose(np.asarray(agg), np.asarray(agg_p),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@given(matrices(), st.floats(0.1, 10.0))
+def test_positive_scale_equivariance(G, c):
+    """brsgd(c·G) = c·brsgd(G) under the auto threshold (all statistics
+    are positively homogeneous)."""
+    cfg = ByzantineConfig(threshold=0.0)
+    a1 = np.asarray(A.brsgd(jnp.asarray(G), cfg))
+    a2 = np.asarray(A.brsgd(jnp.asarray(G * np.float32(c)), cfg))
+    np.testing.assert_allclose(a2, c * a1, rtol=1e-3, atol=1e-3 * c)
+
+
+@given(matrices())
+def test_aggregate_within_row_convex_hull(G):
+    """The BrSGD output is a mean of selected rows, hence inside the
+    coordinate-wise hull of G."""
+    agg = np.asarray(A.brsgd(jnp.asarray(G), ByzantineConfig()))
+    assert (agg >= G.min(axis=0) - 1e-4).all()
+    assert (agg <= G.max(axis=0) + 1e-4).all()
+
+
+@given(matrices(min_m=4), st.integers(1, 3))
+def test_trimmed_mean_ignores_k_outliers(G, k):
+    m = G.shape[0]
+    if 2 * k >= m - 1:
+        return
+    Gb = G.copy()
+    Gb[:k] = 1e6  # k wild rows
+    out = np.asarray(ref.trimmed_mean_ref(jnp.asarray(Gb), (k + 0.01) / m))
+    assert np.abs(out).max() < 2e5  # outliers trimmed, not averaged in
+
+
+@given(matrices())
+def test_masked_mean_full_mask_is_mean(G):
+    out = np.asarray(ref.masked_mean_ref(jnp.asarray(G),
+                                         jnp.ones(G.shape[0], bool)))
+    np.testing.assert_allclose(out, G.mean(axis=0), rtol=1e-4, atol=1e-4)
+
+
+@given(st.integers(2, 16), st.integers(1, 50))
+def test_identical_workers_all_selected(m, d):
+    """If every worker reports the same gradient, nobody is filtered and
+    the aggregate is that gradient."""
+    g = np.linspace(-1, 1, d).astype(np.float32)
+    G = jnp.asarray(np.tile(g, (m, 1)))
+    agg, st_ = A.brsgd(G, ByzantineConfig(), return_state=True)
+    assert int(jnp.sum(st_.selected)) == m
+    np.testing.assert_allclose(np.asarray(agg), g, atol=1e-6)
