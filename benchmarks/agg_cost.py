@@ -1,14 +1,22 @@
 """Paper §1/§2 complexity claim: BrSGD aggregation is O(md); Krum is
 O(m²(d + log m)); coordinate-wise median via sort is O(dm log m).
 
-We time the jitted aggregators over a grid of (m, d), print the raw
-wall-times, and fit the scaling exponents:
-  * brsgd time ~ m^a d^b with a ~ 1, b ~ 1
-  * krum grows ~ m² at fixed d (ratio check)
+We time every registered aggregator over a grid of (m, d) in the
+``local`` layout, plus every (aggregator × {gather, a2a}) pair under
+shard_map on an 8-device host mesh (subprocess — the main process
+keeps the real device).  Raw wall-times are printed as CSV, the
+scaling exponents are fitted (brsgd ~ m^a d^b with a ~ 1, b ~ 1; krum
+grows ~ m² at fixed d), and every row is emitted to ``BENCH_agg.json``
+at the repo root so the perf trajectory of the fused select+masked-mean
+kernel is tracked across PRs.
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
 import sys
+import textwrap
 
 import jax
 import jax.numpy as jnp
@@ -21,29 +29,100 @@ from .common import time_fn
 
 MS = [8, 16, 32, 64]
 DS = [10_000, 40_000, 160_000]
+D_DIST = 40_000          # distributed rows: one d, m = n_devices = 8
+BENCH_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "..", "BENCH_agg.json")
+
+_DIST_SNIPPET = textwrap.dedent("""
+    import json, time
+    import jax, jax.numpy as jnp, numpy as np
+    from functools import partial
+    from repro.compat import P, shard_map
+    from repro.configs.base import ByzantineConfig
+    from repro.core.distributed import robust_aggregate
+    from repro.launch.mesh import make_mesh
+
+    m, d = 8, %d
+    mesh = make_mesh((m,), ("data",))
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(m, d)).astype("f4"))
+
+    def bench(fn, *args, reps=5, warmup=2):
+        for _ in range(warmup):
+            jax.block_until_ready(fn(*args))
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts) * 1e6)
+
+    rows = []
+    for name in %r:
+        cfg = ByzantineConfig(aggregator=name, alpha=0.25)
+        for layout in ("gather", "a2a"):
+            @jax.jit
+            @partial(shard_map, mesh=mesh, in_specs=(P("data"),),
+                     out_specs=P())
+            def agg(x):
+                local = {"g": x.reshape(x.shape[1:])}
+                return robust_aggregate(local, cfg, ("data",), layout)[0]["g"]
+            us = bench(agg, g)
+            rows.append({"aggregator": name, "layout": layout,
+                         "m": m, "d": d, "us_per_call": us})
+    print("JSON:" + json.dumps(rows))
+""")
+
+
+def _distributed_rows():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.setdefault("PYTHONPATH", "")
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep + env["PYTHONPATH"]
+    code = _DIST_SNIPPET % (D_DIST, sorted(A.AGGREGATORS))
+    try:
+        proc = subprocess.run([sys.executable, "-c", code], env=env,
+                              capture_output=True, text=True, timeout=1200)
+    except (subprocess.TimeoutExpired, OSError) as e:
+        # degrade to local-only rows rather than losing the whole run
+        print(f"# distributed rows FAILED: {type(e).__name__}: {e}")
+        return []
+    if proc.returncode != 0:
+        print(f"# distributed rows FAILED:\n{proc.stderr[-2000:]}")
+        return []
+    for line in proc.stdout.splitlines():
+        if line.startswith("JSON:"):
+            return json.loads(line[5:])
+    return []
 
 
 def main():
-    cfg = ByzantineConfig()
-    kcfg = ByzantineConfig(aggregator="krum", alpha=0.25)
-    fns = {
-        "brsgd": jax.jit(lambda G: A.brsgd(G, cfg)),
-        "median": jax.jit(lambda G: A.cwise_median(G)),
-        "mean": jax.jit(lambda G: A.mean(G)),
-        "krum": jax.jit(lambda G: A.krum(G, kcfg)),
-    }
     rng = np.random.default_rng(0)
-    times = {}
-    print("aggregator,m,d,us_per_call")
+    rows, times = [], {}
+    fns = {}
+    for name in sorted(A.AGGREGATORS):
+        cfg = ByzantineConfig(aggregator=name, alpha=0.25)
+        fns[name] = jax.jit(lambda G, c=cfg: A.aggregate(G, c))
+
+    print("aggregator,layout,m,d,us_per_call")
     for m in MS:
         for d in DS:
             G = jnp.asarray(rng.normal(size=(m, d)).astype("f4"))
             for name, fn in fns.items():
                 us = time_fn(fn, G)
                 times[(name, m, d)] = us
-                print(f"{name},{m},{d},{us:.1f}", flush=True)
+                rows.append({"aggregator": name, "layout": "local",
+                             "m": m, "d": d, "us_per_call": us})
+                print(f"{name},local,{m},{d},{us:.1f}", flush=True)
 
-    # scaling fits (log-log least squares) for brsgd
+    for r in _distributed_rows():
+        rows.append(r)
+        print(f"{r['aggregator']},{r['layout']},{r['m']},{r['d']},"
+              f"{r['us_per_call']:.1f}", flush=True)
+
+    # scaling fits (log-log least squares)
+    fits = {}
     for name in ("brsgd", "mean"):
         xs, ys = [], []
         for (n, m, d), us in times.items():
@@ -51,16 +130,24 @@ def main():
                 xs.append([np.log(m), np.log(d), 1.0])
                 ys.append(np.log(us))
         coef, *_ = np.linalg.lstsq(np.asarray(xs), np.asarray(ys), rcond=None)
+        fits[name] = {"m_exp": float(coef[0]), "d_exp": float(coef[1])}
         print(f"# {name} scaling: time ~ m^{coef[0]:.2f} * d^{coef[1]:.2f}")
 
     # krum m-scaling at fixed d (expect ~quadratic at large m)
     d = DS[-1]
     r64_16 = times[("krum", 64, d)] / times[("krum", 16, d)]
     rb = times[("brsgd", 64, d)] / times[("brsgd", 16, d)]
+    ok = rb < (r64_16 + 1) / 2 or rb < 8
     print(f"# m 16->64 (4x): krum x{r64_16:.1f} (O(m^2)->16x), "
           f"brsgd x{rb:.1f} (O(m)->4x)")
-    print(f"# CLAIM brsgd O(md): "
-          f"{'PASS' if rb < (r64_16 + 1) / 2 or rb < 8 else 'FAIL'}")
+    print(f"# CLAIM brsgd O(md): {'PASS' if ok else 'FAIL'}")
+
+    out = {"schema": 1, "rows": rows, "fits": fits,
+           "krum_ratio_16_to_64": float(r64_16),
+           "brsgd_ratio_16_to_64": float(rb), "claim_pass": bool(ok)}
+    with open(BENCH_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"# wrote {os.path.normpath(BENCH_PATH)} ({len(rows)} rows)")
     return 0
 
 

@@ -1,7 +1,7 @@
 """Extended robustness matrix (beyond the paper's Table 1): six attacks
-x six aggregators on the strongly convex problem, including the
-literature's subtler attacks (ALIE, IPM) and extra baselines
-(multi-Krum, geometric median).
+x seven aggregators (every rule registered in core.engine) on the
+strongly convex problem, including the literature's subtler attacks
+(ALIE, IPM) and extra baselines (Krum, multi-Krum, geometric median).
 
 Reported: final ||w - w*|| (lower is better).  Structure expected:
   * brsgd / geomedian / multi_krum stay near the clean error under all
@@ -21,7 +21,8 @@ from repro.core import aggregators, attacks
 
 D, STEPS, LR, M, N = 20, 150, 0.3, 20, 400
 ATTACKS = ["gaussian", "negation", "scale", "sign_flip", "alie", "ipm"]
-AGGS = ["brsgd", "median", "trimmed_mean", "multi_krum", "geomedian", "mean"]
+AGGS = ["brsgd", "median", "trimmed_mean", "krum", "multi_krum",
+        "geomedian", "mean"]
 
 
 def run(agg: str, attack: str, alpha: float = 0.25, seed: int = 0):

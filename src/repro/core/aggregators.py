@@ -6,130 +6,77 @@ G ∈ R^{m×d}.
 2018) and ``krum`` (Blanchard et al., 2017) are the baselines it
 compares against.  All return the aggregated gradient [d].
 
+Every rule is a thin wrapper over the layout-aware engine
+(:mod:`.engine`): the registry entry there defines the rule ONCE —
+its per-leaf statistics, replicated selection and combine — and these
+functions execute it in the ``local`` (single-host [m, d]) layout.
+The same entries power the ``gather``/``a2a`` shard_map layouts in
+:mod:`.distributed`.
+
 Complexities (paper §2): brsgd O(md); cwise median O(dm log m);
 trimmed mean O(dm log m); krum O(m²(d + log m)).
 """
 from __future__ import annotations
 
-import math
-from typing import NamedTuple
-
-import jax
-import jax.numpy as jnp
-
 from ..configs.base import ByzantineConfig
-from ..kernels import ops, ref
+from . import engine
+from .engine import BrSGDState, brsgd_select  # noqa: F401  (public API)
 
-
-class BrSGDState(NamedTuple):
-    """Diagnostics of one aggregation call (useful for tests/monitoring)."""
-    selected: jax.Array     # [m] bool — C1 ∩ C2 (after fallback)
-    c1: jax.Array           # [m] bool — l1 filter
-    c2: jax.Array           # [m] bool — top-beta score filter
-    scores: jax.Array       # [m]
-    l1: jax.Array           # [m]
-    threshold: jax.Array    # resolved 𝔗
-
-
-def brsgd_select(scores, l1, beta: float, threshold: float) -> BrSGDState:
-    """Constraint 1 (ℓ1 ≤ 2𝔗) ∩ Constraint 2 (top-β by score).
-
-    threshold <= 0 selects the auto rule 𝔗 = lower-quartile_i(l1_i):
-    under honest majority (α < 1/2) the 25th percentile of the l1
-    distances is attained by an honest worker, and — unlike the median —
-    it stays honest at the paper's boundary setting α = 1/2, where the
-    per-dimension majority tie-break alone is adversarially exploitable
-    (an attacker cluster of exactly m/2 identical rows wins every tie on
-    dimensions whose honest gradient sum has the right sign).  2𝔗 then
-    covers the honest concentration radius (Assumption 1) while the
-    Byzantine cluster's l1 — inflated by its own distance to the honest
-    median — is rejected.
-    """
-    m = scores.shape[0]
-    T = jnp.where(threshold > 0, threshold,
-                  jnp.quantile(l1, 0.25, method="nearest"))
-    c1 = l1 <= 2.0 * T
-    k = max(1, math.ceil(beta * m))
-    kth = jnp.sort(scores)[m - k]
-    c2 = scores >= kth
-    sel = c1 & c2
-    # guard: the paper assumes C1∩C2 nonempty; if a pathological 𝔗 empties
-    # it, fall back to C2 (score filter alone).
-    sel = jnp.where(jnp.any(sel), sel, c2)
-    return BrSGDState(sel, c1, c2, scores, l1, T)
+_DEFAULT = ByzantineConfig()
 
 
 def brsgd(G, cfg: ByzantineConfig, use_pallas: bool | None = None,
           return_state: bool = False):
     """Paper Algorithm 2: 𝒜_{β,𝔗}({g^i})."""
-    kw = {} if use_pallas is None else {"use_pallas": use_pallas}
-    med, _mean, scores, l1 = ops.brsgd_stats(G, **kw)
-    st = brsgd_select(scores, l1, cfg.beta, cfg.threshold)
-    agg = ops.masked_mean(G, st.selected, **kw)
-    return (agg, st) if return_state else agg
+    return engine.aggregate_local(G, cfg, use_pallas=use_pallas,
+                                  return_state=return_state,
+                                  spec=engine.get_spec("brsgd"))
 
 
-def mean(G, cfg: ByzantineConfig = None):
-    return jnp.mean(G.astype(jnp.float32), axis=0)
+def mean(G, cfg: ByzantineConfig = None, use_pallas: bool | None = None):
+    """Arithmetic mean (non-robust baseline).  The jnp path accumulates
+    rows sequentially (ref.masked_mean_det) so the result is
+    deterministic and bit-identical to np.mean(G, axis=0)."""
+    return engine.aggregate_local(G, cfg or _DEFAULT, use_pallas=use_pallas,
+                                  spec=engine.get_spec("mean"))
 
 
-def cwise_median(G, cfg: ByzantineConfig = None, use_pallas: bool | None = None):
-    kw = {} if use_pallas is None else {"use_pallas": use_pallas}
-    return ops.cwise_median(G, **kw)
+def cwise_median(G, cfg: ByzantineConfig = None,
+                 use_pallas: bool | None = None):
+    return engine.aggregate_local(G, cfg or _DEFAULT, use_pallas=use_pallas,
+                                  spec=engine.get_spec("median"))
 
 
-def trimmed_mean(G, cfg: ByzantineConfig):
-    return ref.trimmed_mean_ref(G, cfg.trim_frac)
+def trimmed_mean(G, cfg: ByzantineConfig, use_pallas: bool | None = None):
+    """Coordinate-wise trimmed mean (Yin et al. 2018), routed through
+    kernels/ops.py like every other rule (Pallas on TPU)."""
+    return engine.aggregate_local(G, cfg, use_pallas=use_pallas,
+                                  spec=engine.get_spec("trimmed_mean"))
 
 
 def krum(G, cfg: ByzantineConfig):
     """Krum (Blanchard et al. 2017): pick the gradient whose summed
     squared distance to its m - f - 2 closest neighbours is minimal."""
-    m = G.shape[0]
-    f = cfg.krum_f if cfg.krum_f > 0 else max(1, int(cfg.alpha * m))
-    n_close = max(1, m - f - 2)
-    Gf = G.astype(jnp.float32)
-    sq = jnp.sum(Gf * Gf, axis=1)
-    d2 = sq[:, None] + sq[None, :] - 2.0 * (Gf @ Gf.T)       # [m,m]
-    d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf))
-    nearest = jnp.sort(d2, axis=1)[:, :n_close]
-    score = jnp.sum(nearest, axis=1)
-    return Gf[jnp.argmin(score)]
-
-
-def geometric_median(G, cfg: ByzantineConfig = None, iters: int = 16,
-                     eps: float = 1e-6):
-    """Geometric median via Weiszfeld iterations (Chen et al. 2017
-    baseline; the paper cites its O(dm log^3(1/eps)) cost).
-
-    Initialized at the coordinate-wise median — starting from the MEAN
-    under a scale-1e10 attack leaves Weiszfeld in the flat far-field
-    where all distances (hence weights) are equal."""
-    Gf = G.astype(jnp.float32)
-
-    def step(z, _):
-        w = 1.0 / jnp.maximum(jnp.linalg.norm(Gf - z[None], axis=1), eps)
-        return (w @ Gf) / jnp.sum(w), None
-
-    z0 = jnp.median(Gf, axis=0)
-    z, _ = jax.lax.scan(step, z0, None, length=iters)
-    return z
+    return engine.aggregate_local(G, cfg, spec=engine.get_spec("krum"))
 
 
 def multi_krum(G, cfg: ByzantineConfig, n_select: int = 0):
     """Multi-Krum (Blanchard et al. 2017): average the n_select rows
     with the best Krum scores (n_select defaults to m - f)."""
-    m = G.shape[0]
-    f = cfg.krum_f if cfg.krum_f > 0 else max(1, int(cfg.alpha * m))
-    n_close = max(1, m - f - 2)
-    k = n_select or max(1, m - f)
-    Gf = G.astype(jnp.float32)
-    sq = jnp.sum(Gf * Gf, axis=1)
-    d2 = sq[:, None] + sq[None, :] - 2.0 * (Gf @ Gf.T)
-    d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf))
-    score = jnp.sum(jnp.sort(d2, axis=1)[:, :n_close], axis=1)
-    best = jnp.argsort(score)[:k]
-    return jnp.mean(Gf[best], axis=0)
+    spec = (engine.spec_with("multi_krum", n_select=n_select)
+            if n_select else engine.get_spec("multi_krum"))
+    return engine.aggregate_local(G, cfg, spec=spec)
+
+
+def geometric_median(G, cfg: ByzantineConfig = None,
+                     iters: int = engine.GEOMEDIAN_ITERS,
+                     eps: float = engine.GEOMEDIAN_EPS):
+    """Geometric median via Weiszfeld iterations (Chen et al. 2017
+    baseline; the paper cites its O(dm log^3(1/eps)) cost).  See
+    engine._geomedian_select for the weight-space formulation and the
+    coordinate-wise-median initialization rationale."""
+    spec = engine.spec_with("geomedian", iters=iters, eps=eps)
+    return engine.aggregate_local(G, cfg or _DEFAULT, spec=spec)
 
 
 AGGREGATORS = {

@@ -35,9 +35,10 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..compat import axis_size
 from ..configs.base import ByzantineConfig
 from ..models.params import shard_hint
-from .aggregators import brsgd_select
+from .engine import brsgd_select
 from .distributed import inject_attack
 
 
@@ -71,7 +72,7 @@ def _bucket_aggregate(g_full, specs, bcfg: ByzantineConfig, axes):
     Returns the pytree of aggregated gradients in FSDP layout (leaves
     with an FSDP dim come back as the local shard).
     """
-    m = int(jax.lax.axis_size(axes))
+    m = axis_size(axes)
     leaves, tdef = jax.tree.flatten(g_full)
     spec_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
     assert len(leaves) == len(spec_leaves)

@@ -1,44 +1,46 @@
-"""Distributed BrSGD: cross-worker robust aggregation inside
-``jax.shard_map`` (partial-manual over the worker mesh axes).
+"""Distributed robust aggregation inside ``shard_map``: the thin
+collective-facing wrapper over the layout-aware engine.
 
-The paper's master/worker exchange maps onto TPU collectives:
+The paper's master/worker exchange maps onto TPU collectives through
+:mod:`.engine`, which executes ANY registered aggregator (all seven:
+mean, median, trimmed_mean, krum, multi_krum, geomedian, brsgd) in one
+of two collective layouts:
 
-  baseline  (paper-faithful "master collects G"):
-      per leaf:  all_gather over worker axes -> G_leaf [m, ...]
-      stats locally per dimension, masked mean locally.
-      Every device redundantly holds all m workers' values for the
-      dims it owns -> m× transient memory, all_gather volume.
+  gather (paper-faithful "master collects G"):
+      per leaf:  all_gather over the worker axes -> G_leaf [m, cols].
+      Statistics, selection and combine run redundantly on every
+      device -> m× transient memory, all_gather wire volume.
 
   a2a layout (beyond-paper, §Perf):
-      per leaf:  flatten, pad to m·⌈D/m⌉, reshape [m, D/m],
-      all_to_all over worker axes  -> each device owns ALL workers for
-      1/m of the dims.  Stats are local, per-worker reductions finish
-      with one psum of an [m]-vector, masked mean is local, and the
-      aggregated chunk is re-assembled with a tiled all_gather.
+      per leaf:  flatten, zero-pad to m·⌈D/m⌉, all_to_all over the
+      worker axes -> each device owns ALL workers for 1/m of the dims.
+      Per-worker statistic partials finish with one psum of
+      [m]-vectors ([m,m] for the Gram matrix), selection is replicated,
+      and the aggregated chunk is re-assembled with a tiled all_gather.
       Transient memory 1× instead of m×; compute per device /m.
 
-Both produce bit-identical aggregates (same per-dimension math).
+Both layouts produce the same aggregate up to f32 summation order
+(identical per-dimension math; see tests/test_engine.py for the
+layout-parity matrix).  What runs where is decided by the aggregator's
+registry entry — per-dimension ``column`` rules (median, trimmed mean)
+never need a replicated phase, ``select`` rules ship only [m]-sized
+state across workers.  To add an aggregator distributed, register it
+once in ``engine.py``; nothing here changes.
 
-Must be called inside a shard_map whose manual axes == ``axes`` (the
-worker axes); the 'model' mesh axis stays auto, so leaves may be
-arbitrarily tensor-sharded — the math here never notices.
+This module keeps the shard_map-facing API (``robust_aggregate``) and
+the training-time fault injection (``inject_attack``).  Must be called
+inside a shard_map whose manual axes == ``axes`` (the worker axes); the
+'model' mesh axis stays auto, so leaves may be arbitrarily
+tensor-sharded — the math here never notices.
 """
 from __future__ import annotations
-
-import math
-from functools import partial
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 
+from ..compat import axis_size
 from ..configs.base import ByzantineConfig
-from ..kernels import ref
-from .aggregators import brsgd_select
-
-
-def axis_size(axes) -> int:
-    return int(jax.lax.axis_size(axes))
+from . import engine
 
 
 def worker_index(axes):
@@ -86,129 +88,19 @@ def inject_attack(grads, key, cfg: ByzantineConfig, axes):
 
 
 # ---------------------------------------------------------------------------
-# leaf-wise statistics
-# ---------------------------------------------------------------------------
-
-def _leaf_stats_gather(g, axes):
-    """g: this worker's gradient leaf.  Returns (G_m [m,...], partial
-    scores [m], partial l1 [m], median stack) computed from an
-    all_gather along the worker axes.  The collective moves the leaf in
-    its own dtype (§Perf); statistics upcast locally."""
-    G = jax.lax.optimization_barrier(jax.lax.all_gather(g, axes)) \
-        .astype(jnp.float32)                                 # [m, ...]
-    m = G.shape[0]
-    mean_c = jnp.mean(G, axis=0, keepdims=True)
-    above = G >= mean_c
-    n_above = jnp.sum(above.astype(jnp.int32), axis=0, keepdims=True)
-    M = jnp.where(n_above * 2 >= m, above, ~above)
-    red = tuple(range(1, G.ndim))
-    scores = jnp.sum(M.astype(jnp.float32), axis=red)
-    med = jnp.median(G, axis=0)
-    l1 = jnp.sum(jnp.abs(G - med[None]), axis=red)
-    return G, scores, l1
-
-
-def _flatten_chunk(g, m):
-    """Flatten leaf and reshape to [m, ceil(D/m)] (zero-padded)."""
-    flat = g.reshape(-1)
-    D = flat.shape[0]
-    c = math.ceil(D / m)
-    flat = jnp.pad(flat, (0, m * c - D))
-    return flat.reshape(m, c), D
-
-
-def _leaf_stats_a2a(g, axes, m):
-    """all_to_all layout: returns (G_chunk [m, D/m], partial scores,
-    partial l1) where partials must be psum'd over ``axes``.  The wire
-    moves the leaf's own dtype; stats upcast locally (§Perf)."""
-    x, D = _flatten_chunk(g, m)
-    Gc = jax.lax.optimization_barrier(
-        jax.lax.all_to_all(x, axes, split_axis=0, concat_axis=0,
-                           tiled=False)).astype(jnp.float32)
-    # Gc[r] = worker r's chunk for this device's dim range.
-    # zero-pad columns exist only on the last chunk owner; they
-    # contribute +1 per worker to scores (subtracted globally) and 0 l1.
-    mean_c = jnp.mean(Gc, axis=0, keepdims=True)
-    above = Gc >= mean_c
-    n_above = jnp.sum(above.astype(jnp.int32), axis=0, keepdims=True)
-    M = jnp.where(n_above * 2 >= m, above, ~above)
-    scores = jnp.sum(M.astype(jnp.float32), axis=1)
-    med = jnp.median(Gc, axis=0)
-    l1 = jnp.sum(jnp.abs(Gc - med[None]), axis=1)
-    pad = Gc.shape[1] * m - D
-    return Gc, scores, l1, pad
-
-
-# ---------------------------------------------------------------------------
 # public API
 # ---------------------------------------------------------------------------
 
 def robust_aggregate(grads, cfg: ByzantineConfig, axes=("data",),
                      layout: str = "gather"):
-    """BrSGD aggregation of a gradient pytree across worker axes.
+    """Aggregate a gradient pytree across the worker axes.
 
     Returns the aggregated pytree (identical on every worker) plus the
-    selection diagnostics.  For cfg.aggregator == "mean" this reduces
-    to a plain pmean (the non-robust baseline).  "median" aggregates
-    with the coordinate-wise median (Yin et al.).
+    selection diagnostics (BrSGDState for ``brsgd``, SelectionState for
+    the other row-selection rules, None for per-dimension rules and the
+    mean fast path).
+    Dispatches any aggregator registered in :mod:`.engine`;
+    ``cfg.aggregator == "mean"`` reduces to a plain pmean (the
+    non-robust baseline fast path).
     """
-    if cfg.aggregator == "mean":
-        return jax.tree.map(lambda g: jax.lax.pmean(g, axes), grads), None
-
-    m = axis_size(axes)
-    leaves, tdef = jax.tree.flatten(grads)
-
-    if cfg.aggregator == "median":
-        if layout == "a2a":
-            out = []
-            for g in leaves:
-                Gc, _, _, _ = _leaf_stats_a2a(g, axes, m)
-                med = jnp.median(Gc, axis=0)
-                full = jax.lax.all_gather(med.astype(g.dtype), axes, tiled=True)
-                out.append(full[:g.size].reshape(g.shape))
-            return jax.tree.unflatten(tdef, out), None
-        out = [jnp.median(jax.lax.all_gather(g.astype(jnp.float32), axes), axis=0)
-               .astype(g.dtype) for g in leaves]
-        return jax.tree.unflatten(tdef, out), None
-
-    assert cfg.aggregator == "brsgd", cfg.aggregator
-
-    # ---- phase 1: per-leaf stats ----
-    scores = jnp.zeros((m,), jnp.float32)
-    l1 = jnp.zeros((m,), jnp.float32)
-    cached = []
-    if layout == "a2a":
-        total_pad = 0
-        for g in leaves:
-            Gc, s, l, pad = _leaf_stats_a2a(g, axes, m)
-            cached.append(Gc)
-            scores, l1 = scores + s, l1 + l
-            total_pad += pad
-        scores, l1 = jax.lax.psum((scores, l1), axes)
-        # remove the pad columns' uniform score contribution
-        scores = scores - total_pad
-    else:
-        for g in leaves:
-            G, s, l = _leaf_stats_gather(g, axes)
-            cached.append(G)
-            scores, l1 = scores + s, l1 + l
-
-    # ---- phase 2: selection (replicated) + masked mean ----
-    st = brsgd_select(scores, l1, cfg.beta, cfg.threshold)
-    w = st.selected.astype(jnp.float32)
-    denom = jnp.maximum(jnp.sum(w), 1.0)
-    out = []
-    if layout == "a2a":
-        for g, Gc in zip(leaves, cached):
-            agg_c = jnp.tensordot(w, Gc, axes=1) / denom     # [D/m]
-            # re-replicate in the gradient's own dtype (§Perf)
-            full = jax.lax.all_gather(agg_c.astype(g.dtype), axes, tiled=True)
-            out.append(full[:g.size].reshape(g.shape))
-        # stop XLA hoisting the optimizer's f32 upcast back across the
-        # all_gather (it would re-widen the wire to f32)
-        out = list(jax.lax.optimization_barrier(tuple(out)))
-    else:
-        for g, G in zip(leaves, cached):
-            agg = jnp.tensordot(w, G, axes=([0], [0])) / denom
-            out.append(agg.astype(g.dtype))
-    return jax.tree.unflatten(tdef, out), st
+    return engine.aggregate_sharded(grads, cfg, axes=axes, layout=layout)

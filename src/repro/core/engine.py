@@ -1,0 +1,446 @@
+"""Layout-aware robust-aggregation engine.
+
+One registry drives every aggregation rule in every execution layout.
+Before this module existed the same per-leaf statistics math was written
+three times (jnp reference, Pallas kernel wrapper, and inline shard_map
+code) and only 3 of the 7 registered aggregators could run distributed.
+
+Registry contract
+-----------------
+An :class:`AggregatorSpec` declares WHAT an aggregator needs, never HOW
+a layout obtains it.  Exactly one of ``select``/``column`` is set:
+
+* ``stats``  — the per-leaf statistics the rule consumes, a subset of
+  :data:`STAT_NAMES`:
+
+    ``scores``  [m]    majority scores (paper Alg. 2 Constraint 2)
+    ``l1``      [m]    l1 distance to the coordinate-wise median
+    ``d2med``   [m]    squared l2 distance to the coordinate-wise median
+    ``gram``    [m,m]  pairwise Gram matrix G Gᵀ (pairwise distances
+                       d²_ij = S_ii + S_jj − 2 S_ij derive from it)
+
+  Every statistic is additive over disjoint dimension ranges, so a
+  layout may compute it per leaf / per shard and sum (and, for the
+  ``a2a`` layout, ``psum``) the partials.
+
+* ``select`` — replicated rule ``(stats, cfg, m) -> (weights [m] f32,
+  state | None)``.  Runs on [m]-/[m,m]-sized inputs only, identically on
+  every device.  The engine then emits the weighted row combine
+  ``Σ_i w_i g_i / Σ_i w_i`` in whatever layout is active.
+
+* ``column`` — per-dimension rule ``(G [m, cols], cfg, m, **kw) ->
+  [cols]`` for aggregators that are a pure map over dimensions (e.g.
+  coordinate-wise median / trimmed mean).  Needs no replicated phase at
+  all: each device applies it to the worker values it holds.
+
+Adding an aggregator is one :func:`register` call — it is then
+automatically available in all three layouts, to ``benchmarks/`` and to
+``training/step.py``.
+
+Layouts
+-------
+``local``   single-host worker-gradient matrix G [m, d] (the paper's
+            experimental setting; Pallas kernels when on TPU).
+``gather``  inside shard_map: all_gather per leaf over the worker axes
+            — every device redundantly holds all m workers' values for
+            the dims it owns (m× transient memory; paper-faithful
+            "master collects G").
+``a2a``     inside shard_map: flatten, zero-pad to m·⌈D/m⌉, all_to_all
+            — each device owns ALL workers for 1/m of the dims (1×
+            transient memory); per-worker stats finish with one psum of
+            [m]-vectors, the aggregated chunk is re-assembled with a
+            tiled all_gather.  Zero-pad columns contribute +1 per
+            worker to ``scores`` (subtracted globally) and 0 to every
+            other statistic.
+
+All layouts share :func:`leaf_stats` — the per-leaf statistics math is
+written exactly once.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, replace
+from functools import partial
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..compat import axis_size
+from ..configs.base import ByzantineConfig
+from ..kernels import ops, ref
+
+STAT_NAMES = ("scores", "l1", "d2med", "gram")
+
+GEOMEDIAN_ITERS = 16
+GEOMEDIAN_EPS = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# BrSGD selection (paper Algorithm 2) — the replicated phase
+# ---------------------------------------------------------------------------
+
+class SelectionState(NamedTuple):
+    """Generic diagnostics for select-rule aggregators that have no
+    richer state of their own (krum: one row; multi_krum: m-f rows;
+    geomedian: all rows, continuously weighted).  ``selected`` feeds
+    the training loop's n_selected metric."""
+    selected: jax.Array     # [m] bool — rows with nonzero combine weight
+    weights: jax.Array      # [m] f32 — the combine weights
+
+
+class BrSGDState(NamedTuple):
+    """Diagnostics of one aggregation call (useful for tests/monitoring)."""
+    selected: jax.Array     # [m] bool — C1 ∩ C2 (after fallback)
+    c1: jax.Array           # [m] bool — l1 filter
+    c2: jax.Array           # [m] bool — top-beta score filter
+    scores: jax.Array       # [m]
+    l1: jax.Array           # [m]
+    threshold: jax.Array    # resolved 𝔗
+
+
+def brsgd_select(scores, l1, beta: float, threshold: float) -> BrSGDState:
+    """Constraint 1 (ℓ1 ≤ 2𝔗) ∩ Constraint 2 (top-β by score).
+
+    threshold <= 0 selects the auto rule 𝔗 = lower-quartile_i(l1_i):
+    under honest majority (α < 1/2) the 25th percentile of the l1
+    distances is attained by an honest worker, and — unlike the median —
+    it stays honest at the paper's boundary setting α = 1/2, where the
+    per-dimension majority tie-break alone is adversarially exploitable
+    (an attacker cluster of exactly m/2 identical rows wins every tie on
+    dimensions whose honest gradient sum has the right sign).  2𝔗 then
+    covers the honest concentration radius (Assumption 1) while the
+    Byzantine cluster's l1 — inflated by its own distance to the honest
+    median — is rejected.
+    """
+    sel, c1, c2, T = ref.brsgd_select_mask(scores, l1, beta, threshold)
+    return BrSGDState(sel, c1, c2, scores, l1, T)
+
+
+# ---------------------------------------------------------------------------
+# per-leaf statistics — written ONCE, used by every layout
+# ---------------------------------------------------------------------------
+
+def leaf_stats(G, needs, m: int) -> dict:
+    """Partial statistics of one worker-major view G [m, cols] (f32).
+
+    G may be a full local matrix, a gathered leaf, or an all_to_all
+    chunk — the returned partials are additive over the column ranges
+    the views cover (psum over workers completes the a2a layout).
+    """
+    out = {}
+    if "scores" in needs:
+        mean_c = jnp.mean(G, axis=0, keepdims=True)
+        above = G >= mean_c
+        n_above = jnp.sum(above.astype(jnp.int32), axis=0, keepdims=True)
+        M = jnp.where(n_above * 2 >= m, above, ~above)
+        out["scores"] = jnp.sum(M.astype(jnp.float32), axis=1)
+    if "l1" in needs or "d2med" in needs:
+        diff = G - jnp.median(G, axis=0)[None]
+        if "l1" in needs:
+            out["l1"] = jnp.sum(jnp.abs(diff), axis=1)
+        if "d2med" in needs:
+            out["d2med"] = jnp.sum(diff * diff, axis=1)
+    if "gram" in needs:
+        out["gram"] = G @ G.T
+    return out
+
+
+def pad_correction(stats: dict, pad) -> dict:
+    """Remove the zero-pad columns' contribution (a2a layout).
+
+    A zero column means every worker ties at the column mean, so the
+    whole column is "majority": +1 score per worker per pad column.
+    Median/l1/d2med/gram of zero columns are exactly zero.
+    """
+    if "scores" in stats and pad:
+        stats = dict(stats)
+        stats["scores"] = stats["scores"] - pad
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# aggregator registry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AggregatorSpec:
+    """Layout-independent description of one aggregation rule."""
+    name: str
+    stats: frozenset = frozenset()
+    select: Optional[Callable] = None   # (stats, cfg, m) -> (w [m], state)
+    column: Optional[Callable] = None   # (G [m,cols], cfg, m, **kw) -> [cols]
+
+    def __post_init__(self):
+        if (self.select is None) == (self.column is None):
+            raise ValueError(
+                f"{self.name}: exactly one of select/column must be set")
+        unknown = set(self.stats) - set(STAT_NAMES)
+        if unknown:
+            raise ValueError(f"{self.name}: unknown stats {sorted(unknown)}")
+
+
+_REGISTRY: dict[str, AggregatorSpec] = {}
+
+
+def register(spec: AggregatorSpec) -> AggregatorSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_spec(name: str) -> AggregatorSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown aggregator {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}") from None
+
+
+def registered() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---- selection rules -------------------------------------------------------
+
+def _ones_select(stats, cfg, m):
+    return jnp.ones((m,), jnp.float32), None
+
+
+def _brsgd_select_rule(stats, cfg, m):
+    st = brsgd_select(stats["scores"], stats["l1"], cfg.beta, cfg.threshold)
+    return st.selected.astype(jnp.float32), st
+
+
+def _krum_f(cfg, m: int) -> int:
+    return cfg.krum_f if cfg.krum_f > 0 else max(1, int(cfg.alpha * m))
+
+
+def _krum_scores(gram, cfg, m: int):
+    """Krum score_i = Σ of the m-f-2 smallest d²_ij, from the Gram matrix."""
+    n_close = max(1, m - _krum_f(cfg, m) - 2)
+    diag = jnp.diagonal(gram)
+    d2 = diag[:, None] + diag[None, :] - 2.0 * gram
+    d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf))
+    return jnp.sum(jnp.sort(d2, axis=1)[:, :n_close], axis=1)
+
+
+def _krum_select(stats, cfg, m):
+    score = _krum_scores(stats["gram"], cfg, m)
+    return jax.nn.one_hot(jnp.argmin(score), m, dtype=jnp.float32), None
+
+
+def _multi_krum_select(stats, cfg, m, n_select: int = 0):
+    score = _krum_scores(stats["gram"], cfg, m)
+    k = min(m, n_select or max(1, m - _krum_f(cfg, m)))
+    best = jnp.argsort(score)[:k]
+    return jnp.zeros((m,), jnp.float32).at[best].set(1.0), None
+
+
+def _geomedian_select(stats, cfg, m, iters: int = GEOMEDIAN_ITERS,
+                      eps: float = GEOMEDIAN_EPS):
+    """Weiszfeld in weight space: z_t is always a row combination
+    Σ w_i g_i / Σ w_i, so distances to it derive from the Gram matrix
+    (‖g_i − z‖² = S_ii − 2(Sw)_i/W + wᵀSw/W²) — no per-dimension state
+    crosses workers after the one-time stats pass.
+
+    Initialized at the coordinate-wise median (via the ``d2med`` stat) —
+    starting from the MEAN under a scale-1e10 attack leaves Weiszfeld in
+    the flat far-field where all distances (hence weights) are equal.
+    """
+    S = stats["gram"]
+    diag = jnp.diagonal(S)
+    w = 1.0 / jnp.maximum(jnp.sqrt(stats["d2med"]), eps)
+
+    def step(w, _):
+        W = jnp.sum(w)
+        Sw = S @ w
+        d2 = diag - 2.0 * Sw / W + (w @ Sw) / (W * W)
+        return 1.0 / jnp.maximum(jnp.sqrt(jnp.maximum(d2, 0.0)), eps), None
+
+    w, _ = jax.lax.scan(step, w, None, length=max(iters - 1, 0))
+    return w, None
+
+
+# ---- per-dimension (column) rules ------------------------------------------
+
+def _median_column(G, cfg, m, **kw):
+    return ops.cwise_median(G, **kw)
+
+
+def _trimmed_mean_column(G, cfg, m, **kw):
+    return ops.trimmed_mean(G, trim_frac=cfg.trim_frac, **kw)
+
+
+# ---- registry entries (the 7 shipped rules) --------------------------------
+
+register(AggregatorSpec("mean", select=_ones_select))
+register(AggregatorSpec("median", column=_median_column))
+register(AggregatorSpec("trimmed_mean", column=_trimmed_mean_column))
+register(AggregatorSpec("krum", stats=frozenset({"gram"}),
+                        select=_krum_select))
+register(AggregatorSpec("multi_krum", stats=frozenset({"gram"}),
+                        select=_multi_krum_select))
+register(AggregatorSpec("geomedian", stats=frozenset({"gram", "d2med"}),
+                        select=_geomedian_select))
+register(AggregatorSpec("brsgd", stats=frozenset({"scores", "l1"}),
+                        select=_brsgd_select_rule))
+
+
+def spec_with(name: str, **select_kwargs) -> AggregatorSpec:
+    """Spec variant with extra keyword arguments bound into its select
+    rule (e.g. multi_krum n_select, geomedian iters/eps)."""
+    spec = get_spec(name)
+    return replace(spec, select=partial(spec.select, **select_kwargs))
+
+
+# ---------------------------------------------------------------------------
+# local executor — single-host G [m, d]
+# ---------------------------------------------------------------------------
+
+def _combine_rows(G, w, use_pallas: bool, d_blk: int):
+    """Σ_i w_i g_i / Σ_i w_i.  The jnp path accumulates rows in a fixed
+    sequential order (ref.masked_mean_det) so results are reproducible
+    and mean-degenerate cases are bit-exact; the Pallas path streams G
+    through VMEM once."""
+    if use_pallas:
+        return ops.masked_mean(G, w, use_pallas=True, d_blk=d_blk)
+    return ref.masked_mean_det(G.astype(jnp.float32), w)
+
+
+def aggregate_local(G, cfg: ByzantineConfig, use_pallas: bool | None = None,
+                    return_state: bool = False,
+                    spec: AggregatorSpec | None = None, d_blk: int = 2048):
+    """Run one aggregator on the worker-gradient matrix G [m, d] -> [d]."""
+    spec = spec or get_spec(cfg.aggregator)
+    m = G.shape[0]
+    kw = {} if use_pallas is None else {"use_pallas": use_pallas}
+    if spec.column is not None:
+        out = spec.column(G, cfg, m, **kw)
+        return (out, None) if return_state else out
+
+    up = ops.default_use_pallas() if use_pallas is None else use_pallas
+    if spec.name == "brsgd" and up:
+        # fused fast path: pass 1 emits only the [m] partials (no [d]
+        # median/mean HBM writes), pass 2 fuses selection + masked mean
+        # — G is streamed from HBM exactly twice.
+        scores, l1 = ops.brsgd_partials(G, use_pallas=True, d_blk=d_blk)
+        agg, _w = ops.brsgd_select_mean(G, scores, l1, cfg.beta,
+                                        cfg.threshold, use_pallas=True,
+                                        d_blk=d_blk)
+        if return_state:
+            return agg, brsgd_select(scores, l1, cfg.beta, cfg.threshold)
+        return agg
+
+    stats = leaf_stats(G.astype(jnp.float32), spec.stats, m)
+    w, st = spec.select(stats, cfg, m)
+    agg = _combine_rows(G, w, up, d_blk)
+    if return_state and st is None:
+        st = SelectionState(w > 0, w)
+    return (agg, st) if return_state else agg
+
+
+# ---------------------------------------------------------------------------
+# sharded executors — inside shard_map over the worker axes
+# ---------------------------------------------------------------------------
+
+def _gather_leaf(g, axes, m: int):
+    """all_gather one leaf and flatten to worker-major [m, cols] f32.
+    The collective moves the leaf in its own dtype (§Perf); statistics
+    upcast locally."""
+    G = jax.lax.optimization_barrier(jax.lax.all_gather(g, axes))
+    return G.astype(jnp.float32).reshape(m, -1)
+
+
+def _a2a_chunk(g, axes, m: int):
+    """Flatten one leaf, zero-pad to m·⌈D/m⌉, all_to_all over the worker
+    axes -> ([m, ⌈D/m⌉] f32 chunk where row r is worker r's values for
+    this device's dim range, n_pad_columns).  The wire moves the leaf's
+    own dtype; stats upcast locally (§Perf)."""
+    flat = g.reshape(-1)
+    D = flat.shape[0]
+    c = math.ceil(D / m)
+    x = jnp.pad(flat, (0, m * c - D)).reshape(m, c)
+    Gc = jax.lax.optimization_barrier(
+        jax.lax.all_to_all(x, axes, split_axis=0, concat_axis=0,
+                           tiled=False)).astype(jnp.float32)
+    return Gc, m * c - D
+
+
+def _unchunk(vec, g, axes):
+    """Re-assemble a per-device [⌈D/m⌉] result into the leaf's shape with
+    a tiled all_gather, re-replicating in the gradient's own dtype
+    (§Perf)."""
+    full = jax.lax.all_gather(vec.astype(g.dtype), axes, tiled=True)
+    return full[:g.size].reshape(g.shape)
+
+
+def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
+                      layout: str = "gather",
+                      spec: AggregatorSpec | None = None,
+                      allow_fast_paths: bool = True):
+    """Aggregate a gradient pytree across the worker mesh axes.
+
+    Must be called inside a shard_map whose manual axes include ``axes``.
+    Returns (aggregated pytree — identical on every worker, state | None).
+    Any registered aggregator runs in either layout; see the module
+    docstring for the layout semantics.
+    """
+    if layout not in ("gather", "a2a"):
+        raise ValueError(f"unknown layout {layout!r}")
+    spec = spec or get_spec(cfg.aggregator)
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    m = axis_size(axes)
+    leaves, tdef = jax.tree.flatten(grads)
+
+    if spec.name == "mean" and allow_fast_paths:
+        # uniform weights == plain pmean: skip the gather/a2a machinery
+        return jax.tree.unflatten(
+            tdef, [jax.lax.pmean(g, axes) for g in leaves]), None
+
+    # -- per-dimension rules: no replicated phase at all ----------------
+    if spec.column is not None:
+        out = []
+        for g in leaves:
+            if layout == "a2a":
+                Gc, _pad = _a2a_chunk(g, axes, m)
+                out.append(_unchunk(spec.column(Gc, cfg, m), g, axes))
+            else:
+                col = spec.column(_gather_leaf(g, axes, m), cfg, m)
+                out.append(col.astype(g.dtype).reshape(g.shape))
+        return jax.tree.unflatten(tdef, out), None
+
+    # -- phase 1: per-leaf stats partials -------------------------------
+    stats = {k: jnp.zeros((m, m) if k == "gram" else (m,), jnp.float32)
+             for k in spec.stats}
+    cached, total_pad = [], 0
+    for g in leaves:
+        if layout == "a2a":
+            Gv, pad = _a2a_chunk(g, axes, m)
+            total_pad += pad
+        else:
+            Gv = _gather_leaf(g, axes, m)
+        cached.append(Gv)
+        part = leaf_stats(Gv, spec.stats, m)
+        stats = {k: stats[k] + part[k] for k in stats}
+    if layout == "a2a" and stats:
+        stats = jax.lax.psum(stats, axes)
+        stats = pad_correction(stats, total_pad)
+
+    # -- phase 2: replicated selection + weighted combine ---------------
+    w, st = spec.select(stats, cfg, m)
+    if st is None:
+        st = SelectionState(w > 0, w)
+    sw = jnp.sum(w)
+    denom = jnp.where(sw > 0, sw, 1.0)
+    out = []
+    if layout == "a2a":
+        for g, Gv in zip(leaves, cached):
+            out.append(_unchunk(jnp.tensordot(w, Gv, axes=1) / denom, g, axes))
+        # stop XLA hoisting the optimizer's f32 upcast back across the
+        # all_gather (it would re-widen the wire to f32)
+        out = list(jax.lax.optimization_barrier(tuple(out)))
+    else:
+        for g, Gv in zip(leaves, cached):
+            agg = jnp.tensordot(w, Gv, axes=([0], [0])) / denom
+            out.append(agg.astype(g.dtype).reshape(g.shape))
+    return jax.tree.unflatten(tdef, out), st

@@ -1,2 +1,3 @@
-from .ops import brsgd_stats, cwise_median, masked_mean
+from .ops import (brsgd_partials, brsgd_select_mean, brsgd_stats,
+                  cwise_median, masked_mean, trimmed_mean)
 from . import ref

@@ -1,18 +1,33 @@
-"""Pallas TPU kernel: fused BrSGD aggregation statistics.
+"""Pallas TPU kernels: fused BrSGD aggregation statistics + combine.
 
 The aggregation is memory-bound (O(1) FLOP per byte of G), so the win
-on TPU is reading G from HBM ONCE and producing all per-column /
-per-worker statistics in a single pass:
+on TPU is minimizing HBM traffic over G.  Kernels here:
 
-  * column mean                       a_c           [d]
-  * coordinate-wise median            g_med         [d]
-  * majority-score partial sums       s_i (partial) [grid, m]
-  * l1-distance-to-median partials    l1_i(partial) [grid, m]
+* ``brsgd_stats_pallas``      one pass producing column mean [d],
+                              coordinate-wise median [d], majority-score
+                              partials and l1 partials [grid, m].
+* ``brsgd_partials_pallas``   the same pass emitting ONLY the [grid, m]
+                              score/l1 partials — no [d]-sized median/
+                              mean HBM writes.  First pass of the fused
+                              BrSGD path.
+* ``select_mean_pallas``      second pass fusing the C1∩C2 selection
+                              (recomputed per grid step from the [m]
+                              score/l1 vectors — trivially cheap) with
+                              the masked-mean row combine.  With the
+                              partials pass, local BrSGD streams G from
+                              HBM exactly twice and never round-trips a
+                              [d]-sized intermediate (the seed path made
+                              three d-sized HBM traversals: stats read
+                              of G + median/mean writes, then the
+                              masked-mean read).
+* ``masked_mean_pallas``      standalone masked/weighted row mean.
+* ``trimmed_mean_pallas``     coordinate-wise trimmed mean via the same
+                              bitonic sorting network.
 
 Tiling: grid over d; each step loads a (m, d_blk) tile into VMEM
 (m <= 64 workers is a compile-time constant; d_blk default 2048 →
-m*d_blk*4B = 512 KiB << 16 MiB VMEM).  The median uses a bitonic
-sorting network over the (padded pow2) worker axis — static
+m*d_blk*4B = 512 KiB << 16 MiB VMEM).  The median/trim sort uses a
+bitonic network over the (padded pow2) worker axis — static
 compare-exchange stages of jnp.minimum/maximum, MXU-free, fully
 vectorized over the d_blk lanes.
 
@@ -27,6 +42,8 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from . import ref
 
 
 def _bitonic_stages(n: int):
@@ -62,42 +79,69 @@ def _sorted_rows(x, m: int):
     return rows
 
 
-def _stats_kernel(g_ref, med_ref, mean_ref, score_ref, l1_ref, *, m: int):
-    g = g_ref[...].astype(jnp.float32)                       # [m, d_blk]
-    d_blk = g.shape[1]
-    # ---- column mean & majority score ----
+def _pad_pow2(g, m: int):
+    """Pad the worker axis to the next power of two with +inf."""
+    mp = 1 << max(1, math.ceil(math.log2(m)))
+    if mp > m:
+        pad = jnp.full((mp - m, g.shape[1]), jnp.inf, jnp.float32)
+        return jnp.concatenate([g, pad], axis=0)
+    return g
+
+
+def _majority_scores(g, m: int):
+    """(column mean [d_blk], per-worker majority-score partials [m])."""
     mean_c = jnp.sum(g, axis=0, keepdims=True) / m           # [1, d_blk]
     above = g >= mean_c
     n_above = jnp.sum(above.astype(jnp.int32), axis=0, keepdims=True)
     majority_is_above = (n_above * 2) >= m
     M = jnp.where(majority_is_above, above, ~above)
-    score_ref[0, :] = jnp.sum(M.astype(jnp.float32), axis=1)
-    mean_ref[...] = mean_c[0]
-    # ---- median via bitonic network (pad workers to pow2 with +inf) ----
-    mp = 1 << max(1, math.ceil(math.log2(m)))
-    if mp > m:
-        pad = jnp.full((mp - m, d_blk), jnp.inf, jnp.float32)
-        gp = jnp.concatenate([g, pad], axis=0)
-    else:
-        gp = g
-    rows = _sorted_rows(gp, m)
-    med = rows[(m - 1) // 2] if m % 2 else 0.5 * (rows[m // 2 - 1] + rows[m // 2])
+    return mean_c[0], jnp.sum(M.astype(jnp.float32), axis=1)
+
+
+def _median_rows(g, m: int):
+    """Coordinate-wise median [d_blk] via the bitonic network."""
+    rows = _sorted_rows(_pad_pow2(g, m), m)
+    if m % 2:
+        return rows[(m - 1) // 2]
+    return 0.5 * (rows[m // 2 - 1] + rows[m // 2])
+
+
+def _stats_kernel(g_ref, med_ref, mean_ref, score_ref, l1_ref, *, m: int):
+    g = g_ref[...].astype(jnp.float32)                       # [m, d_blk]
+    mean_c, scores = _majority_scores(g, m)
+    mean_ref[...] = mean_c
+    score_ref[0, :] = scores
+    med = _median_rows(g, m)
     med_ref[...] = med
-    # ---- l1 partials ----
     l1_ref[0, :] = jnp.sum(jnp.abs(g - med[None, :]), axis=1)
+
+
+def _partials_kernel(g_ref, score_ref, l1_ref, *, m: int):
+    """Stats pass without the [d]-sized median/mean HBM writes."""
+    g = g_ref[...].astype(jnp.float32)                       # [m, d_blk]
+    _, scores = _majority_scores(g, m)
+    score_ref[0, :] = scores
+    med = _median_rows(g, m)
+    l1_ref[0, :] = jnp.sum(jnp.abs(g - med[None, :]), axis=1)
+
+
+def _pad_cols(G, d_blk: int):
+    """Zero-pad the dim axis to a multiple of d_blk.  A zero column's
+    median/mean is zero, its l1/trim contribution is zero, and its score
+    contribution is +1 for EVERY worker (all tie at the mean) — the
+    wrappers subtract that uniform offset."""
+    d = G.shape[1]
+    pad = (-d) % d_blk
+    if pad:
+        G = jnp.pad(G, ((0, 0), (0, pad)))
+    return G, pad
 
 
 def brsgd_stats_pallas(G, d_blk: int = 2048, interpret: bool = True):
     """G: [m, d] -> (median [d], mean [d], scores [m], l1 [m])."""
     m, d = G.shape
     d_blk = min(d_blk, d)
-    pad = (-d) % d_blk
-    if pad:
-        # pad columns with zeros: median/mean of a zero column is zero,
-        # the extra score/l1 contributions are constant across workers
-        # for score (all equal -> majority=everyone) and zero for l1 —
-        # score gets +pad for every worker, which we subtract below.
-        G = jnp.pad(G, ((0, 0), (0, pad)))
+    G, pad = _pad_cols(G, d_blk)
     dp = G.shape[1]
     grid = dp // d_blk
     kern = functools.partial(_stats_kernel, m=m)
@@ -126,6 +170,82 @@ def brsgd_stats_pallas(G, d_blk: int = 2048, interpret: bool = True):
     return med[:d], mean[:d], scores, l1
 
 
+def brsgd_partials_pallas(G, d_blk: int = 2048, interpret: bool = True):
+    """G: [m, d] -> (scores [m], l1 [m]) with no [d]-sized outputs."""
+    m, d = G.shape
+    d_blk = min(d_blk, d)
+    G, pad = _pad_cols(G, d_blk)
+    grid = G.shape[1] // d_blk
+    kern = functools.partial(_partials_kernel, m=m)
+    score_p, l1_p = pl.pallas_call(
+        kern,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((m, d_blk), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid, m), jnp.float32),
+            jax.ShapeDtypeStruct((grid, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(G)
+    scores = jnp.sum(score_p, axis=0)
+    if pad:
+        scores = scores - pad
+    return scores, jnp.sum(l1_p, axis=0)
+
+
+def _select_mean_kernel(g_ref, sl_ref, pr_ref, out_ref, w_ref, *, m: int):
+    """C1∩C2 selection (paper Alg. 2) + masked row sum, fused.
+
+    sl: [2, m] (scores; l1).  pr: [2] (kth score; 2·𝔗).  Recomputing the
+    [m]-sized selection per grid step costs nothing next to the (m,
+    d_blk) tile load and keeps the whole second phase in one kernel."""
+    g = g_ref[...].astype(jnp.float32)                       # [m, d_blk]
+    scores = sl_ref[0, :]
+    l1 = sl_ref[1, :]
+    c1 = l1 <= pr_ref[1]
+    c2 = scores >= pr_ref[0]
+    sel = jnp.logical_and(c1, c2)
+    sel = jnp.where(jnp.any(sel), sel, c2)    # C1∩C2 empty -> fall back to C2
+    w = sel.astype(jnp.float32)
+    w_ref[...] = w
+    out_ref[...] = w @ g
+
+
+def select_mean_pallas(G, scores, l1, beta: float, threshold,
+                       d_blk: int = 2048, interpret: bool = True):
+    """Fused second pass of local BrSGD: selection + masked mean.
+
+    Returns (aggregate [d], selection weights [m]).  Selection semantics
+    are identical to ``engine.brsgd_select`` (same IEEE comparisons on
+    the same inputs)."""
+    m, d = G.shape
+    d_blk = min(d_blk, d)
+    G, _pad = _pad_cols(G, d_blk)            # zero pad contributes 0 to w @ g
+    dp = G.shape[1]
+    kth, T = ref.brsgd_thresholds(scores, l1, beta, threshold)
+    sl = jnp.stack([scores, l1]).astype(jnp.float32)         # [2, m]
+    pr = jnp.stack([kth, 2.0 * T]).astype(jnp.float32)       # [2]
+    kern = functools.partial(_select_mean_kernel, m=m)
+    acc, w = pl.pallas_call(
+        kern,
+        grid=(dp // d_blk,),
+        in_specs=[pl.BlockSpec((m, d_blk), lambda i: (0, i)),
+                  pl.BlockSpec((2, m), lambda i: (0, 0)),
+                  pl.BlockSpec((2,), lambda i: (0,))],
+        out_specs=[pl.BlockSpec((d_blk,), lambda i: (i,)),
+                   pl.BlockSpec((m,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((dp,), jnp.float32),
+                   jax.ShapeDtypeStruct((m,), jnp.float32)],
+        interpret=interpret,
+    )(G, sl, pr)
+    sw = jnp.sum(w)
+    return acc[:d] / jnp.where(sw > 0, sw, 1.0), w
+
+
 def masked_mean_kernel(g_ref, w_ref, out_ref):
     g = g_ref[...].astype(jnp.float32)                       # [m, d_blk]
     w = w_ref[...].astype(jnp.float32)                       # [m]
@@ -133,12 +253,12 @@ def masked_mean_kernel(g_ref, w_ref, out_ref):
 
 
 def masked_mean_pallas(G, mask, d_blk: int = 2048, interpret: bool = True):
-    """Mean over selected rows.  mask: [m] bool."""
+    """Mean over selected rows.  mask: [m] bool, or f32 weights (the
+    engine's weighted combine) — the denominator is Σw, guarded to 1
+    when the mask is empty."""
     m, d = G.shape
     d_blk = min(d_blk, d)
-    pad = (-d) % d_blk
-    if pad:
-        G = jnp.pad(G, ((0, 0), (0, pad)))
+    G, _pad = _pad_cols(G, d_blk)
     dp = G.shape[1]
     w = mask.astype(jnp.float32)
     out = pl.pallas_call(
@@ -150,10 +270,43 @@ def masked_mean_pallas(G, mask, d_blk: int = 2048, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
         interpret=interpret,
     )(G, w)
-    return out[:d] / jnp.maximum(jnp.sum(w), 1.0)
+    sw = jnp.sum(w)
+    return out[:d] / jnp.where(sw > 0, sw, 1.0)
 
 
 def cwise_median_pallas(G, d_blk: int = 2048, interpret: bool = True):
     """Coordinate-wise median baseline (same bitonic machinery)."""
     med, _, _, _ = brsgd_stats_pallas(G, d_blk, interpret)
     return med
+
+
+def _trimmed_mean_kernel(g_ref, out_ref, *, m: int, k: int):
+    g = g_ref[...].astype(jnp.float32)                       # [m, d_blk]
+    rows = _sorted_rows(_pad_pow2(g, m), m)                  # +inf pad sorts last
+    acc = rows[k]
+    for i in range(k + 1, m - k):
+        acc = acc + rows[i]
+    out_ref[...] = acc / (m - 2 * k)
+
+
+def trimmed_mean_pallas(G, trim_frac: float, d_blk: int = 2048,
+                        interpret: bool = True):
+    """Coordinate-wise trimmed mean (Yin et al. 2018): drop the k
+    smallest and k largest per dimension, k = ⌊trim_frac·m⌋."""
+    m, d = G.shape
+    k = int(trim_frac * m)
+    if 2 * k >= m:                      # degenerate trim: median-like guard
+        k = (m - 1) // 2
+    d_blk = min(d_blk, d)
+    G, _pad = _pad_cols(G, d_blk)       # zero columns trim to 0, sliced off
+    dp = G.shape[1]
+    kern = functools.partial(_trimmed_mean_kernel, m=m, k=k)
+    out = pl.pallas_call(
+        kern,
+        grid=(dp // d_blk,),
+        in_specs=[pl.BlockSpec((m, d_blk), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((d_blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
+        interpret=interpret,
+    )(G)
+    return out[:d]

@@ -13,7 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
-from .brsgd_stats import brsgd_stats_pallas, cwise_median_pallas, masked_mean_pallas
+from .brsgd_stats import (brsgd_partials_pallas, brsgd_stats_pallas,
+                          cwise_median_pallas, masked_mean_pallas,
+                          select_mean_pallas, trimmed_mean_pallas)
 
 _BACKEND = jax.default_backend()
 _INTERPRET = _BACKEND != "tpu"
@@ -21,6 +23,11 @@ _INTERPRET = _BACKEND != "tpu"
 # compiled.  On CPU we default to the jnp reference for speed and keep
 # the interpret path exercised by the kernel test-suite.
 _USE_PALLAS_DEFAULT = _BACKEND == "tpu"
+
+
+def default_use_pallas() -> bool:
+    """Import-time kernel-vs-reference default (True iff on TPU)."""
+    return _USE_PALLAS_DEFAULT
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "d_blk"))
@@ -32,7 +39,35 @@ def brsgd_stats(G, use_pallas: bool = _USE_PALLAS_DEFAULT, d_blk: int = 2048):
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "d_blk"))
-def masked_mean(G, mask, use_pallas: bool = _USE_PALLAS_DEFAULT, d_blk: int = 2048):
+def brsgd_partials(G, use_pallas: bool = _USE_PALLAS_DEFAULT,
+                   d_blk: int = 2048):
+    """G [m,d] -> (scores [m], l1 [m]) — the stats pass without the
+    [d]-sized median/mean outputs (first pass of the fused BrSGD path)."""
+    if use_pallas:
+        return brsgd_partials_pallas(G, d_blk=d_blk, interpret=_INTERPRET)
+    med = ref.cwise_median_ref(G)
+    return ref.majority_score_ref(G), ref.l1_to_median_ref(G, med)
+
+
+@functools.partial(jax.jit, static_argnames=("beta", "use_pallas", "d_blk"))
+def brsgd_select_mean(G, scores, l1, beta: float, threshold,
+                      use_pallas: bool = _USE_PALLAS_DEFAULT,
+                      d_blk: int = 2048):
+    """Fused C1∩C2 selection + masked mean (second pass of the fused
+    BrSGD path).  Returns (aggregate [d], selection weights [m])."""
+    if use_pallas:
+        return select_mean_pallas(G, scores, l1, beta, threshold,
+                                  d_blk=d_blk, interpret=_INTERPRET)
+    # jnp fallback: the shared selection math + deterministic combine
+    sel, _, _, _ = ref.brsgd_select_mask(scores, l1, beta, threshold)
+    w = sel.astype(jnp.float32)
+    return ref.masked_mean_det(G, w), w
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "d_blk"))
+def masked_mean(G, mask, use_pallas: bool = _USE_PALLAS_DEFAULT,
+                d_blk: int = 2048):
+    """Masked (bool) or weighted (f32) row mean: Σ w_i g_i / Σ w_i."""
     if use_pallas:
         return masked_mean_pallas(G, mask, d_blk=d_blk, interpret=_INTERPRET)
     return ref.masked_mean_ref(G, mask)
@@ -43,3 +78,14 @@ def cwise_median(G, use_pallas: bool = _USE_PALLAS_DEFAULT, d_blk: int = 2048):
     if use_pallas:
         return cwise_median_pallas(G, d_blk=d_blk, interpret=_INTERPRET)
     return ref.cwise_median_ref(G)
+
+
+@functools.partial(jax.jit, static_argnames=("trim_frac", "use_pallas",
+                                             "d_blk"))
+def trimmed_mean(G, trim_frac: float, use_pallas: bool = _USE_PALLAS_DEFAULT,
+                 d_blk: int = 2048):
+    """Coordinate-wise trimmed mean (k = ⌊trim_frac·m⌋ per side)."""
+    if use_pallas:
+        return trimmed_mean_pallas(G, trim_frac, d_blk=d_blk,
+                                   interpret=_INTERPRET)
+    return ref.trimmed_mean_ref(G, trim_frac)

@@ -3,15 +3,44 @@
 These are the ground truth the Pallas kernels are validated against and
 the fallback implementation on non-TPU backends.  All operate on the
 gradient matrix ``G`` of shape [m, d] (m workers, d dimensions).
+
+Determinism note: ``column_mean_ref``/``masked_mean_det`` accumulate
+rows in a fixed sequential order (row 0, 1, …, m-1) and divide behind
+an optimization barrier.  Rationale: XLA is free to reassociate plain
+reduce-sums and to fold a constant divisor into a multiply-by-
+reciprocal; both perturb the result by ~1 ulp, which is a relative
+error of ~1e-4 on near-zero coordinates and broke the seed's
+mean-equivalence tests.  The sequential order matches NumPy's
+``np.add.reduce`` along axis 0, so ``mean`` is bit-identical to
+``np.mean(G, axis=0)`` and ``masked_mean_det`` with a full mask is
+bit-identical to ``mean``.  ``masked_mean_ref`` keeps the matvec form:
+it is the oracle for the (blockwise-accumulating) Pallas kernel, which
+is validated against it under tolerance.
 """
 from __future__ import annotations
+
+import math
 
 import jax
 import jax.numpy as jnp
 
 
+def det_sum_rows(G):
+    """Sequential f32 row sum (axis 0) — deterministic accumulation
+    order, bit-identical to NumPy's np.add.reduce(G, axis=0)."""
+    s, _ = jax.lax.scan(lambda c, r: (c + r, None), jnp.zeros_like(G[0]), G)
+    return s
+
+
+def _exact_div(x, den):
+    # the barrier stops XLA constant-folding the divisor into a
+    # multiply-by-reciprocal (which is ~1 ulp off true IEEE division)
+    return x / jax.lax.optimization_barrier(den)
+
+
 def column_mean_ref(G):
-    return jnp.mean(G.astype(jnp.float32), axis=0)
+    Gf = G.astype(jnp.float32)
+    return _exact_div(det_sum_rows(Gf), jnp.float32(Gf.shape[0]))
 
 
 def cwise_median_ref(G):
@@ -49,15 +78,58 @@ def brsgd_stats_ref(G):
 
 
 def masked_mean_ref(G, mask):
-    """Mean of the selected rows.  mask: [m] bool/float."""
+    """Mean of the selected rows (matvec form — Pallas kernel oracle).
+    mask: [m] bool/float; float weights give a weighted mean."""
     w = mask.astype(jnp.float32)
-    return (w @ G.astype(jnp.float32)) / jnp.maximum(jnp.sum(w), 1.0)
+    sw = jnp.sum(w)
+    return (w @ G.astype(jnp.float32)) / jnp.where(sw > 0, sw, 1.0)
+
+
+def masked_mean_det(G, mask):
+    """Weighted row mean with deterministic sequential accumulation (see
+    module docstring): full-mask output is bit-identical to
+    ``column_mean_ref``."""
+    Gf = G.astype(jnp.float32)
+    w = mask.astype(jnp.float32)
+    s, _ = jax.lax.scan(lambda c, wr: (c + wr[0] * wr[1], None),
+                        jnp.zeros_like(Gf[0]), (w, Gf))
+    sw = jnp.sum(w)
+    return _exact_div(s, jnp.where(sw > 0, sw, 1.0))
+
+
+def brsgd_thresholds(scores, l1, beta: float, threshold):
+    """Resolved C1/C2 cutoffs of paper Algorithm 2: (kth score, 𝔗).
+
+    This and ``brsgd_select_mask`` are the ONE copy of the selection
+    math — engine.brsgd_select, the fused Pallas wrapper and the jnp
+    fused fallback all stage through here (they live below the core
+    layer, so the kernels can share them without a circular import).
+    """
+    m = scores.shape[0]
+    k = max(1, math.ceil(beta * m))
+    kth = jnp.sort(scores)[m - k]
+    T = jnp.where(threshold > 0, threshold,
+                  jnp.quantile(l1, 0.25, method="nearest"))
+    return kth, T
+
+
+def brsgd_select_mask(scores, l1, beta: float, threshold):
+    """C1∩C2 with the empty-set fallback to C2.
+    Returns (selected, c1, c2, 𝔗) — all [m] bool except 𝔗."""
+    kth, T = brsgd_thresholds(scores, l1, beta, threshold)
+    c1 = l1 <= 2.0 * T
+    c2 = scores >= kth
+    sel = c1 & c2
+    sel = jnp.where(jnp.any(sel), sel, c2)
+    return sel, c1, c2, T
 
 
 def trimmed_mean_ref(G, trim_frac: float):
     """Coordinate-wise trimmed mean (Yin et al. 2018 baseline)."""
     m = G.shape[0]
     k = int(trim_frac * m)
+    if 2 * k >= m:                      # degenerate trim: median-like guard
+        k = (m - 1) // 2
     Gs = jnp.sort(G.astype(jnp.float32), axis=0)
     if k:
         Gs = Gs[k:m - k]

@@ -13,18 +13,16 @@ import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    import jax
-    from jax.sharding import AxisType
+    from ..compat import make_mesh as _make_mesh
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh with Auto axis types (tests use e.g. (4,2))."""
-    import jax
-    from jax.sharding import AxisType
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    from ..compat import make_mesh as _make_mesh
+    return _make_mesh(shape, axes)
 
 
 def worker_axes(mesh) -> Tuple[str, ...]:

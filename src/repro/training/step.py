@@ -5,7 +5,8 @@ stays auto) wraps gradient computation, Byzantine attack injection,
 robust aggregation, and the optimizer update:
 
   global scope  : per-worker full-gradient pytree -> robust_aggregate
-                  (paper-faithful; gather or a2a collective layout)
+                  (any aggregator registered in core.engine; gather or
+                  a2a collective layout)
   blocked scope : FSDP params + aggregation inside the backward scan
                   (core.blocked) — the >20B path.
 
@@ -22,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..configs.base import ByzantineConfig, ModelConfig, TrainConfig
 from ..core.blocked import make_fsdp_agg_barrier
 from ..core.distributed import inject_attack, robust_aggregate
@@ -118,7 +120,7 @@ def build_train_step(tcfg: TrainConfig, mesh) -> StepBundle:
     o_in = jax.tree.map(manual_only, ospecs, is_leaf=lambda x: isinstance(x, P))
     metric_spec = P()
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(p_in, o_in, bspecs, P(), P()),
              out_specs=(p_in, o_in, {"loss": metric_spec, "ce": metric_spec,
                                      "gnorm": metric_spec,

@@ -11,6 +11,7 @@ from conftest import run_multidevice
 COMMON = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
     from functools import partial
+    from repro.compat import P, shard_map
     from repro.configs.base import ByzantineConfig
     from repro.core import aggregators, attacks
     from repro.core.distributed import robust_aggregate, inject_attack
@@ -29,9 +30,9 @@ def test_shardmap_brsgd_equals_oracle():
         gs = {k: rng.normal(size=(m,) + s).astype("f4") for k, s in leaves.items()}
         bcfg = ByzantineConfig(aggregator="brsgd")
 
-        @partial(jax.shard_map, mesh=mesh,
-                 in_specs=({k: jax.P("data") for k in gs},),
-                 out_specs={k: jax.P() for k in gs}, check_vma=False)
+        @partial(shard_map, mesh=mesh,
+                 in_specs=({k: P("data") for k in gs},),
+                 out_specs={k: P() for k in gs})
         def agg(tree):
             local = {k: v.reshape(v.shape[1:]) for k, v in tree.items()}
             out, st = robust_aggregate(local, bcfg, ("data",), layout="gather")
@@ -56,9 +57,9 @@ def test_gather_and_a2a_layouts_identical():
         bcfg = ByzantineConfig(aggregator="brsgd")
 
         def run(layout):
-            @partial(jax.shard_map, mesh=mesh,
-                     in_specs=({k: jax.P("data") for k in gs},),
-                     out_specs={k: jax.P() for k in gs}, check_vma=False)
+            @partial(shard_map, mesh=mesh,
+                     in_specs=({k: P("data") for k in gs},),
+                     out_specs={k: P() for k in gs})
             def agg(tree):
                 local = {k: v.reshape(v.shape[1:]) for k, v in tree.items()}
                 return robust_aggregate(local, bcfg, ("data",), layout=layout)[0]
@@ -81,8 +82,8 @@ def test_distributed_attack_injection_matches_matrix_attack():
         for kind in ["scale", "sign_flip", "negation"]:
             bcfg = ByzantineConfig(attack=kind, alpha=0.25, attack_scale=7.0)
 
-            @partial(jax.shard_map, mesh=mesh, in_specs=(jax.P("data"), jax.P()),
-                     out_specs=jax.P("data"), check_vma=False)
+            @partial(shard_map, mesh=mesh, in_specs=(P("data"), P()),
+                     out_specs=P("data"))
             def inj(x, key):
                 local = {"g": x.reshape(x.shape[1:])}
                 out = inject_attack(local, key, bcfg, ("data",))
@@ -103,8 +104,8 @@ def test_median_aggregator_distributed():
         g = rng.normal(size=(m, 33)).astype("f4")
         bcfg = ByzantineConfig(aggregator="median")
         for layout in ("gather", "a2a"):
-            @partial(jax.shard_map, mesh=mesh, in_specs=(jax.P("data"),),
-                     out_specs=jax.P(), check_vma=False)
+            @partial(shard_map, mesh=mesh, in_specs=(P("data"),),
+                     out_specs=P())
             def agg(x):
                 return robust_aggregate({"g": x.reshape(x.shape[1:])},
                                         bcfg, ("data",), layout=layout)[0]["g"]

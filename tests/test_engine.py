@@ -1,0 +1,245 @@
+"""Layout-aware aggregation engine: registry contract + layout parity.
+
+The parity matrix runs every registered aggregator on a 2×2 CPU mesh
+(worker axes ("pod", "data"), m = 4) in both collective layouts and
+compares against the local [m, d] execution of the SAME registry entry.
+Leaf sizes are chosen so no leaf is divisible by m — every a2a transfer
+exercises the zero-pad score-correction path.
+"""
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_multidevice
+from repro.configs.base import ByzantineConfig
+from repro.core import aggregators as A
+from repro.core import engine
+
+# ---------------------------------------------------------------------------
+# registry contract (in-process)
+# ---------------------------------------------------------------------------
+
+
+def test_registry_covers_all_public_aggregators():
+    assert set(A.AGGREGATORS) == set(engine.registered())
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):        # neither select nor column
+        engine.AggregatorSpec("bad")
+    with pytest.raises(ValueError):        # both
+        engine.AggregatorSpec("bad", select=lambda *a: None,
+                              column=lambda *a: None)
+    with pytest.raises(ValueError):        # unknown stat
+        engine.AggregatorSpec("bad", stats=frozenset({"nope"}),
+                              select=lambda *a: None)
+    with pytest.raises(KeyError):
+        engine.get_spec("no_such_rule")
+
+
+def test_stats_declared_are_sufficient(rng):
+    """Each select rule runs from exactly its declared stats (no hidden
+    dependency on undeclared statistics)."""
+    m, d = 8, 40
+    G = jnp.asarray(rng.normal(size=(m, d)).astype("f4"))
+    cfg = ByzantineConfig(alpha=0.25)
+    for name in engine.registered():
+        spec = engine.get_spec(name)
+        if spec.select is None:
+            continue
+        stats = engine.leaf_stats(G, spec.stats, m)
+        assert set(stats) == set(spec.stats), name
+        w, _ = spec.select(stats, cfg, m)
+        assert w.shape == (m,)
+        assert float(jnp.sum(w)) > 0.0, name
+
+
+def test_leaf_stats_additive_over_column_splits(rng):
+    """Every statistic is additive over disjoint dim ranges — the
+    property the gather (per-leaf) and a2a (per-shard) layouts rely on."""
+    m, d = 10, 60
+    G = jnp.asarray(rng.normal(size=(m, d)).astype("f4"))
+    needs = frozenset(engine.STAT_NAMES)
+    whole = engine.leaf_stats(G, needs, m)
+    parts = [engine.leaf_stats(G[:, s], needs, m)
+             for s in (slice(0, 13), slice(13, 35), slice(35, 60))]
+    for k in needs:
+        summed = sum(p[k] for p in parts)
+        np.testing.assert_allclose(np.asarray(summed), np.asarray(whole[k]),
+                                   rtol=1e-5, atol=1e-4)
+    # scores are sums of 0/1 indicators: exactly equal, not just close
+    np.testing.assert_array_equal(
+        np.asarray(sum(p["scores"] for p in parts)),
+        np.asarray(whole["scores"]))
+
+
+def test_zero_pad_correction_matches_explicit_pad(rng):
+    """Appending zero columns (what the a2a layout does) shifts only the
+    scores, by exactly +pad per worker — pad_correction undoes it."""
+    m, d, pad = 6, 21, 5
+    G = jnp.asarray(rng.normal(size=(m, d)).astype("f4"))
+    Gp = jnp.pad(G, ((0, 0), (0, pad)))
+    needs = frozenset(engine.STAT_NAMES)
+    clean = engine.leaf_stats(G, needs, m)
+    padded = engine.pad_correction(engine.leaf_stats(Gp, needs, m), pad)
+    for k in needs:
+        np.testing.assert_allclose(np.asarray(padded[k]),
+                                   np.asarray(clean[k]), rtol=1e-5, atol=1e-5)
+
+
+def test_selection_state_reports_true_row_counts(rng):
+    """Non-brsgd select rules surface a SelectionState so the training
+    n_selected metric is truthful (krum uses exactly 1 row, multi_krum
+    m - f, geomedian weights every row)."""
+    m = 12
+    G = jnp.asarray(rng.normal(size=(m, 30)).astype("f4"))
+    cfg = ByzantineConfig(alpha=0.25)     # f = 3
+    for name, want in (("krum", 1), ("multi_krum", m - 3), ("geomedian", m)):
+        _, st = engine.aggregate_local(G, cfg, return_state=True,
+                                       spec=engine.get_spec(name))
+        assert isinstance(st, engine.SelectionState), name
+        assert int(jnp.sum(st.selected)) == want, name
+
+
+def test_multi_krum_n_select_override(rng):
+    m = 12
+    G = jnp.asarray(rng.normal(size=(m, 30)).astype("f4"))
+    cfg = ByzantineConfig(alpha=0.25)
+    out1 = A.multi_krum(G, cfg, n_select=1)
+    single = A.krum(G, cfg)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(single),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_weighted_combine_handles_float_weights(rng):
+    """The engine combine is a weighted mean (denominator Σw, not
+    max(Σw, 1)) so continuous selection rules like geomedian are exact."""
+    m, d = 5, 17
+    G = jnp.asarray(rng.normal(size=(m, d)).astype("f4"))
+    w = jnp.asarray(rng.random(m).astype("f4") * 0.1)    # Σw < 1
+    from repro.kernels import ref
+    want = (np.asarray(w) @ np.asarray(G)) / np.asarray(w).sum()
+    np.testing.assert_allclose(np.asarray(ref.masked_mean_det(G, w)), want,
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(ref.masked_mean_ref(G, w)), want,
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# layout parity on a 2×2 CPU mesh (subprocess, 4 host devices)
+# ---------------------------------------------------------------------------
+
+PARITY = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    from functools import partial
+    from repro.compat import P, shard_map
+    from repro.configs.base import ByzantineConfig
+    from repro.core import engine
+    from repro.core.aggregators import AGGREGATORS, aggregate
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((2, 2), ("pod", "data"))
+    axes = ("pod", "data")
+    m = 4
+    rng = np.random.default_rng(0)
+    # leaf numels 15, 9, 2: none divisible by m=4, so every a2a
+    # transfer zero-pads and the score correction must fire; leaf "c"
+    # (numel 2 < m) exercises the degenerate 1-column chunk.
+    gs = {"a": rng.normal(size=(m, 3, 5)).astype("f4"),
+          "b": rng.normal(size=(m, 9)).astype("f4"),
+          "c": rng.normal(size=(m, 2)).astype("f4")}
+    G = jnp.concatenate([jnp.asarray(v).reshape(m, -1)
+                         for v in gs.values()], axis=1)
+
+    def sharded(cfg, layout, fast):
+        @partial(shard_map, mesh=mesh,
+                 in_specs=({k: P(("pod", "data")) for k in gs},),
+                 out_specs=({k: P() for k in gs}, P()))
+        def agg(tree):
+            local = {k: v.reshape(v.shape[1:]) for k, v in tree.items()}
+            out, st = engine.aggregate_sharded(local, cfg, axes,
+                                               layout=layout,
+                                               allow_fast_paths=fast)
+            scores = getattr(st, "scores", None)
+            if scores is None:
+                scores = jnp.zeros((m,), jnp.float32)
+            return out, scores
+        out, scores = agg({k: jnp.asarray(v) for k, v in gs.items()})
+        flat = np.concatenate([np.asarray(out[k]).reshape(-1) for k in gs])
+        return flat, np.asarray(scores)
+""")
+
+
+def test_all_aggregators_layout_parity_2x2_mesh():
+    code = PARITY + textwrap.dedent("""
+        for name in AGGREGATORS:
+            cfg = ByzantineConfig(aggregator=name, alpha=0.25)
+            want = np.asarray(aggregate(G, cfg))
+            for layout in ("gather", "a2a"):
+                got, _ = sharded(cfg, layout, fast=False)
+                # geomedian's distributed Weiszfeld runs in Gram space —
+                # same fixed point, different rounding path
+                tol = 1e-3 if name == "geomedian" else 1e-5
+                np.testing.assert_allclose(got, want, rtol=1e-4, atol=tol,
+                                           err_msg=f"{name}/{layout}")
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code, n_devices=4)
+
+
+def test_brsgd_scores_integer_exact_across_layouts():
+    """Majority scores are sums of 0/1 indicators — every layout must
+    produce the SAME integers, including through the a2a zero-pad
+    correction (d % m != 0 on every leaf here)."""
+    code = PARITY + textwrap.dedent("""
+        cfg = ByzantineConfig(aggregator="brsgd")
+        from repro.core.aggregators import brsgd
+        _, st = brsgd(G, cfg, return_state=True)
+        want = np.asarray(st.scores)
+        assert (want == np.round(want)).all()
+        for layout in ("gather", "a2a"):
+            _, got = sharded(cfg, layout, fast=False)
+            np.testing.assert_array_equal(got, want, err_msg=layout)
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code, n_devices=4)
+
+
+def test_mean_fast_path_matches_generic_engine():
+    code = PARITY + textwrap.dedent("""
+        cfg = ByzantineConfig(aggregator="mean")
+        want = np.asarray(aggregate(G, cfg))
+        for layout in ("gather", "a2a"):
+            slow, _ = sharded(cfg, layout, fast=False)
+            fast, _ = sharded(cfg, layout, fast=True)   # pmean
+            np.testing.assert_allclose(slow, want, rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(fast, want, rtol=1e-5, atol=1e-6)
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code, n_devices=4)
+
+
+def test_robust_aggregate_dispatches_every_aggregator():
+    """The public shard_map entry point (training/step.py path) accepts
+    all registered aggregators in both layouts — the seed supported 3."""
+    code = PARITY + textwrap.dedent("""
+        from repro.core.distributed import robust_aggregate
+        for name in AGGREGATORS:
+            cfg = ByzantineConfig(aggregator=name, alpha=0.25)
+            for layout in ("gather", "a2a"):
+                @partial(shard_map, mesh=mesh,
+                         in_specs=({k: P(("pod", "data")) for k in gs},),
+                         out_specs={k: P() for k in gs})
+                def agg(tree):
+                    local = {k: v.reshape(v.shape[1:])
+                             for k, v in tree.items()}
+                    return robust_aggregate(local, cfg, axes, layout)[0]
+                out = agg({k: jnp.asarray(v) for k, v in gs.items()})
+                for k, v in gs.items():
+                    assert out[k].shape == v.shape[1:], (name, layout, k)
+                    assert bool(jnp.isfinite(out[k]).all()), (name, layout, k)
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code, n_devices=4)

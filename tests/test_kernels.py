@@ -6,8 +6,12 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.brsgd_stats import (brsgd_stats_pallas, cwise_median_pallas,
-                                       masked_mean_pallas)
+from repro.kernels.brsgd_stats import (brsgd_partials_pallas,
+                                       brsgd_stats_pallas,
+                                       cwise_median_pallas,
+                                       masked_mean_pallas,
+                                       select_mean_pallas,
+                                       trimmed_mean_pallas)
 
 SHAPES = [(4, 64), (8, 100), (20, 257), (20, 2048), (32, 5000), (7, 33),
           (64, 128), (3, 1)]
@@ -136,6 +140,57 @@ def test_flash_attention_bf16_and_blocking_invariance():
         np.testing.assert_allclose(np.asarray(out, np.float32),
                                    np.asarray(ref, np.float32),
                                    rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("m,d", [(8, 100), (20, 257), (7, 33), (64, 128)])
+def test_brsgd_partials_kernel_matches_stats_kernel(m, d):
+    """The [d]-output-free partials pass == the full stats pass."""
+    rng = np.random.default_rng(m * 7 + d)
+    G = jnp.asarray((rng.normal(size=(m, d)) * 2).astype("f4"))
+    _, _, sc_full, l1_full = brsgd_stats_pallas(G, d_blk=64)
+    sc, l1 = brsgd_partials_pallas(G, d_blk=64)
+    np.testing.assert_array_equal(np.asarray(sc), np.asarray(sc_full))
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l1_full),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("beta,threshold", [(0.5, 0.0), (0.25, 0.0),
+                                            (1.0, 1e9), (0.5, 1e-8)])
+def test_select_mean_kernel_matches_two_pass(beta, threshold):
+    """Fused select+masked-mean pass == brsgd_select + masked_mean,
+    including the empty-C1∩C2 fallback (threshold 1e-8)."""
+    from repro.core.engine import brsgd_select
+    rng = np.random.default_rng(int(beta * 100))
+    G = jnp.asarray(rng.normal(size=(16, 700)).astype("f4"))
+    scores, l1 = brsgd_partials_pallas(G, d_blk=256)
+    agg, w = select_mean_pallas(G, scores, l1, beta, threshold, d_blk=256)
+    st = brsgd_select(scores, l1, beta, threshold)
+    np.testing.assert_array_equal(np.asarray(w),
+                                  np.asarray(st.selected, np.float32))
+    want = masked_mean_pallas(G, st.selected, d_blk=256)
+    np.testing.assert_allclose(np.asarray(agg), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("m,d", [(8, 100), (20, 257), (7, 33), (10, 64)])
+@pytest.mark.parametrize("trim_frac", [0.0, 0.1, 0.25, 0.45])
+def test_trimmed_mean_kernel_vs_ref(m, d, trim_frac):
+    rng = np.random.default_rng(m + d)
+    G = jnp.asarray((rng.normal(size=(m, d)) * 3).astype("f4"))
+    out = trimmed_mean_pallas(G, trim_frac, d_blk=64)   # forces padding
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.trimmed_mean_ref(G, trim_frac)),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_masked_mean_float_weights():
+    """The kernel accepts continuous weights (engine weighted combine)."""
+    rng = np.random.default_rng(5)
+    G = jnp.asarray(rng.normal(size=(6, 90)).astype("f4"))
+    w = jnp.asarray(rng.random(6).astype("f4") * 0.2)    # Σw < 1
+    out = masked_mean_pallas(G, w, d_blk=32)
+    want = (np.asarray(w) @ np.asarray(G)) / np.asarray(w).sum()
+    np.testing.assert_allclose(np.asarray(out), want, rtol=1e-5, atol=1e-6)
 
 
 def test_score_constant_column_counts_everyone():

@@ -1,7 +1,14 @@
-"""Property-based tests (hypothesis) on the aggregation invariants."""
+"""Property-based tests (hypothesis) on the aggregation invariants.
+
+hypothesis is an optional test dependency (requirements-test.txt); the
+module skips cleanly where it is not installed instead of breaking
+collection for the whole suite."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 from hypothesis.extra import numpy as hnp
 
