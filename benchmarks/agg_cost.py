@@ -2,9 +2,10 @@
 O(m²(d + log m)); coordinate-wise median via sort is O(dm log m).
 
 We time every registered aggregator over a grid of (m, d) in the
-``local`` layout, plus every (aggregator × {gather, a2a}) pair under
-shard_map on an 8-device host mesh (subprocess — the main process
-keeps the real device).  Raw wall-times are printed as CSV, the
+``local`` layout, plus every (aggregator × {gather, a2a, blocked}) pair
+under shard_map on an 8-device host mesh (subprocess — the main process
+keeps the real device); ``blocked`` is the FSDP in-backward bucket path
+(core.blocked) timed on one FSDP-sharded bucket.  Raw wall-times are printed as CSV, the
 scaling exponents are fitted (brsgd ~ m^a d^b with a ~ 1, b ~ 1; krum
 grows ~ m² at fixed d), and every row is emitted to ``BENCH_agg.json``
 at the repo root so the perf trajectory of the fused select+masked-mean
@@ -57,6 +58,9 @@ _DIST_SNIPPET = textwrap.dedent("""
             ts.append(time.perf_counter() - t0)
         return float(np.median(ts) * 1e6)
 
+    from repro.core.blocked import _bucket_aggregate
+    bspecs = {"g": P("data")}
+
     rows = []
     for name in %r:
         cfg = ByzantineConfig(aggregator=name, alpha=0.25)
@@ -70,6 +74,18 @@ _DIST_SNIPPET = textwrap.dedent("""
             us = bench(agg, g)
             rows.append({"aggregator": name, "layout": layout,
                          "m": m, "d": d, "us_per_call": us})
+
+        # blocked scope: the FSDP in-backward bucket path, one bucket of
+        # one [d] leaf sharded over the workers (output = local shard)
+        @jax.jit
+        @partial(shard_map, mesh=mesh, in_specs=(P("data"),),
+                 out_specs=P("data"))
+        def bagg(x):
+            local = {"g": x.reshape(x.shape[1:])}
+            return _bucket_aggregate(local, bspecs, cfg, ("data",))[0]["g"]
+        us = bench(bagg, g)
+        rows.append({"aggregator": name, "layout": "blocked",
+                     "m": m, "d": d, "us_per_call": us})
     print("JSON:" + json.dumps(rows))
 """)
 

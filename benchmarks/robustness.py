@@ -17,12 +17,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ByzantineConfig
-from repro.core import aggregators, attacks
+from repro.core import aggregators, attacks, engine
 
 D, STEPS, LR, M, N = 20, 150, 0.3, 20, 400
 ATTACKS = ["gaussian", "negation", "scale", "sign_flip", "alie", "ipm"]
-AGGS = ["brsgd", "median", "trimmed_mean", "krum", "multi_krum",
-        "geomedian", "mean"]
+# every rule in the engine registry — brsgd first, the non-robust mean
+# baseline last, so the matrix never silently drops a new aggregator
+AGGS = ["brsgd"] + sorted(n for n in engine.registered()
+                          if n not in ("brsgd", "mean")) + ["mean"]
 
 
 def run(agg: str, attack: str, alpha: float = 0.25, seed: int = 0):

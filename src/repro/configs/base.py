@@ -177,9 +177,12 @@ class InputShape:
 class ByzantineConfig:
     """Robust-aggregation config — the paper's technique knobs."""
 
-    aggregator: str = "brsgd"     # mean | median | trimmed_mean | krum | brsgd
+    # any rule registered in core.engine: brsgd | mean | median |
+    # trimmed_mean | krum | multi_krum | geomedian — all of them run in
+    # both scopes (global and blocked) and both layouts.
+    aggregator: str = "brsgd"
     beta: float = 0.5             # kept fraction (paper: beta = 1/2)
-    threshold: float = 0.0        # 𝔗; 0.0 = auto (median of l1 distances)
+    threshold: float = 0.0        # 𝔗; 0.0 = auto (lower quartile of l1)
     trim_frac: float = 0.1        # trimmed_mean only
     krum_f: int = 0               # assumed byzantine count for krum; 0=auto
     # attack simulation (training-time fault injection for experiments)
@@ -208,6 +211,8 @@ class TrainConfig:
     #                      scan per layer-bucket (custom-VJP barrier) with
     #                      per-bucket selections; params are FSDP-sharded
     #                      over the worker axes.  Required for >20B archs.
+    #                      Any registered aggregator runs here (engine
+    #                      registry dispatch, see core/blocked.py).
     #          "auto"    — blocked iff param count > 20e9.
     agg_scope: str = "auto"
     #   layout "gather"  — master-collects-G baseline (all_gather over

@@ -1,14 +1,15 @@
-"""Blocked (streaming) BrSGD: robust aggregation inside the backward
-scan, with FSDP parameter gathering fused into the same barrier.
+"""Blocked (streaming) robust aggregation: every rule registered in
+``core.engine`` runs inside the backward scan, with FSDP parameter
+gathering fused into the same barrier.
 
 For >20B models the full per-worker gradient matrix G (m × params)
-cannot exist on any device set (deepseek-v2: m=32 × 472 GB).  The
-paper's per-dimension math is separable across dimensions, so we run
-Algorithm 2 per *bucket* (one transformer layer-stack slice, or the
-top-level embed/head bucket) with bucket-local C1∩C2 selections —
-aggregation happens the moment a layer's gradients are produced by the
-backward scan, and only one layer's worth of cross-worker state is ever
-live.
+cannot exist on any device set (deepseek-v2: m=32 × 472 GB).  Every
+statistic in the engine registry is additive over disjoint dimension
+ranges, so we run any registered aggregator per *bucket* (one
+transformer layer-stack slice, or the top-level embed/head bucket) with
+bucket-local selections — aggregation happens the moment a layer's
+gradients are produced by the backward scan, and only one layer's worth
+of cross-worker state is ever live.
 
 The mechanism is a ``jax.custom_vjp`` barrier applied to each scanned
 layer slice (see ``transformer.forward(param_hook=...)``):
@@ -16,20 +17,32 @@ layer slice (see ``transformer.forward(param_hook=...)``):
   forward :  p_full = all_gather(p_shard) over the worker axes
              (FSDP streaming — params live sharded over workers)
   backward:  g_full (this worker's layer gradient)
-             -> optional Byzantine attack injection
-             -> all_to_all workers×dims transpose along the FSDP dim
-             -> per-dim stats, per-bucket selection, masked mean
-             -> returns the aggregated gradient's local FSDP shard
+             -> optional Byzantine attack injection (per-bucket key,
+                see :func:`bucket_key`)
+             -> worker×dims all_to_all re-shard: FSDP leaves transpose
+                in place along their own sharded dim; replicated and
+                non-divisible (d % m != 0) leaves flatten through
+                ``engine.a2a_chunk`` with zero-padding, so EVERY leaf
+                stays on the 1×-memory a2a path (no all_gather
+                fallback; ``engine.pad_correction`` removes the pad
+                columns' score contribution)
+             -> ``engine.leaf_stats`` partials, one psum, the registry
+                ``select`` or ``column`` rule, weighted combine
+             -> returns the aggregated gradient's local FSDP shard,
+                plus the bucket's n_selected histogram on the selection
+                token's cotangent
 
-so the optimizer consumes already-aggregated, already-sharded grads.
-Deviation from the paper (documented in DESIGN.md): selections are
-per-bucket instead of global.  tests/test_blocked.py shows the
-robustness behaviour matches the global rule under all four attacks.
+so the optimizer consumes already-aggregated, already-sharded grads and
+the training loop reads truthful per-bucket selection counts.
+Deviation from the paper (documented in DESIGN.md §2): selections are
+per-bucket instead of global.  tests/test_blocked.py asserts
+blocked-vs-global parity for every registered aggregator (single
+bucket == global selection) and that the selection stays truthful
+under attack.
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Sequence
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +51,7 @@ from jax.sharding import PartitionSpec as P
 from ..compat import axis_size
 from ..configs.base import ByzantineConfig
 from ..models.params import shard_hint
-from .engine import brsgd_select
+from . import engine
 from .distributed import inject_attack
 
 
@@ -65,117 +78,170 @@ def _a2a_worker_view(g, dim: int, m: int):
     return g
 
 
+def _shard_view(g, spec: P, k: int, m: int, axes):
+    """In-place a2a worker view of one FSDP leaf: [..., d_k, ...] ->
+    f32 [..., m, d_k/m, ...] with the worker axis at ``k`` (no flatten,
+    no pad — the leaf's own sharded dim is split instead)."""
+    # §Perf: collectives move the gradient in ITS OWN dtype (bf16 for
+    # bf16 params — half the wire bytes); statistics upcast locally
+    # AFTER the optimization barrier, which stops XLA hoisting the f32
+    # convert to BEFORE the collective (that would double wire bytes).
+    x = _a2a_worker_view(g, k, m)
+    # keep the tensor-parallel ('model' etc.) sharding of the OTHER dims
+    # through the worker re-shard — without the hint XLA un-shards the
+    # auto axes around the manual all_to_all (a 16x all-gather of
+    # expert-sharded MoE grads)
+    vspec = []
+    for i, e in enumerate(spec):
+        ent = None if (e == tuple(axes) or e in axes
+                       or (isinstance(e, tuple)
+                           and set(e) & set(axes))) else e
+        vspec.extend([None, None] if i == k else [ent])
+    x = shard_hint(x, P(*vspec))
+    Gw = jax.lax.all_to_all(x, axes, split_axis=k, concat_axis=k,
+                            tiled=False)
+    Gw = jax.lax.optimization_barrier(Gw)
+    Gw = shard_hint(Gw, P(*vspec))
+    return Gw.astype(jnp.float32)
+
+
 def _bucket_aggregate(g_full, specs, bcfg: ByzantineConfig, axes):
-    """Aggregate one bucket of per-worker gradients.
+    """Aggregate one bucket of per-worker gradients via the engine
+    registry — any registered rule, not just brsgd/mean.
 
     g_full: pytree of this worker's gradients (full dims).
-    Returns the pytree of aggregated gradients in FSDP layout (leaves
-    with an FSDP dim come back as the local shard).
+    Returns ``(aggregated pytree, SelectionState)``: leaves with an
+    FSDP dim come back as the local shard, the rest replicated; the
+    state carries the bucket-local selection so the training loop's
+    n_selected metric is truthful.
     """
     m = axis_size(axes)
+    spec = engine.get_spec(bcfg.aggregator)
     leaves, tdef = jax.tree.flatten(g_full)
     spec_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
     assert len(leaves) == len(spec_leaves)
 
-    views = []          # (kind, worker-view array, fsdp dim)
-    sc_part = jnp.zeros((m,), jnp.float32)
-    l1_part = jnp.zeros((m,), jnp.float32)
-    sc_repl = jnp.zeros((m,), jnp.float32)
-    l1_repl = jnp.zeros((m,), jnp.float32)
-
-    for g, spec in zip(leaves, spec_leaves):
-        k = _fsdp_dim(spec, axes)
-        # §Perf: collectives move the gradient in ITS OWN dtype (bf16 for
-        # bf16 params — half the wire bytes); statistics upcast locally.
-        # NOTE: no whole-tensor f32 upcast — XLA hoists a post-collective
-        # convert to BEFORE the collective, doubling wire bytes.  Stats
-        # use f32 ACCUMULATION over the bf16 values instead (decision
-        # statistics are invariant to bf16 rounding of the operands).
+    # -- phase 0: per-leaf worker views, all on the 1×-memory a2a path.
+    # ("shard", Gw, k): FSDP leaf transposed in place, worker axis k.
+    # ("flat", Gc, 0):  replicated / non-divisible leaf flattened and
+    #                   zero-padded through engine.a2a_chunk.
+    views, total_pad = [], 0
+    for g, pspec in zip(leaves, spec_leaves):
+        k = _fsdp_dim(pspec, axes)
         if k is not None and g.shape[k] % m == 0 and g.shape[k] >= m:
-            x = _a2a_worker_view(g, k, m)
-            # keep the tensor-parallel ('model' etc.) sharding of the
-            # OTHER dims through the worker re-shard — without the hint
-            # XLA un-shards the auto axes around the manual all_to_all
-            # (a 16x all-gather of expert-sharded MoE grads)
-            vspec = []
-            for i, e in enumerate(spec):
-                ent = None if (e == tuple(axes) or e in axes
-                               or (isinstance(e, tuple)
-                                   and set(e) & set(axes))) else e
-                vspec.extend([None, None] if i == k else [ent])
-            x = shard_hint(x, P(*vspec))
-            Gw = jax.lax.all_to_all(x, axes, split_axis=k, concat_axis=k,
-                                    tiled=False)
-            # stop XLA hoisting the stats' f32 upcasts BEFORE the
-            # collective (that would double the wire bytes)
-            Gw = jax.lax.optimization_barrier(Gw)
-            Gw = shard_hint(Gw, P(*vspec))
-            red = tuple(i for i in range(Gw.ndim) if i != k)
-            mean_c = jnp.mean(Gw, axis=k, keepdims=True, dtype=jnp.float32)
-            above = Gw.astype(jnp.float32) >= mean_c
-            n_above = jnp.sum(above.astype(jnp.int32), axis=k, keepdims=True)
-            M = jnp.where(n_above * 2 >= m, above, ~above)
-            sc_part += jnp.sum(M.astype(jnp.float32), axis=red)
-            med = jnp.median(Gw, axis=k, keepdims=True)
-            l1_part += jnp.sum(jnp.abs((Gw - med).astype(jnp.float32)),
-                               axis=red)
-            views.append(("a2a", Gw, k))
+            views.append(("shard", _shard_view(g, pspec, k, m, axes), k))
         else:
-            Gw = jax.lax.all_gather(g, axes)                 # [m, ...]
-            Gw = jax.lax.optimization_barrier(Gw)
-            red = tuple(range(1, Gw.ndim))
-            mean_c = jnp.mean(Gw, axis=0, keepdims=True, dtype=jnp.float32)
-            above = Gw.astype(jnp.float32) >= mean_c
-            n_above = jnp.sum(above.astype(jnp.int32), axis=0, keepdims=True)
-            M = jnp.where(n_above * 2 >= m, above, ~above)
-            sc_repl += jnp.sum(M.astype(jnp.float32), axis=red)
-            med = jnp.median(Gw, axis=0, keepdims=True)
-            l1_repl += jnp.sum(jnp.abs((Gw - med).astype(jnp.float32)),
-                               axis=red)
-            views.append(("gather", Gw, 0))
+            Gc, pad = engine.a2a_chunk(g, axes, m)
+            total_pad += pad
+            views.append(("flat", Gc, 0))
 
-    scores, l1 = jax.lax.psum((sc_part, l1_part), axes)
-    scores, l1 = scores + sc_repl, l1 + l1_repl
+    # -- per-dimension rules: no stats / replicated phase at all --------
+    if spec.column is not None:
+        out = []
+        for (kind, Gv, k), g in zip(views, leaves):
+            if kind == "shard":
+                # apply the rule along the worker axis WITHOUT collapsing
+                # the remaining (possibly model-sharded) dims — a
+                # reshape(m, -1) would force XLA to un-shard the auto
+                # axes.  The jnp reference rules are N-D over axis 0;
+                # the Pallas kernels are 2-D only, so N-D views pin
+                # use_pallas=False (plain XLA, still compiled).
+                Gm = jnp.moveaxis(Gv, k, 0)
+                kw = {"use_pallas": False} if Gm.ndim > 2 else {}
+                out.append(spec.column(Gm, bcfg, m, **kw).astype(g.dtype))
+            else:
+                out.append(engine.unchunk(spec.column(Gv, bcfg, m), g, axes))
+        st = engine.SelectionState(jnp.ones((m,), bool),
+                                   jnp.ones((m,), jnp.float32))
+        return jax.tree.unflatten(tdef, out), st
 
-    if bcfg.aggregator == "brsgd":
-        st = brsgd_select(scores, l1, bcfg.beta, bcfg.threshold)
-        w = st.selected.astype(jnp.float32)
-        denom = jnp.maximum(jnp.sum(w), 1.0)
-    elif bcfg.aggregator == "mean":
-        w = jnp.ones((m,), jnp.float32)
-        denom = float(m)
-    else:
-        raise NotImplementedError(
-            f"blocked scope supports brsgd/mean, got {bcfg.aggregator}")
+    # -- phase 1: per-leaf stats partials, one psum ---------------------
+    stats = engine.zero_stats(spec.stats, m)
+    if stats:
+        for kind, Gv, k in views:
+            part = engine.leaf_stats(Gv, spec.stats, m, axis=k)
+            stats = {s: stats[s] + part[s] for s in stats}
+        stats = jax.lax.psum(stats, axes)
+        stats = engine.pad_correction(stats, total_pad)
 
+    # -- phase 2: replicated selection + weighted combine ---------------
+    w, st, denom = engine.resolve_select(spec, stats, bcfg, m)
     out = []
-    for (kind, Gw, k), g in zip(views, leaves):
-        wshape = [1] * Gw.ndim
-        wshape[k] = m
-        agg = jnp.sum(Gw.astype(jnp.float32) * w.reshape(wshape),
-                      axis=k) / denom
-        out.append(agg.astype(g.dtype))
-    return jax.tree.unflatten(tdef, out)
+    for (kind, Gv, k), g in zip(views, leaves):
+        if kind == "shard":
+            agg = jnp.tensordot(w, Gv, axes=([0], [k])) / denom
+            out.append(agg.astype(g.dtype))
+        else:
+            out.append(engine.unchunk(jnp.tensordot(w, Gv, axes=1) / denom,
+                                      g, axes))
+    return jax.tree.unflatten(tdef, out), st
 
 
-def make_fsdp_agg_barrier(specs, bcfg: ByzantineConfig, axes, key):
-    """Returns hook(p_bucket) -> gathered bucket with aggregating VJP.
+def bucket_key(key, name: str):
+    """Stable per-bucket attack key: fold the bucket's name (crc32, so
+    the id survives bucket-set reordering) into the step key.  Without
+    this every bucket's injected Byzantine noise is bit-identical — a
+    correlated attack strictly weaker than the threat model
+    (tests/test_blocked.py regression)."""
+    return jax.random.fold_in(key, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+
+
+def selection_token(m: int):
+    """Zero token fed to the aggregation barrier alongside the params.
+
+    Its cotangent is the one-hot histogram of the bucket's n_selected
+    (length m+1, index = count), so per-bucket selection counts ride
+    out of the backward scan on ordinary gradient accumulation: a
+    scanned segment's token gradient is the histogram summed over its
+    layers."""
+    return jnp.zeros((m + 1,), jnp.float32)
+
+
+def key_carrier(key):
+    """PRNG key bit-cast to f32 so it can ride through the aggregation
+    barrier as a differentiable-shaped primal input (cotangent: plain
+    zeros).  The key CANNOT be closed over by the barrier instead: its
+    bwd runs at scan-transposition time, where a closed-over tracer
+    (the step key is a shard_map argument) becomes an unlowerable jaxpr
+    constant."""
+    return jax.lax.bitcast_convert_type(key, jnp.float32)
+
+
+def make_fsdp_agg_barrier(specs, bcfg: ByzantineConfig, axes):
+    """Returns hook(p_bucket, tok, layer_idx, keyf) -> gathered bucket
+    with aggregating VJP.
 
     ``specs``: PartitionSpec pytree matching the bucket (one scanned
-    layer slice, or the top-level bucket)."""
+    layer slice, or the top-level bucket).  ``tok`` is a
+    :func:`selection_token`; its cotangent reports the bucket's real
+    n_selected as a histogram (see training/step.py).  ``layer_idx``
+    (f32 scalar — f32 so its cotangent is a plain zero) is the position
+    inside the bucket's scan, folded into the attack key so the layers
+    of ONE scanned segment receive different noise too — the per-bucket
+    :func:`bucket_key` alone would repeat noise across a segment's
+    layers, which all share this one hook.  ``keyf`` is the bucket's
+    attack key via :func:`key_carrier`."""
     axes = tuple(axes)
 
     @jax.custom_vjp
-    def barrier(p):
+    def barrier(p, tok, idx, keyf):
+        del tok, idx, keyf
         return jax.tree.map(
             lambda x, s: _gather_leaf(x, _fsdp_dim(s, axes), axes), p, specs)
 
-    def fwd(p):
-        return barrier(p), None
+    def fwd(p, tok, idx, keyf):
+        return barrier(p, tok, idx, keyf), (idx, keyf)
 
-    def bwd(_, g_full):
-        g_full = inject_attack(g_full, key, bcfg, axes)
-        return (_bucket_aggregate(g_full, specs, bcfg, axes),)
+    def bwd(res, g_full):
+        idx, keyf = res
+        key = jax.lax.bitcast_convert_type(keyf, jnp.uint32)
+        key_l = jax.random.fold_in(key, idx.astype(jnp.int32))
+        g_full = inject_attack(g_full, key_l, bcfg, axes)
+        agg, st = _bucket_aggregate(g_full, specs, bcfg, axes)
+        m = axis_size(axes)
+        n_sel = jnp.sum(st.selected.astype(jnp.int32))
+        hist = jax.nn.one_hot(n_sel, m + 1, dtype=jnp.float32)
+        return agg, hist, jnp.zeros((), jnp.float32), jnp.zeros_like(keyf)
 
     barrier.defvjp(fwd, bwd)
     return barrier

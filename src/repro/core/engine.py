@@ -121,29 +121,54 @@ def brsgd_select(scores, l1, beta: float, threshold: float) -> BrSGDState:
 # per-leaf statistics — written ONCE, used by every layout
 # ---------------------------------------------------------------------------
 
-def leaf_stats(G, needs, m: int) -> dict:
-    """Partial statistics of one worker-major view G [m, cols] (f32).
+def leaf_stats(G, needs, m: int, axis: int = 0) -> dict:
+    """Partial statistics of one worker view of G (f32), whose ``axis``
+    indexes the m workers (worker-major [m, cols] by default).
 
-    G may be a full local matrix, a gathered leaf, or an all_to_all
-    chunk — the returned partials are additive over the column ranges
-    the views cover (psum over workers completes the a2a layout).
+    G may be a full local matrix, a gathered leaf, an all_to_all chunk,
+    or a blocked-scope worker view with the worker axis in the middle of
+    an N-D leaf — the returned partials are additive over the dimension
+    ranges the views cover (psum over workers completes the a2a and
+    blocked layouts).
     """
+    red = tuple(i for i in range(G.ndim) if i != axis)
     out = {}
     if "scores" in needs:
-        mean_c = jnp.mean(G, axis=0, keepdims=True)
+        mean_c = jnp.mean(G, axis=axis, keepdims=True)
         above = G >= mean_c
-        n_above = jnp.sum(above.astype(jnp.int32), axis=0, keepdims=True)
+        n_above = jnp.sum(above.astype(jnp.int32), axis=axis, keepdims=True)
         M = jnp.where(n_above * 2 >= m, above, ~above)
-        out["scores"] = jnp.sum(M.astype(jnp.float32), axis=1)
+        out["scores"] = jnp.sum(M.astype(jnp.float32), axis=red)
     if "l1" in needs or "d2med" in needs:
-        diff = G - jnp.median(G, axis=0)[None]
+        diff = G - jnp.median(G, axis=axis, keepdims=True)
         if "l1" in needs:
-            out["l1"] = jnp.sum(jnp.abs(diff), axis=1)
+            out["l1"] = jnp.sum(jnp.abs(diff), axis=red)
         if "d2med" in needs:
-            out["d2med"] = jnp.sum(diff * diff, axis=1)
+            out["d2med"] = jnp.sum(diff * diff, axis=red)
     if "gram" in needs:
-        out["gram"] = G @ G.T
+        # contract every non-worker dim: G @ G.T without reshaping the
+        # leaf to [m, cols] (keeps model-sharded dims where they are)
+        out["gram"] = jnp.tensordot(G, G, axes=(red, red))
     return out
+
+
+def zero_stats(needs, m: int) -> dict:
+    """Zero-initialized partial-stat accumulators for ``needs``."""
+    return {k: jnp.zeros((m, m) if k == "gram" else (m,), jnp.float32)
+            for k in needs}
+
+
+def resolve_select(spec, stats: dict, cfg, m: int):
+    """Run a spec's replicated select rule and resolve the combine
+    denominator: ``(weights [m], state, denom)`` with the empty-selection
+    guard (Σw == 0 -> divide by 1) and a synthesized SelectionState when
+    the rule has no richer state.  Shared by every layout that emits the
+    weighted row combine (sharded gather/a2a and the blocked scope)."""
+    w, st = spec.select(stats, cfg, m)
+    if st is None:
+        st = SelectionState(w > 0, w)
+    sw = jnp.sum(w)
+    return w, st, jnp.where(sw > 0, sw, 1.0)
 
 
 def pad_correction(stats: dict, pad) -> dict:
@@ -315,7 +340,7 @@ def aggregate_local(G, cfg: ByzantineConfig, use_pallas: bool | None = None,
     m = G.shape[0]
     kw = {} if use_pallas is None else {"use_pallas": use_pallas}
     if spec.column is not None:
-        out = spec.column(G, cfg, m, **kw)
+        out = spec.column(G, cfg, m, d_blk=d_blk, **kw)
         return (out, None) if return_state else out
 
     up = ops.default_use_pallas() if use_pallas is None else use_pallas
@@ -343,19 +368,23 @@ def aggregate_local(G, cfg: ByzantineConfig, use_pallas: bool | None = None,
 # sharded executors — inside shard_map over the worker axes
 # ---------------------------------------------------------------------------
 
-def _gather_leaf(g, axes, m: int):
-    """all_gather one leaf and flatten to worker-major [m, cols] f32.
-    The collective moves the leaf in its own dtype (§Perf); statistics
-    upcast locally."""
+def gather_leaf(g, axes, m: int):
+    """all_gather one leaf to a worker-major [m, *leaf_shape] f32 view.
+    Kept N-D: flattening to [m, cols] would merge tensor-sharded auto
+    ('model') dims into one axis and force XLA to un-shard them around
+    the reshape.  The collective moves the leaf in its own dtype
+    (§Perf); statistics upcast locally."""
     G = jax.lax.optimization_barrier(jax.lax.all_gather(g, axes))
-    return G.astype(jnp.float32).reshape(m, -1)
+    return G.astype(jnp.float32)
 
 
-def _a2a_chunk(g, axes, m: int):
+def a2a_chunk(g, axes, m: int):
     """Flatten one leaf, zero-pad to m·⌈D/m⌉, all_to_all over the worker
     axes -> ([m, ⌈D/m⌉] f32 chunk where row r is worker r's values for
     this device's dim range, n_pad_columns).  The wire moves the leaf's
-    own dtype; stats upcast locally (§Perf)."""
+    own dtype; stats upcast locally (§Perf).  Shared with the blocked
+    scope (core.blocked), which routes replicated and non-divisible
+    leaves through here so they stay on the 1×-memory a2a path."""
     flat = g.reshape(-1)
     D = flat.shape[0]
     c = math.ceil(D / m)
@@ -366,7 +395,7 @@ def _a2a_chunk(g, axes, m: int):
     return Gc, m * c - D
 
 
-def _unchunk(vec, g, axes):
+def unchunk(vec, g, axes):
     """Re-assemble a per-device [⌈D/m⌉] result into the leaf's shape with
     a tiled all_gather, re-replicating in the gradient's own dtype
     (§Perf)."""
@@ -402,23 +431,26 @@ def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
         out = []
         for g in leaves:
             if layout == "a2a":
-                Gc, _pad = _a2a_chunk(g, axes, m)
-                out.append(_unchunk(spec.column(Gc, cfg, m), g, axes))
+                Gc, _pad = a2a_chunk(g, axes, m)
+                out.append(unchunk(spec.column(Gc, cfg, m), g, axes))
             else:
-                col = spec.column(_gather_leaf(g, axes, m), cfg, m)
+                Gv = gather_leaf(g, axes, m)
+                # N-D views pin the jnp path — the Pallas kernels are
+                # 2-D only (see the blocked-scope column path)
+                kw = {"use_pallas": False} if Gv.ndim > 2 else {}
+                col = spec.column(Gv, cfg, m, **kw)
                 out.append(col.astype(g.dtype).reshape(g.shape))
         return jax.tree.unflatten(tdef, out), None
 
     # -- phase 1: per-leaf stats partials -------------------------------
-    stats = {k: jnp.zeros((m, m) if k == "gram" else (m,), jnp.float32)
-             for k in spec.stats}
+    stats = zero_stats(spec.stats, m)
     cached, total_pad = [], 0
     for g in leaves:
         if layout == "a2a":
-            Gv, pad = _a2a_chunk(g, axes, m)
+            Gv, pad = a2a_chunk(g, axes, m)
             total_pad += pad
         else:
-            Gv = _gather_leaf(g, axes, m)
+            Gv = gather_leaf(g, axes, m)
         cached.append(Gv)
         part = leaf_stats(Gv, spec.stats, m)
         stats = {k: stats[k] + part[k] for k in stats}
@@ -427,15 +459,11 @@ def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
         stats = pad_correction(stats, total_pad)
 
     # -- phase 2: replicated selection + weighted combine ---------------
-    w, st = spec.select(stats, cfg, m)
-    if st is None:
-        st = SelectionState(w > 0, w)
-    sw = jnp.sum(w)
-    denom = jnp.where(sw > 0, sw, 1.0)
+    w, st, denom = resolve_select(spec, stats, cfg, m)
     out = []
     if layout == "a2a":
         for g, Gv in zip(leaves, cached):
-            out.append(_unchunk(jnp.tensordot(w, Gv, axes=1) / denom, g, axes))
+            out.append(unchunk(jnp.tensordot(w, Gv, axes=1) / denom, g, axes))
         # stop XLA hoisting the optimizer's f32 upcast back across the
         # all_gather (it would re-widen the wire to f32)
         out = list(jax.lax.optimization_barrier(tuple(out)))

@@ -42,7 +42,8 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--mesh", default=None, help="e.g. 4x2, or 'production'")
     ap.add_argument("--aggregator", default="brsgd",
-                    choices=["brsgd", "mean", "median"])
+                    help="any rule registered in core.engine "
+                         "(validated after parse, when jax loads)")
     ap.add_argument("--attack", default="none")
     ap.add_argument("--alpha", type=float, default=0.0)
     ap.add_argument("--optimizer", default="adamw")
@@ -59,12 +60,16 @@ def main(argv=None):
 
     from ..checkpoint import ckpt
     from ..configs import ByzantineConfig, TrainConfig, get_config
+    from ..core import engine
     from ..data.pipeline import LMWorkerPipeline
     from ..launch.mesh import n_workers
     from ..models import params as PM
     from ..models import transformer as TF
     from ..training.step import build_train_step
 
+    if args.aggregator not in engine.registered():
+        ap.error(f"--aggregator {args.aggregator!r}: "
+                 f"choose from {', '.join(engine.registered())}")
     mesh = build_mesh(args.mesh)
     cfg = get_config(args.arch)
     if args.reduced:
@@ -106,7 +111,9 @@ def main(argv=None):
                 met = {k: float(v) for k, v in met.items()}
                 history.append({"step": step, **met})
                 print(f"step {step:4d} loss={met['loss']:.4f} "
-                      f"gnorm={met['gnorm']:.3f} selected={met['n_selected']:.0f}/{m}",
+                      f"gnorm={met['gnorm']:.3f} "
+                      f"selected={met['n_selected']:.1f}/{m} "
+                      f"(bucket min {met['n_selected_min']:.0f})",
                       flush=True)
 
     dt = time.time() - t_start

@@ -144,17 +144,22 @@ def _run_segment(cfg, seg: Segment, p_stack, shared, x, positions, remat=False,
                  param_hook=None):
     """Scan a stacked segment over x.  Returns (x, aux_sum).
 
-    ``param_hook(p_layer)`` is applied to each scanned layer-slice of the
-    parameter stack — identity by default.  The blocked aggregation mode
-    injects its gather/robust-aggregate custom-VJP barrier here, so
-    per-worker layer gradients are aggregated inside the backward scan
-    and the full G matrix never materializes (DESIGN.md §2).
+    ``param_hook(p_layer, layer_idx)`` is applied to each scanned
+    layer-slice of the parameter stack — identity by default.  The
+    blocked aggregation mode injects its gather/robust-aggregate
+    custom-VJP barrier here, so per-worker layer gradients are
+    aggregated inside the backward scan and the full G matrix never
+    materializes (DESIGN.md §2); ``layer_idx`` (f32 scalar) lets the
+    barrier fold the layer position into its attack key so injected
+    noise decorrelates across the scanned layers, not just across
+    segments.
     """
 
-    def body(carry, p_l):
+    def body(carry, idx_p):
+        idx, p_l = idx_p
         x, aux = carry
         if param_hook is not None:
-            p_l = param_hook(p_l)
+            p_l = param_hook(p_l, idx)
         x = shard_hint(x, _SP_SPEC)
         if seg.kind == "dense":
             x, a = _dense_block(cfg, p_l, x, positions)
@@ -173,7 +178,8 @@ def _run_segment(cfg, seg: Segment, p_stack, shared, x, positions, remat=False,
 
     if remat:
         body = jax.checkpoint(body, prevent_cse=False)
-    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), p_stack)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               (jnp.arange(seg.n, dtype=jnp.float32), p_stack))
     return x, aux
 
 

@@ -8,7 +8,12 @@ robust aggregation, and the optimizer update:
                   (any aggregator registered in core.engine; gather or
                   a2a collective layout)
   blocked scope : FSDP params + aggregation inside the backward scan
-                  (core.blocked) — the >20B path.
+                  (core.blocked) — the >20B path.  Any registered
+                  aggregator runs per-bucket; each bucket's real
+                  n_selected rides out of the backward on a selection
+                  token's cotangent (a histogram over counts), so the
+                  n_selected / n_selected_min metrics are truthful —
+                  the seed hard-coded n_selected == m here.
 
 The builder returns the jitted step plus the sharding trees needed by
 both the real driver and the dry-run (which feeds ShapeDtypeStructs).
@@ -25,7 +30,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from ..configs.base import ByzantineConfig, ModelConfig, TrainConfig
-from ..core.blocked import make_fsdp_agg_barrier
+from ..core.blocked import (bucket_key, key_carrier, make_fsdp_agg_barrier,
+                            selection_token)
 from ..core.distributed import inject_attack, robust_aggregate
 from ..launch.mesh import n_workers, worker_axes
 from ..models import params as PM
@@ -124,7 +130,8 @@ def build_train_step(tcfg: TrainConfig, mesh) -> StepBundle:
              in_specs=(p_in, o_in, bspecs, P(), P()),
              out_specs=(p_in, o_in, {"loss": metric_spec, "ce": metric_spec,
                                      "gnorm": metric_spec,
-                                     "n_selected": metric_spec}),
+                                     "n_selected": metric_spec,
+                                     "n_selected_min": metric_spec}),
              axis_names=set(waxes), check_vma=False)
     def step(params, opt_state, batch, step_idx, key):
         # local worker batch: squeeze the sharded worker axis
@@ -136,16 +143,34 @@ def build_train_step(tcfg: TrainConfig, mesh) -> StepBundle:
                       if k.startswith("seg_")}
             top_specs = {k: v for k, v in pspecs.items()
                          if not k.startswith("seg_")}
-            hooks = {k: make_fsdp_agg_barrier(v, bcfg, waxes, key)
-                     for k, v in lspecs.items()}
-            top_hook = make_fsdp_agg_barrier(top_specs, bcfg, waxes, key)
+            # per-bucket attack keys: without the fold_in every bucket's
+            # injected noise is bit-identical (correlated attack weaker
+            # than the threat model); the scan index decorrelates layers
+            # within a segment (the hook folds it in per call)
+            barriers = {k: make_fsdp_agg_barrier(v, bcfg, waxes)
+                        for k, v in lspecs.items()}
+            top_barrier = make_fsdp_agg_barrier(top_specs, bcfg, waxes)
+            keyfs = {k: key_carrier(bucket_key(key, k))
+                     for k in (*barriers, "top")}
+            toks = {k: selection_token(m) for k in (*barriers, "top")}
 
-            def lfn(params):
+            def lfn(params, toks):
+                hooks = {k: (lambda p, i, b=b, t=toks[k], kf=keyfs[k]:
+                             b(p, t, i, kf))
+                         for k, b in barriers.items()}
                 return TF.loss_fn(cfg, params, lbatch, remat=remat,
-                                  seg_hooks=hooks, top_hook=top_hook)
+                                  seg_hooks=hooks,
+                                  top_hook=lambda p: top_barrier(
+                                      p, toks["top"], jnp.float32(0),
+                                      keyfs["top"]))
 
-            (loss, met), grads = jax.value_and_grad(lfn, has_aux=True)(params)
+            (loss, met), (grads, tgrads) = jax.value_and_grad(
+                lfn, argnums=(0, 1), has_aux=True)(params, toks)
             agg, st = grads, None    # already aggregated in backward
+            # each token's cotangent is one_hot(n_selected) per barrier
+            # call; gradient accumulation sums them over buckets and
+            # scan iterations into one histogram over counts 0..m
+            sel_hist = sum(jax.tree.leaves(tgrads))
         else:
             def lfn(params):
                 return TF.loss_fn(cfg, params, lbatch, remat=remat)
@@ -153,6 +178,7 @@ def build_train_step(tcfg: TrainConfig, mesh) -> StepBundle:
             (loss, met), grads = jax.value_and_grad(lfn, has_aux=True)(params)
             grads = inject_attack(grads, key, bcfg, waxes)
             agg, st = robust_aggregate(grads, bcfg, waxes, layout=layout)
+            sel_hist = None
 
         new_params, new_opt = opt.update(agg, opt_state, params, step_idx)
         if scope == "blocked":
@@ -173,12 +199,24 @@ def build_train_step(tcfg: TrainConfig, mesh) -> StepBundle:
         else:
             gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                                  for g in jax.tree.leaves(agg)))
+        if sel_hist is not None:
+            # stats were psum'd before the (replicated) selection, so
+            # the histogram is identical on every worker — no further
+            # cross-worker reduction needed
+            counts = jnp.arange(m + 1, dtype=jnp.float32)
+            n_sel = (jnp.sum(counts * sel_hist)
+                     / jnp.maximum(jnp.sum(sel_hist), 1.0))
+            n_sel_min = jnp.argmax(sel_hist > 0).astype(jnp.float32)
+        else:
+            n_sel = (jnp.sum(st.selected.astype(jnp.float32))
+                     if st is not None else jnp.float32(m))
+            n_sel_min = n_sel
         metrics = {
             "loss": jax.lax.pmean(loss, waxes),
             "ce": jax.lax.pmean(met["ce"], waxes),
             "gnorm": gnorm,
-            "n_selected": (jnp.sum(st.selected.astype(jnp.float32))
-                           if st is not None else jnp.float32(m)),
+            "n_selected": n_sel,
+            "n_selected_min": n_sel_min,
         }
         return new_params, new_opt, metrics
 
