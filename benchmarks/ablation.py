@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ByzantineConfig
-from repro.core import aggregators, attacks
+from repro.core import aggregators, threat
 
 D, STEPS, LR, M, N = 20, 120, 0.3, 20, 400
 
@@ -33,7 +33,7 @@ def run(bcfg: ByzantineConfig, seed: int = 0):
     @jax.jit
     def step(w, key):
         G = jax.vmap(lambda Xi, yi: Xi.T @ (Xi @ w - yi) / N)(Xj, yj)
-        G = attacks.apply_attack(G, key, bcfg)
+        G = threat.apply_dense(G, key, bcfg)
         return w - LR * aggregators.aggregate(G, bcfg)
 
     w = jnp.zeros(D, jnp.float32)
@@ -50,7 +50,7 @@ def main():
         for thr in (0.0, 1e9):      # 0.0 = auto median rule; 1e9 = off
             e = float(np.mean([run(ByzantineConfig(
                 aggregator="brsgd", beta=beta, threshold=thr,
-                attack="scale", alpha=0.2, attack_scale=50.0), seed=s)
+                attack="scale", alpha=0.2, scale_factor=50.0), seed=s)
                 for s in range(3)]))
             results[(beta, thr)] = e
             print(f"{beta},{'auto' if thr == 0 else 'off'},{e:.4f}",

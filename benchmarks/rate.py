@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ByzantineConfig
-from repro.core import aggregators, attacks
+from repro.core import aggregators, threat
 
 D = 20
 STEPS = 150
@@ -32,7 +32,7 @@ def run(m: int, n: int, aggregator: str, alpha: float, seed: int = 0):
     y = X @ w_star + 0.5 * rng.normal(size=(m, n)).astype("f4")
     Xj, yj = jnp.asarray(X), jnp.asarray(y)
     bcfg = ByzantineConfig(aggregator=aggregator, attack="scale",
-                           alpha=alpha, attack_scale=50.0)
+                           alpha=alpha, scale_factor=50.0)
 
     @jax.jit
     def step(w, key):
@@ -40,7 +40,7 @@ def run(m: int, n: int, aggregator: str, alpha: float, seed: int = 0):
             r = Xi @ w - yi
             return Xi.T @ r / n
         G = jax.vmap(worker_grad)(Xj, yj)                    # [m, D]
-        G = attacks.apply_attack(G, key, bcfg)
+        G = threat.apply_dense(G, key, bcfg)
         g = aggregators.aggregate(G, bcfg)
         return w - LR * g
 

@@ -11,7 +11,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ByzantineConfig
-from repro.core import aggregators, attacks
+from repro.core import aggregators, threat
 
 m, d = 20, 1_000
 rng = np.random.default_rng(0)
@@ -22,8 +22,8 @@ G = jnp.asarray(true_grad[None] + 0.1 * rng.normal(size=(m, d)).astype("f4"))
 
 # the paper's Gradient Scale attack on 25% of the workers
 bcfg = ByzantineConfig(aggregator="brsgd", attack="scale", alpha=0.25,
-                       attack_scale=1e10)
-G_attacked = attacks.apply_attack(G, jax.random.PRNGKey(0), bcfg)
+                       scale_factor=1e10)
+G_attacked = threat.apply_dense(G, jax.random.PRNGKey(0), bcfg)
 
 naive = aggregators.mean(G_attacked)
 robust, state = aggregators.brsgd(G_attacked, bcfg, return_state=True)

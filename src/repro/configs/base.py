@@ -185,11 +185,30 @@ class ByzantineConfig:
     threshold: float = 0.0        # 𝔗; 0.0 = auto (lower quartile of l1)
     trim_frac: float = 0.1        # trimmed_mean only
     krum_f: int = 0               # assumed byzantine count for krum; 0=auto
-    # attack simulation (training-time fault injection for experiments)
-    attack: str = "none"          # none|gaussian|negation|scale|label_flip|sign_flip
+    # ------------------------------------------------------------------
+    # threat model (training-time fault injection for experiments).
+    # attack: "none" or any spec registered in core.threat — the shipped
+    # registry (threat.registered()) is gaussian | negation | scale |
+    # sign_flip | alie | ipm (gradient scope) plus label_flip (data
+    # scope); every entry runs in all three scopes (dense simulation,
+    # shard_map global, blocked).  launch/train.py validates --attack
+    # against the live registry, never against this comment.
+    attack: str = "none"
     alpha: float = 0.0            # fraction of byzantine workers
-    attack_scale: float = 1e10
-    gaussian_std: float = 200.0
+    # membership policy — WHICH ⌊αm⌋ workers are byzantine:
+    #   "prefix"   workers 0..⌊αm⌋-1 (the paper's arbitrary-identity set)
+    #   "random"   fixed random subset drawn once from byz_seed
+    #   "resample" fresh subset every step (drawn from the step key)
+    membership: str = "prefix"
+    byz_seed: int = 0             # membership="random" draw seed
+    # per-attack knobs.  (The former `attack_scale` was overloaded: one
+    # field served as scale's multiplier, negation's c, and — via a
+    # magic `< 100` heuristic — ALIE's z and IPM's ε.  Retired.)
+    gaussian_std: float = 200.0   # gaussian: noise std (paper: 200)
+    scale_factor: float = 1e10    # scale: multiplier on own gradient
+    negation_factor: float = 1e10  # negation: c in -c * Σ honest
+    alie_z: float = 1.5           # alie: z std-devs from honest mean
+    ipm_eps: float = 0.5          # ipm: ε in -ε * mean(honest)
 
 
 @dataclass(frozen=True)

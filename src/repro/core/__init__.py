@@ -1,9 +1,10 @@
 """The paper's contribution: BrSGD robust aggregation (Algorithm 2),
-baseline aggregators, Byzantine attack models, and the layout-aware
-aggregation engine driving the distributed (shard_map) and
-single-process (vmap) execution paths."""
+baseline aggregators, the layout-aware aggregation engine driving the
+distributed (shard_map) and single-process (vmap) execution paths, and
+the AttackSpec threat-model engine (Byzantine fault injection in every
+scope)."""
 from .aggregators import AGGREGATORS, aggregate, brsgd, brsgd_select, krum
-from .attacks import GRADIENT_ATTACKS, apply_attack, byzantine_mask
-from .distributed import inject_attack, robust_aggregate
+from .distributed import robust_aggregate
 from .engine import AggregatorSpec, aggregate_local, aggregate_sharded, register
 from .simulate import make_sim_step, tree_to_vec, vec_to_tree, worker_grad_matrix
+from .threat import AttackSpec, apply_dense, inject, membership_mask

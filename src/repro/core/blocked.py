@@ -17,8 +17,11 @@ layer slice (see ``transformer.forward(param_hook=...)``):
   forward :  p_full = all_gather(p_shard) over the worker axes
              (FSDP streaming — params live sharded over workers)
   backward:  g_full (this worker's layer gradient)
-             -> optional Byzantine attack injection (per-bucket key,
-                see :func:`bucket_key`)
+             -> optional Byzantine attack injection (``threat.inject``
+                — any registered AttackSpec, incl. alie/ipm whose
+                honest-statistics psum per bucket; noise key per bucket
+                via :func:`bucket_key`, membership from the raw step
+                key so all buckets corrupt one worker set)
              -> worker×dims all_to_all re-shard: FSDP leaves transpose
                 in place along their own sharded dim; replicated and
                 non-divisible (d % m != 0) leaves flatten through
@@ -51,8 +54,7 @@ from jax.sharding import PartitionSpec as P
 from ..compat import axis_size
 from ..configs.base import ByzantineConfig
 from ..models.params import shard_hint
-from . import engine
-from .distributed import inject_attack
+from . import engine, threat
 
 
 def _fsdp_dim(spec: P, axes) -> int | None:
@@ -178,11 +180,14 @@ def _bucket_aggregate(g_full, specs, bcfg: ByzantineConfig, axes):
 
 
 def bucket_key(key, name: str):
-    """Stable per-bucket attack key: fold the bucket's name (crc32, so
-    the id survives bucket-set reordering) into the step key.  Without
-    this every bucket's injected Byzantine noise is bit-identical — a
-    correlated attack strictly weaker than the threat model
-    (tests/test_blocked.py regression)."""
+    """Stable per-bucket attack NOISE key: fold the bucket's name
+    (crc32, so the id survives bucket-set reordering) into the step
+    key.  Without this every bucket's injected Byzantine noise is
+    bit-identical — a correlated attack strictly weaker than the threat
+    model (tests/test_blocked.py regression).  The barrier folds this
+    INSIDE its backward (the name is static there), so the raw step key
+    stays available for the step-wide membership draw — under the
+    ``resample`` policy all buckets must corrupt the SAME workers."""
     return jax.random.fold_in(key, zlib.crc32(name.encode()) & 0x7FFFFFFF)
 
 
@@ -207,7 +212,7 @@ def key_carrier(key):
     return jax.lax.bitcast_convert_type(key, jnp.float32)
 
 
-def make_fsdp_agg_barrier(specs, bcfg: ByzantineConfig, axes):
+def make_fsdp_agg_barrier(specs, bcfg: ByzantineConfig, axes, name: str):
     """Returns hook(p_bucket, tok, layer_idx, keyf) -> gathered bucket
     with aggregating VJP.
 
@@ -216,11 +221,15 @@ def make_fsdp_agg_barrier(specs, bcfg: ByzantineConfig, axes):
     :func:`selection_token`; its cotangent reports the bucket's real
     n_selected as a histogram (see training/step.py).  ``layer_idx``
     (f32 scalar — f32 so its cotangent is a plain zero) is the position
-    inside the bucket's scan, folded into the attack key so the layers
-    of ONE scanned segment receive different noise too — the per-bucket
-    :func:`bucket_key` alone would repeat noise across a segment's
-    layers, which all share this one hook.  ``keyf`` is the bucket's
-    attack key via :func:`key_carrier`."""
+    inside the bucket's scan, folded into the attack noise key so the
+    layers of ONE scanned segment receive different noise too — the
+    per-bucket :func:`bucket_key` (folded here from the static
+    ``name``) alone would repeat noise across a segment's layers, which
+    all share this one hook.  ``keyf`` is the RAW step key via
+    :func:`key_carrier`; the bucket/layer folds perturb only the noise,
+    while byzantine MEMBERSHIP is drawn from the unfolded step key so
+    every bucket corrupts one consistent worker set
+    (``threat.membership_mask``)."""
     axes = tuple(axes)
 
     @jax.custom_vjp
@@ -235,8 +244,10 @@ def make_fsdp_agg_barrier(specs, bcfg: ByzantineConfig, axes):
     def bwd(res, g_full):
         idx, keyf = res
         key = jax.lax.bitcast_convert_type(keyf, jnp.uint32)
-        key_l = jax.random.fold_in(key, idx.astype(jnp.int32))
-        g_full = inject_attack(g_full, key_l, bcfg, axes)
+        key_l = jax.random.fold_in(bucket_key(key, name),
+                                   idx.astype(jnp.int32))
+        g_full = threat.inject(g_full, key_l, bcfg, axes,
+                               membership_key=key)
         agg, st = _bucket_aggregate(g_full, specs, bcfg, axes)
         m = axis_size(axes)
         n_sel = jnp.sum(st.selected.astype(jnp.int32))

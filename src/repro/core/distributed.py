@@ -27,64 +27,24 @@ never need a replicated phase, ``select`` rules ship only [m]-sized
 state across workers.  To add an aggregator distributed, register it
 once in ``engine.py``; nothing here changes.
 
-This module keeps the shard_map-facing API (``robust_aggregate``) and
-the training-time fault injection (``inject_attack``).  Must be called
-inside a shard_map whose manual axes == ``axes`` (the worker axes); the
-'model' mesh axis stays auto, so leaves may be arbitrarily
-tensor-sharded — the math here never notices.
+This module keeps the shard_map-facing aggregation API
+(``robust_aggregate``); training-time fault injection lives in
+:mod:`.threat` (``threat.inject`` — the same AttackSpec registry the
+dense and blocked scopes execute).  Must be called inside a shard_map
+whose manual axes == ``axes`` (the worker axes); the 'model' mesh axis
+stays auto, so leaves may be arbitrarily tensor-sharded — the math here
+never notices.
 """
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
-from ..compat import axis_size
 from ..configs.base import ByzantineConfig
 from . import engine
 
 
 def worker_index(axes):
     return jax.lax.axis_index(axes)
-
-
-# ---------------------------------------------------------------------------
-# distributed attack injection (training-time fault simulation)
-# ---------------------------------------------------------------------------
-
-def inject_attack(grads, key, cfg: ByzantineConfig, axes):
-    """Corrupt this worker's gradient if its (flattened) index < ⌊αm⌋.
-
-    Mirrors core.attacks.* but runs per-worker inside shard_map."""
-    if cfg.attack in ("none", "label_flip") or cfg.alpha <= 0:
-        return grads
-    m = axis_size(axes)
-    idx = worker_index(axes)
-    is_byz = idx < int(cfg.alpha * m)
-
-    if cfg.attack == "gaussian":
-        key = jax.random.fold_in(key, idx)
-        def leaf(g, k):
-            noise = jax.random.normal(k, g.shape, jnp.float32) * cfg.gaussian_std
-            return jnp.where(is_byz, noise.astype(g.dtype), g)
-        leaves, td = jax.tree.flatten(grads)
-        keys = jax.random.split(key, len(leaves))
-        return jax.tree.unflatten(td, [leaf(g, k) for g, k in zip(leaves, keys)])
-
-    if cfg.attack == "scale":
-        return jax.tree.map(
-            lambda g: jnp.where(is_byz, g * cfg.attack_scale, g), grads)
-
-    if cfg.attack == "sign_flip":
-        return jax.tree.map(lambda g: jnp.where(is_byz, -g, g), grads)
-
-    if cfg.attack == "negation":
-        def leaf(g):
-            honest = jax.lax.psum(jnp.where(is_byz, 0.0, g.astype(jnp.float32)), axes)
-            evil = (-cfg.attack_scale * honest).astype(g.dtype)
-            return jnp.where(is_byz, evil, g)
-        return jax.tree.map(leaf, grads)
-
-    raise ValueError(f"unknown attack {cfg.attack!r}")
 
 
 # ---------------------------------------------------------------------------

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ByzantineConfig
-from . import aggregators, attacks
+from . import engine, threat
 
 
 def tree_to_vec(tree):
@@ -42,16 +42,26 @@ def worker_grad_matrix(loss_fn: Callable, params, worker_batches):
 
 
 def make_sim_step(loss_fn: Callable, bcfg: ByzantineConfig, lr: float):
-    """Plain-SGD simulation step (the paper trains with vanilla SGD)."""
+    """Plain-SGD simulation step (the paper trains with vanilla SGD).
+
+    Returns ``(new_params, metrics)`` with ``metrics = {"gnorm",
+    "n_selected"}`` — the selection count comes from the aggregator's
+    real SelectionState, so paper-scale (m=20 LeNet) runs report the
+    same truthful selection diagnostics as the distributed path
+    (column rules and the mean have no selection phase: they report m).
+    """
 
     @jax.jit
     def step(params, worker_batches, key):
         G = worker_grad_matrix(loss_fn, params, worker_batches)
-        G = attacks.apply_attack(G, key, bcfg)
-        agg = aggregators.aggregate(G, bcfg)
+        G = threat.apply_dense(G, key, bcfg)
+        agg, st = engine.aggregate_local(G, bcfg, return_state=True)
         new_params = jax.tree.map(
             lambda p, g: p - lr * g.astype(p.dtype), params,
             vec_to_tree(agg, params))
-        return new_params, jnp.linalg.norm(agg)
+        n_sel = (jnp.sum(st.selected.astype(jnp.float32)) if st is not None
+                 else jnp.float32(G.shape[0]))
+        return new_params, {"gnorm": jnp.linalg.norm(agg),
+                            "n_selected": n_sel}
 
     return step

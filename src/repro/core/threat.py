@@ -1,0 +1,339 @@
+"""Layout-aware threat-model engine: one AttackSpec registry drives
+Byzantine fault injection in every execution scope.
+
+Before this module existed the attack layer was written three times
+with divergent coverage: ``core/attacks.py`` implemented 6 gradient
+attacks on the dense [m, d] matrix, ``core/distributed.py`` re-derived
+4 of them per-worker inside shard_map, and raised ``ValueError`` for
+``alie``/``ipm`` in every distributed and blocked run.  This registry
+mirrors ``engine.AggregatorSpec``: each attack declares WHAT it knows
+about the honest workers, never HOW a scope obtains that knowledge.
+
+Registry contract
+-----------------
+An :class:`AttackSpec` declares:
+
+* ``scope`` — ``"gradient"`` (corrupts the worker-gradient values) or
+  ``"data"`` (corrupts the byzantine workers' training data in the
+  pipeline; gradients then look legitimate, e.g. label_flip).
+
+* ``knows`` — the omniscient-adversary statistics the corruption rule
+  reads (Blanchard et al. 2017: the adversary sees all honest
+  gradients), a subset of :data:`KNOWLEDGE`:
+
+    ``hsum``    Σ_{honest i} g_i     (per coordinate, same shape as g)
+    ``hsqsum``  Σ_{honest i} g_i²    (per coordinate)
+
+  Every knowledge statistic is element-wise per coordinate and additive
+  over the honest workers, so any scope can compute it: the dense
+  executor masks and sums over the worker axis of G, the shard_map and
+  blocked executors zero the byzantine contribution and ``psum`` over
+  the worker mesh axes — the exact contract ``engine.leaf_stats`` uses
+  for aggregation statistics.  The honest count ``n_honest = m - ⌊αm⌋``
+  rides along as a scalar whenever ``knows`` is non-empty.
+
+* ``corrupt`` — a pure rule ``(g, know, key, cfg) -> evil`` mapping ONE
+  worker's gradient leaf (any shape) plus the matching knowledge
+  entries to that worker's byzantine replacement.  The executor applies
+  ``where(is_byz, evil, g)``; the rule never sees the layout.
+
+* ``corrupt_labels`` — for data-scope specs, the pure label/token map
+  ``(values, n_classes) -> values'`` the pipelines apply to byzantine
+  workers' shards.
+
+Membership
+----------
+Adversary identity is a declared scenario knob (``cfg.membership``),
+not an implicit ``arange < ⌊αm⌋``:
+
+  ``prefix``    workers 0..⌊αm⌋-1 (paper setting — identity arbitrary)
+  ``random``    a fixed random subset drawn from ``cfg.byz_seed``
+  ``resample``  a fresh subset per call, drawn from the step key
+
+All policies corrupt exactly ``⌊αm⌋`` workers; only identity varies.
+In blocked scope every bucket derives membership from the SAME step key
+(the bucket/layer folds only perturb the noise key), so one consistent
+byzantine set attacks the whole model.
+
+Executors
+---------
+``apply_dense``  G [m, d] single-host (simulate.py, benchmarks).
+``inject``       per-worker pytree inside shard_map — serves BOTH the
+                 global scope (training/step.py, either collective
+                 layout) and the blocked scope (core/blocked.py calls
+                 it per bucket inside the backward scan).
+
+Both derive identical per-(worker, leaf) noise keys, so dense and
+sharded corruption agree to numerical tolerance (tests/test_threat.py
+pins the dense↔gather↔a2a↔blocked parity matrix).
+
+Adding an attack is one :func:`register` call — it is then available in
+the dense simulation, under shard_map in both layouts, per-bucket at
+blocked scale, to ``benchmarks/robustness.py`` and to the
+``launch/train.py`` CLI.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..compat import axis_size
+from ..configs.base import ByzantineConfig
+
+KNOWLEDGE = ("hsum", "hsqsum")
+MEMBERSHIP_POLICIES = ("prefix", "random", "resample")
+
+# domain-separates the membership draw from every noise key (noise keys
+# fold in worker/bucket/layer indices, which are small non-negative ints)
+_MEMBERSHIP_TAG = 0x6279_7A6D  # "byzm"
+
+
+# ---------------------------------------------------------------------------
+# byzantine membership — a declared scenario knob
+# ---------------------------------------------------------------------------
+
+def n_byzantine(cfg: ByzantineConfig, m: int) -> int:
+    """⌊αm⌋ — every policy corrupts exactly this many workers."""
+    return int(cfg.alpha * m)
+
+
+def membership_mask(cfg: ByzantineConfig, m: int, key=None):
+    """[m] bool — which workers are byzantine under ``cfg.membership``.
+
+    ``key`` (the step key) is read only by the ``resample`` policy;
+    ``random`` draws from ``cfg.byz_seed`` so the subset is fixed for a
+    run, and ``prefix`` is key-free.  Identical on every worker for a
+    given key, so all buckets/leaves of one step see ONE byzantine set.
+    """
+    n_byz = n_byzantine(cfg, m)
+    if cfg.membership == "prefix" or n_byz == 0:
+        return jnp.arange(m) < n_byz
+    if cfg.membership == "random":
+        mkey = jax.random.PRNGKey(cfg.byz_seed)
+    elif cfg.membership == "resample":
+        if key is None:
+            raise ValueError("membership='resample' needs the step key")
+        mkey = jax.random.fold_in(key, _MEMBERSHIP_TAG)
+    else:
+        raise ValueError(f"unknown membership policy {cfg.membership!r}; "
+                         f"choose from {MEMBERSHIP_POLICIES}")
+    perm = jax.random.permutation(mkey, m)
+    return jnp.zeros((m,), bool).at[perm[:n_byz]].set(True)
+
+
+def data_membership(cfg: ByzantineConfig, m: int, step: int = 0) -> np.ndarray:
+    """NumPy-side membership mask for data-scope corruption (the
+    pipelines run outside jit and have no step key; ``resample`` draws
+    from ``byz_seed`` folded with the step index instead)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.byz_seed), step)
+    return np.asarray(membership_mask(cfg, m, key))
+
+
+# ---------------------------------------------------------------------------
+# attack registry
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AttackSpec:
+    """Scope-independent description of one Byzantine attack."""
+    name: str
+    scope: str = "gradient"             # "gradient" | "data"
+    knows: frozenset = frozenset()      # honest stats the rule reads
+    corrupt: Optional[Callable] = None  # (g, know, key, cfg) -> evil
+    corrupt_labels: Optional[Callable] = None  # (y, n_classes) -> y'
+
+    def __post_init__(self):
+        if self.scope not in ("gradient", "data"):
+            raise ValueError(f"{self.name}: unknown scope {self.scope!r}")
+        if (self.scope == "gradient") != (self.corrupt is not None):
+            raise ValueError(
+                f"{self.name}: gradient specs set corrupt, data specs don't")
+        if (self.scope == "data") != (self.corrupt_labels is not None):
+            raise ValueError(
+                f"{self.name}: data specs set corrupt_labels, gradient "
+                f"specs don't")
+        unknown = set(self.knows) - set(KNOWLEDGE)
+        if unknown:
+            raise ValueError(f"{self.name}: unknown knowledge "
+                             f"{sorted(unknown)}")
+
+
+_REGISTRY: dict[str, AttackSpec] = {}
+
+
+def register(spec: AttackSpec) -> AttackSpec:
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_spec(name: str) -> AttackSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown attack {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}") from None
+
+
+def registered() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---- corruption rules (paper §5.1 + literature) ----------------------------
+
+def _gaussian(g, know, key, cfg):
+    """Replace byzantine values with N(0, std²) noise (paper: std=200)."""
+    return jax.random.normal(key, g.shape, jnp.float32) * cfg.gaussian_std
+
+
+def _negation(g, know, key, cfg):
+    """Model Negation: -(sum of honest gradients) * c."""
+    return -cfg.negation_factor * know["hsum"]
+
+
+def _scale(g, know, key, cfg):
+    """Gradient Scale: own gradient scaled by a large constant."""
+    return g.astype(jnp.float32) * cfg.scale_factor
+
+
+def _sign_flip(g, know, key, cfg):
+    """Extra (not in paper): byzantine workers negate their gradient."""
+    return -g.astype(jnp.float32)
+
+
+def _alie(g, know, key, cfg):
+    """ALIE — "A Little Is Enough" (Baruch et al., 2019): move z
+    standard deviations from the honest mean, per coordinate — small
+    enough to pass distance filters, coordinated enough to bias the
+    aggregate.  z = cfg.alie_z (classic z_max heuristic ~1.5)."""
+    n = know["n_honest"]
+    mu = know["hsum"] / n
+    var = jnp.maximum(know["hsqsum"] / n - mu * mu, 0.0)
+    return mu - cfg.alie_z * jnp.sqrt(var)
+
+
+def _ipm(g, know, key, cfg):
+    """IPM — Inner-Product Manipulation (Xie et al., 2020):
+    -ε·mean(honest): for small ε the corrupted mean keeps a POSITIVE
+    inner product with the honest direction but is shrunk/reversed
+    enough to stall convergence."""
+    return -cfg.ipm_eps * (know["hsum"] / know["n_honest"])
+
+
+register(AttackSpec("gaussian", corrupt=_gaussian))
+register(AttackSpec("negation", knows=frozenset({"hsum"}),
+                    corrupt=_negation))
+register(AttackSpec("scale", corrupt=_scale))
+register(AttackSpec("sign_flip", corrupt=_sign_flip))
+register(AttackSpec("alie", knows=frozenset({"hsum", "hsqsum"}),
+                    corrupt=_alie))
+register(AttackSpec("ipm", knows=frozenset({"hsum"}), corrupt=_ipm))
+# the paper's Label Shift: y -> (n_classes - 1) - y on byzantine shards.
+# Data corruption happens in data/pipeline.py; gradients stay untouched.
+register(AttackSpec("label_flip", scope="data",
+                    corrupt_labels=lambda y, n_classes: n_classes - 1 - y))
+
+
+def is_gradient_attack(cfg: ByzantineConfig) -> bool:
+    """True when cfg names a registered gradient-scope attack that will
+    actually fire (alpha > 0)."""
+    if cfg.attack == "none" or cfg.alpha <= 0:
+        return False
+    return get_spec(cfg.attack).scope == "gradient"
+
+
+# ---------------------------------------------------------------------------
+# knowledge — the omniscient-adversary statistics, computed per scope
+# ---------------------------------------------------------------------------
+
+def _finish_knowledge(know: dict, knows, n_honest: int) -> dict:
+    if knows:
+        know["n_honest"] = jnp.float32(n_honest)
+    return know
+
+
+def _dense_knowledge(G, mask, knows, n_honest: int) -> dict:
+    """Honest per-coordinate moments from the full [m, d] matrix."""
+    know = {}
+    if knows:
+        keep = jnp.where(mask[:, None], 0.0, G.astype(jnp.float32))
+        if "hsum" in knows:
+            know["hsum"] = jnp.sum(keep, axis=0)
+        if "hsqsum" in knows:
+            know["hsqsum"] = jnp.sum(keep * keep, axis=0)
+    return _finish_knowledge(know, knows, n_honest)
+
+
+def _sharded_knowledge(g, is_byz, knows, axes, n_honest: int) -> dict:
+    """Same moments inside shard_map: zero this worker's contribution if
+    byzantine, psum over the worker axes — additive exactly like
+    ``engine.leaf_stats`` partials."""
+    know = {}
+    if knows:
+        keep = jnp.where(is_byz, 0.0, g.astype(jnp.float32))
+        if "hsum" in knows:
+            know["hsum"] = jax.lax.psum(keep, axes)
+        if "hsqsum" in knows:
+            know["hsqsum"] = jax.lax.psum(keep * keep, axes)
+    return _finish_knowledge(know, knows, n_honest)
+
+
+def _leaf_key(key, worker, leaf: int):
+    """Per-(worker, leaf) noise key — the SAME derivation in every
+    scope, so dense and sharded gaussian noise are bit-identical."""
+    return jax.random.fold_in(jax.random.fold_in(key, worker), leaf)
+
+
+# ---------------------------------------------------------------------------
+# executors
+# ---------------------------------------------------------------------------
+
+def apply_dense(G, key, cfg: ByzantineConfig):
+    """Corrupt the byzantine rows of the dense worker-gradient matrix
+    G [m, d].  Data-scope attacks and alpha=0 are no-ops here (data
+    corruption happens in the pipeline)."""
+    if not is_gradient_attack(cfg):
+        return G
+    spec = get_spec(cfg.attack)
+    m = G.shape[0]
+    n_byz = n_byzantine(cfg, m)
+    if n_byz == 0:
+        return G
+    mask = membership_mask(cfg, m, key)
+    know = _dense_knowledge(G, mask, spec.knows, m - n_byz)
+    keys = jax.vmap(lambda i: _leaf_key(key, i, 0))(jnp.arange(m))
+    evil = jax.vmap(lambda g, k: spec.corrupt(g, know, k, cfg))(G, keys)
+    return jnp.where(mask[:, None], evil.astype(G.dtype), G)
+
+
+def inject(grads, key, cfg: ByzantineConfig, axes, membership_key=None):
+    """Corrupt this worker's gradient pytree inside shard_map (global
+    scope before aggregation, or one bucket inside the blocked backward
+    scan).
+
+    ``key`` drives the noise (the blocked scope folds bucket/layer ids
+    into it so noise decorrelates across buckets and layers);
+    ``membership_key`` — when given — drives WHO is byzantine instead,
+    so every bucket of a step shares one membership draw (defaults to
+    ``key``)."""
+    if not is_gradient_attack(cfg):
+        return grads
+    spec = get_spec(cfg.attack)
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    m = axis_size(axes)
+    n_byz = n_byzantine(cfg, m)
+    if n_byz == 0:
+        return grads
+    idx = jax.lax.axis_index(axes)
+    mkey = key if membership_key is None else membership_key
+    is_byz = membership_mask(cfg, m, mkey)[idx]
+    leaves, tdef = jax.tree.flatten(grads)
+    out = []
+    for li, g in enumerate(leaves):
+        know = _sharded_knowledge(g, is_byz, spec.knows, axes, m - n_byz)
+        evil = spec.corrupt(g, know, _leaf_key(key, idx, li), cfg)
+        out.append(jnp.where(is_byz, evil.astype(g.dtype), g))
+    return jax.tree.unflatten(tdef, out)

@@ -1,2 +1,2 @@
 from .pipeline import ImageWorkerPipeline, LMWorkerPipeline
-from .synthetic import TokenStream, flip_labels, fmnist_like
+from .synthetic import TokenStream, fmnist_like

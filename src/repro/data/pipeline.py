@@ -3,9 +3,12 @@
 Produces batches with a leading worker axis [m, b, ...] — the layout
 both the vmap simulation path and the shard_map distributed path
 consume (the distributed path shards the worker axis over the mesh's
-worker axes).  Byzantine *data* corruption (label flip) happens here,
-on the shards of the byzantine workers, exactly as in the paper where
-byzantine machines "compute gradients on these data".
+worker axes).  Byzantine *data* corruption happens here, on the shards
+of the byzantine workers, exactly as in the paper where byzantine
+machines "compute gradients on these data": any data-scope
+``AttackSpec`` registered in :mod:`..core.threat` (label_flip ships)
+applies its ``corrupt_labels`` rule to the workers selected by the
+config's membership policy (``threat.data_membership``).
 """
 from __future__ import annotations
 
@@ -14,7 +17,17 @@ from typing import Optional
 import numpy as np
 
 from ..configs.base import ByzantineConfig, InputShape, ModelConfig
-from .synthetic import TokenStream, flip_labels, fmnist_like
+from ..core import threat
+from .synthetic import TokenStream, fmnist_like
+
+
+def data_attack_spec(byz: Optional[ByzantineConfig]):
+    """The active data-scope AttackSpec, or None (gradient-scope and
+    attack-free configs corrupt nothing here)."""
+    if byz is None or byz.attack == "none" or byz.alpha <= 0:
+        return None
+    spec = threat.get_spec(byz.attack)
+    return spec if spec.scope == "data" else None
 
 
 class LMWorkerPipeline:
@@ -33,11 +46,11 @@ class LMWorkerPipeline:
     def batch(self, step: int) -> dict:
         toks = self.stream.batch(step, self.m * self.b, self.seq)
         toks = toks.reshape(self.m, self.b, self.seq)
-        if (self.byz is not None and self.byz.attack == "label_flip"
-                and self.byz.alpha > 0):
-            n_byz = int(self.byz.alpha * self.m)
-            # corrupt the byzantine workers' target stream: reverse tokens
-            toks[:n_byz] = self.cfg.vocab - 1 - toks[:n_byz]
+        spec = data_attack_spec(self.byz)
+        if spec is not None:
+            # corrupt the byzantine workers' target stream
+            mask = threat.data_membership(self.byz, self.m, step)
+            toks[mask] = spec.corrupt_labels(toks[mask], self.cfg.vocab)
         out = {"tokens": toks}
         if self.cfg.n_prefix_tokens:
             rng = np.random.default_rng(step)
@@ -49,8 +62,10 @@ class LMWorkerPipeline:
 
 class ImageWorkerPipeline:
     """FashionMNIST-like shards for the LeNet repro: each worker owns n
-    samples (paper: i.i.d. per-worker datasets); byzantine workers' labels
-    are flipped when the attack is label_flip."""
+    samples (paper: i.i.d. per-worker datasets); byzantine workers'
+    labels are corrupted by any registered data-scope attack.  The
+    dataset is built once, so membership is the step-0 draw (the
+    ``resample`` policy degenerates to a seeded-random set here)."""
 
     def __init__(self, n_workers: int, n_per_worker: int, seed: int = 0,
                  byz: Optional[ByzantineConfig] = None, n_classes: int = 10):
@@ -58,9 +73,10 @@ class ImageWorkerPipeline:
         imgs, labels = fmnist_like(n_workers * n_per_worker, seed=seed)
         self.images = imgs.reshape(n_workers, n_per_worker, *imgs.shape[1:])
         labels = labels.reshape(n_workers, n_per_worker)
-        if byz is not None and byz.attack == "label_flip" and byz.alpha > 0:
-            n_byz = int(byz.alpha * n_workers)
-            labels[:n_byz] = flip_labels(labels[:n_byz], n_classes)
+        spec = data_attack_spec(byz)
+        if spec is not None:
+            mask = threat.data_membership(byz, n_workers)
+            labels[mask] = spec.corrupt_labels(labels[mask], n_classes)
         self.labels = labels
         self.test_images, self.test_labels = fmnist_like(2048, seed=seed + 777)
 

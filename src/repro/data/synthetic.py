@@ -64,6 +64,3 @@ def fmnist_like(n: int, seed: int = 0, image_size: int = 28, n_classes: int = 10
     return imgs[..., None].astype(np.float32), labels.astype(np.int32)
 
 
-def flip_labels(labels: np.ndarray, n_classes: int = 10) -> np.ndarray:
-    """Paper's Label Shift attack: y -> 9 - y."""
-    return (n_classes - 1 - labels).astype(labels.dtype)

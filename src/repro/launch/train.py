@@ -44,8 +44,14 @@ def main(argv=None):
     ap.add_argument("--aggregator", default="brsgd",
                     help="any rule registered in core.engine "
                          "(validated after parse, when jax loads)")
-    ap.add_argument("--attack", default="none")
+    ap.add_argument("--attack", default="none",
+                    help="'none' or any attack registered in core.threat "
+                         "(validated after parse, when jax loads; the "
+                         "error message lists the live registry)")
     ap.add_argument("--alpha", type=float, default=0.0)
+    ap.add_argument("--membership", default="prefix",
+                    choices=["prefix", "random", "resample"],
+                    help="byzantine-membership policy (core.threat)")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--agg-layout", default="auto")
@@ -60,7 +66,7 @@ def main(argv=None):
 
     from ..checkpoint import ckpt
     from ..configs import ByzantineConfig, TrainConfig, get_config
-    from ..core import engine
+    from ..core import engine, threat
     from ..data.pipeline import LMWorkerPipeline
     from ..launch.mesh import n_workers
     from ..models import params as PM
@@ -70,12 +76,15 @@ def main(argv=None):
     if args.aggregator not in engine.registered():
         ap.error(f"--aggregator {args.aggregator!r}: "
                  f"choose from {', '.join(engine.registered())}")
+    if args.attack != "none" and args.attack not in threat.registered():
+        ap.error(f"--attack {args.attack!r}: choose from none, "
+                 f"{', '.join(threat.registered())}")
     mesh = build_mesh(args.mesh)
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     bcfg = ByzantineConfig(aggregator=args.aggregator, attack=args.attack,
-                           alpha=args.alpha)
+                           alpha=args.alpha, membership=args.membership)
     tcfg = TrainConfig(model=cfg, byzantine=bcfg, optimizer=args.optimizer,
                        lr=args.lr, agg_layout=args.agg_layout,
                        agg_scope=args.agg_scope, remat=args.remat)

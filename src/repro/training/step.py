@@ -30,9 +30,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from ..configs.base import ByzantineConfig, ModelConfig, TrainConfig
-from ..core.blocked import (bucket_key, key_carrier, make_fsdp_agg_barrier,
-                            selection_token)
-from ..core.distributed import inject_attack, robust_aggregate
+from ..core import threat
+from ..core.blocked import key_carrier, make_fsdp_agg_barrier, selection_token
+from ..core.distributed import robust_aggregate
 from ..launch.mesh import n_workers, worker_axes
 from ..models import params as PM
 from ..models import transformer as TF
@@ -143,26 +143,26 @@ def build_train_step(tcfg: TrainConfig, mesh) -> StepBundle:
                       if k.startswith("seg_")}
             top_specs = {k: v for k, v in pspecs.items()
                          if not k.startswith("seg_")}
-            # per-bucket attack keys: without the fold_in every bucket's
-            # injected noise is bit-identical (correlated attack weaker
-            # than the threat model); the scan index decorrelates layers
-            # within a segment (the hook folds it in per call)
-            barriers = {k: make_fsdp_agg_barrier(v, bcfg, waxes)
+            # every barrier receives the RAW step key (key_carrier);
+            # the bucket name (static, folded inside the barrier bwd)
+            # and the scan index decorrelate the injected noise across
+            # buckets and layers, while byzantine membership is drawn
+            # from the unfolded key so all buckets corrupt ONE worker
+            # set (threat.membership_mask, incl. the resample policy)
+            barriers = {k: make_fsdp_agg_barrier(v, bcfg, waxes, k)
                         for k, v in lspecs.items()}
-            top_barrier = make_fsdp_agg_barrier(top_specs, bcfg, waxes)
-            keyfs = {k: key_carrier(bucket_key(key, k))
-                     for k in (*barriers, "top")}
+            top_barrier = make_fsdp_agg_barrier(top_specs, bcfg, waxes, "top")
+            keyf = key_carrier(key)
             toks = {k: selection_token(m) for k in (*barriers, "top")}
 
             def lfn(params, toks):
-                hooks = {k: (lambda p, i, b=b, t=toks[k], kf=keyfs[k]:
-                             b(p, t, i, kf))
+                hooks = {k: (lambda p, i, b=b, t=toks[k]: b(p, t, i, keyf))
                          for k, b in barriers.items()}
                 return TF.loss_fn(cfg, params, lbatch, remat=remat,
                                   seg_hooks=hooks,
                                   top_hook=lambda p: top_barrier(
                                       p, toks["top"], jnp.float32(0),
-                                      keyfs["top"]))
+                                      keyf))
 
             (loss, met), (grads, tgrads) = jax.value_and_grad(
                 lfn, argnums=(0, 1), has_aux=True)(params, toks)
@@ -176,7 +176,7 @@ def build_train_step(tcfg: TrainConfig, mesh) -> StepBundle:
                 return TF.loss_fn(cfg, params, lbatch, remat=remat)
 
             (loss, met), grads = jax.value_and_grad(lfn, has_aux=True)(params)
-            grads = inject_attack(grads, key, bcfg, waxes)
+            grads = threat.inject(grads, key, bcfg, waxes)
             agg, st = robust_aggregate(grads, bcfg, waxes, layout=layout)
             sel_hist = None
 

@@ -6,7 +6,7 @@ import pytest
 
 from repro.configs.base import ByzantineConfig
 from repro.core import aggregators as A
-from repro.core import attacks
+from repro.core import threat
 from repro.kernels import ref
 
 
@@ -17,8 +17,9 @@ def make_G(rng, m=20, d=500, byz=0, attack="gaussian", scale=1e4):
     G = jnp.asarray(G)
     if byz:
         cfg = ByzantineConfig(attack=attack, alpha=byz / m,
-                              attack_scale=scale, gaussian_std=200.0)
-        G = attacks.apply_attack(G, jax.random.PRNGKey(0), cfg)
+                              scale_factor=scale, negation_factor=scale,
+                              gaussian_std=200.0)
+        G = threat.apply_dense(G, jax.random.PRNGKey(0), cfg)
     return G, jnp.asarray(mu)
 
 
@@ -140,23 +141,23 @@ def test_attack_semantics(rng):
     G = jnp.asarray(rng.normal(size=(m, d)).astype("f4"))
     key = jax.random.PRNGKey(1)
 
-    cfg = ByzantineConfig(attack="scale", alpha=0.3, attack_scale=100.0)
-    Ga = attacks.apply_attack(G, key, cfg)
+    cfg = ByzantineConfig(attack="scale", alpha=0.3, scale_factor=100.0)
+    Ga = threat.apply_dense(G, key, cfg)
     np.testing.assert_allclose(np.asarray(Ga[:3]), np.asarray(G[:3]) * 100.0,
                                rtol=1e-6)
     np.testing.assert_array_equal(np.asarray(Ga[3:]), np.asarray(G[3:]))
 
-    cfg = ByzantineConfig(attack="negation", alpha=0.2, attack_scale=10.0)
-    Gn = attacks.apply_attack(G, key, cfg)
+    cfg = ByzantineConfig(attack="negation", alpha=0.2, negation_factor=10.0)
+    Gn = threat.apply_dense(G, key, cfg)
     honest = np.asarray(G[2:]).sum(0)
     np.testing.assert_allclose(np.asarray(Gn[0]), -10.0 * honest, rtol=1e-4)
 
     cfg = ByzantineConfig(attack="sign_flip", alpha=0.5)
-    Gs = attacks.apply_attack(G, key, cfg)
+    Gs = threat.apply_dense(G, key, cfg)
     np.testing.assert_allclose(np.asarray(Gs[:5]), -np.asarray(G[:5]))
 
     cfg = ByzantineConfig(attack="none", alpha=0.5)
-    np.testing.assert_array_equal(np.asarray(attacks.apply_attack(G, key, cfg)),
+    np.testing.assert_array_equal(np.asarray(threat.apply_dense(G, key, cfg)),
                                   np.asarray(G))
 
 
@@ -201,8 +202,8 @@ def test_brsgd_under_literature_attacks(rng, attack):
 def test_alie_rows_near_honest_band(rng):
     """ALIE hides inside ~1.5 sigma of the honest per-coordinate spread."""
     G, _ = make_G(rng, m=20, byz=0)
-    cfg = ByzantineConfig(attack="alie", alpha=0.25, attack_scale=1e10)
-    Ga = attacks.apply_attack(G, jax.random.PRNGKey(0), cfg)
+    cfg = ByzantineConfig(attack="alie", alpha=0.25)
+    Ga = threat.apply_dense(G, jax.random.PRNGKey(0), cfg)
     hon = np.asarray(Ga[5:])
     byz = np.asarray(Ga[:5])
     lo = hon.mean(0) - 4 * hon.std(0)
@@ -213,7 +214,7 @@ def test_gaussian_attack_replaces_rows(rng):
     m, d = 10, 2000
     G = jnp.zeros((m, d))
     cfg = ByzantineConfig(attack="gaussian", alpha=0.3, gaussian_std=200.0)
-    Ga = attacks.apply_attack(G, jax.random.PRNGKey(2), cfg)
+    Ga = threat.apply_dense(G, jax.random.PRNGKey(2), cfg)
     byz_std = float(jnp.std(Ga[:3]))
     assert 150.0 < byz_std < 250.0
     assert float(jnp.max(jnp.abs(Ga[3:]))) == 0.0

@@ -119,18 +119,19 @@ def test_bucket_attack_noise_decorrelated():
     DIFFERENT gaussian noise (the seed passed one key to every hook, so
     all buckets received bit-identical noise — a correlated attack
     weaker than the threat model).  Likewise two LAYERS of one scanned
-    segment (same hook, different scan index) must differ."""
+    segment (same hook, different scan index) must differ.  Every
+    barrier now receives the RAW step key; the bucket name folds into
+    the noise key inside the barrier's backward."""
     code = COMMON + textwrap.dedent("""
         bspecs = {"w": P("data", None)}
         bcfg = ByzantineConfig(aggregator="mean", attack="gaussian",
                                alpha=0.5)
         key = jax.random.PRNGKey(7)
+        kf = key_carrier(key)
         ct = {"w": jnp.asarray(rng.normal(size=(8, 6)).astype("f4"))}
 
-        hook = make_fsdp_agg_barrier(bspecs, bcfg, axes)
-
         def run_bucket(name, layer=0.0):
-            kf = key_carrier(bucket_key(key, name))
+            hook = make_fsdp_agg_barrier(bspecs, bcfg, axes, name)
             @partial(shard_map, mesh=mesh, in_specs=(P(),),
                      out_specs=P("data"))
             def f(ct_full):

@@ -29,16 +29,17 @@ def _train(aggregator: str, attack: str, alpha: float, steps: int = STEPS,
     key = jax.random.PRNGKey(seed + 1)
     for s in range(steps):
         batch = {k: jnp.asarray(v) for k, v in pipe.batch(s, 8).items()}
-        params, gnorm = step(params, batch, jax.random.fold_in(key, s))
+        params, met = step(params, batch, jax.random.fold_in(key, s))
     acc = float(lenet.lenet_accuracy(params, jnp.asarray(pipe.test_images),
                                      jnp.asarray(pipe.test_labels)))
-    return acc, params
+    return acc, params, {k: float(v) for k, v in met.items()}
 
 
 @pytest.fixture(scope="module")
 def baseline_acc():
-    acc, _ = _train("mean", "none", 0.0)
+    acc, _, met = _train("mean", "none", 0.0)
     assert acc > 0.5, f"attack-free baseline failed to learn ({acc})"
+    assert met["n_selected"] == M    # mean has no selection phase
     return acc
 
 
@@ -51,31 +52,36 @@ def test_brsgd_matches_attack_free_baseline(baseline_acc, attack):
     is slowed rather than prevented — it gets a longer run and a wider
     mid-training band, matching the paper's Fig-3 curves."""
     steps = STEPS + 20 if attack == "label_flip" else STEPS
-    acc, params = _train("brsgd", attack, alpha=0.25, steps=steps)
+    acc, params, met = _train("brsgd", attack, alpha=0.25, steps=steps)
     assert np.isfinite(np.asarray(tree_to_vec(params))).all()
     margin = 0.25 if attack == "label_flip" else 0.15
     assert acc > baseline_acc - margin, f"{attack}: {acc} vs base {baseline_acc}"
+    # the sim step reports the REAL selection (the seed returned only a
+    # norm): gradient attackers must have been rejected
+    assert 0 < met["n_selected"] <= M
+    if attack != "label_flip":
+        assert met["n_selected"] < M, met
 
 
 @pytest.mark.parametrize("attack", ["gaussian", "negation"])
 def test_mean_collapses_under_attack(baseline_acc, attack):
     """Paper Fig 3 (a0/a1): naive mean is destroyed by gradient attacks
     at alpha=0.25."""
-    acc, params = _train("mean", attack, alpha=0.25)
+    acc, params, _ = _train("mean", attack, alpha=0.25)
     vec = np.asarray(tree_to_vec(params))
     assert (not np.isfinite(vec).all()) or acc < baseline_acc - 0.2
 
 
 def test_brsgd_alpha_half_still_learns(baseline_acc):
     """alpha just under 1/2 with beta=1/2 (paper setting)."""
-    acc, _ = _train("brsgd", "scale", alpha=0.45)
+    acc, _, _ = _train("brsgd", "scale", alpha=0.45)
     assert acc > baseline_acc - 0.2
 
 
 def test_median_resilient_but_runs():
     """Median survives the attack but converges slower than BrSGD —
     exactly the paper's Fig-3 (b1/b3) observation."""
-    acc, _ = _train("median", "gaussian", alpha=0.25, steps=40)
+    acc, _, _ = _train("median", "gaussian", alpha=0.25, steps=40)
     assert acc > 0.3
 
 

@@ -1,0 +1,308 @@
+"""Threat-model engine: registry contract, membership policies, and the
+dense↔gather↔a2a↔blocked attack-parity matrix.
+
+One AttackSpec per attack executes in every scope (core/threat.py); the
+parity tests pin the per-worker shard_map injection and the blocked
+barrier injection to the dense [m, d] execution of the SAME registry
+entry — including ``alie``/``ipm``, which the seed rejected with
+``ValueError`` in every distributed and blocked run.
+"""
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_multidevice
+from repro.configs.base import ByzantineConfig
+from repro.core import threat
+
+# ---------------------------------------------------------------------------
+# registry contract (in-process)
+# ---------------------------------------------------------------------------
+
+
+def test_registry_covers_all_shipped_attacks():
+    names = threat.registered()
+    assert len(names) >= 7
+    for a in ("gaussian", "negation", "scale", "sign_flip", "alie", "ipm"):
+        assert threat.get_spec(a).scope == "gradient", a
+    assert threat.get_spec("label_flip").scope == "data"
+    assert threat.get_spec("label_flip").corrupt_labels(3, 10) == 6
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):        # gradient spec without corrupt
+        threat.AttackSpec("bad")
+    with pytest.raises(ValueError):        # data spec with corrupt
+        threat.AttackSpec("bad", scope="data", corrupt=lambda *a: None)
+    with pytest.raises(ValueError):        # unknown knowledge stat
+        threat.AttackSpec("bad", knows=frozenset({"nope"}),
+                          corrupt=lambda *a: None)
+    with pytest.raises(ValueError):        # unknown scope
+        threat.AttackSpec("bad", scope="wire", corrupt=lambda *a: None)
+    with pytest.raises(KeyError):
+        threat.get_spec("no_such_attack")
+
+
+def test_membership_policies():
+    m = 12
+    pre = ByzantineConfig(attack="scale", alpha=0.25)
+    np.testing.assert_array_equal(
+        np.asarray(threat.membership_mask(pre, m)), np.arange(m) < 3)
+    # random: fixed subset of the right size, a function of byz_seed only
+    ran = ByzantineConfig(attack="scale", alpha=0.25, membership="random",
+                          byz_seed=7)
+    m1 = np.asarray(threat.membership_mask(ran, m))
+    m2 = np.asarray(threat.membership_mask(ran, m, jax.random.PRNGKey(99)))
+    assert m1.sum() == 3 and (m1 == m2).all()
+    other = np.asarray(threat.membership_mask(
+        ByzantineConfig(attack="scale", alpha=0.25, membership="random",
+                        byz_seed=8), m))
+    assert not (m1 == other).all()
+    # resample: same size, identity varies with the step key
+    res = ByzantineConfig(attack="scale", alpha=0.25, membership="resample")
+    r1 = np.asarray(threat.membership_mask(res, m, jax.random.PRNGKey(0)))
+    r2 = np.asarray(threat.membership_mask(res, m, jax.random.PRNGKey(1)))
+    assert r1.sum() == r2.sum() == 3
+    with pytest.raises(ValueError):        # resample needs the step key
+        threat.membership_mask(res, m)
+    with pytest.raises(ValueError):
+        threat.membership_mask(
+            ByzantineConfig(attack="scale", alpha=0.25, membership="what"), m)
+
+
+def test_knowledge_additive_over_column_splits(rng):
+    """hsum/hsqsum are additive over disjoint dim ranges — the property
+    that lets any scope compute them per leaf/shard and psum, exactly
+    like engine.leaf_stats partials."""
+    m, d = 10, 60
+    G = jnp.asarray(rng.normal(size=(m, d)).astype("f4"))
+    mask = jnp.arange(m) < 3
+    knows = frozenset(threat.KNOWLEDGE)
+    whole = threat._dense_knowledge(G, mask, knows, m - 3)
+    parts = [threat._dense_knowledge(G[:, s], mask, knows, m - 3)
+             for s in (slice(0, 13), slice(13, 35), slice(35, 60))]
+    for k in knows:
+        summed = np.concatenate([np.asarray(p[k]) for p in parts])
+        np.testing.assert_allclose(summed, np.asarray(whole[k]),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_resample_moves_corruption_between_steps(rng):
+    G = jnp.asarray(rng.normal(size=(12, 30)).astype("f4"))
+    cfg = ByzantineConfig(attack="scale", alpha=0.25, membership="resample",
+                          scale_factor=100.0)
+    hit = []
+    for s in range(2):
+        Ga = threat.apply_dense(G, jax.random.PRNGKey(s), cfg)
+        rows = np.flatnonzero((np.asarray(Ga) != np.asarray(G)).any(axis=1))
+        assert len(rows) == 3
+        hit.append(set(rows.tolist()))
+    assert hit[0] != hit[1], "resample reused one byzantine set"
+
+
+# ---------------------------------------------------------------------------
+# dense ↔ shard_map ↔ blocked parity (subprocess, 8 host devices)
+# ---------------------------------------------------------------------------
+
+COMMON = textwrap.dedent("""
+    import jax, jax.numpy as jnp, numpy as np
+    from functools import partial
+    from repro.compat import P, shard_map
+    from repro.configs.base import ByzantineConfig
+    from repro.core import engine, threat
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((8,), ("data",))
+    axes = ("data",)
+    m = 8
+    rng = np.random.default_rng(0)
+    key = jax.random.PRNGKey(0)
+    GRAD = [n for n in threat.registered()
+            if threat.get_spec(n).scope == "gradient"]
+    assert "alie" in GRAD and "ipm" in GRAD
+
+    def inject_tree(gs, bcfg, k):
+        @partial(shard_map, mesh=mesh,
+                 in_specs=({n: P("data") for n in gs}, P()),
+                 out_specs={n: P("data") for n in gs})
+        def inj(tree, kk):
+            local = {n: v.reshape(v.shape[1:]) for n, v in tree.items()}
+            out = threat.inject(local, kk, bcfg, axes)
+            return {n: v[None] for n, v in out.items()}
+        return inj({n: jnp.asarray(v) for n, v in gs.items()}, k)
+""")
+
+
+def test_dense_vs_shardmap_parity_all_gradient_attacks():
+    """threat.inject inside shard_map == threat.apply_dense on the same
+    G, for EVERY registered gradient attack — the seed raised
+    ValueError for alie/ipm here.  Single leaf: noise keys line up, so
+    even gaussian matches bit-for-bit."""
+    code = COMMON + textwrap.dedent("""
+        g = rng.normal(size=(m, 12)).astype("f4")
+        for kind in GRAD:
+            bcfg = ByzantineConfig(attack=kind, alpha=0.25)
+            got = np.asarray(inject_tree({"g": g}, bcfg, key)["g"])
+            want = np.asarray(threat.apply_dense(jnp.asarray(g), key, bcfg))
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5,
+                                       err_msg=kind)
+        # gaussian noise keys are derived identically -> bit-exact
+        bcfg = ByzantineConfig(attack="gaussian", alpha=0.25)
+        got = np.asarray(inject_tree({"g": g}, bcfg, key)["g"])
+        want = np.asarray(threat.apply_dense(jnp.asarray(g), key, bcfg))
+        np.testing.assert_array_equal(got, want)
+        # membership policies hold per-worker too: the corrupted set is
+        # the dense mask, not a worker-index prefix
+        bcfg = ByzantineConfig(attack="scale", alpha=0.25,
+                               membership="random", byz_seed=3,
+                               scale_factor=50.0)
+        got = np.asarray(inject_tree({"g": g}, bcfg, key)["g"])
+        mask = np.asarray(threat.membership_mask(bcfg, m))
+        hit = (got != g).any(axis=1)
+        np.testing.assert_array_equal(hit, mask)
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code)
+
+
+def test_multi_leaf_knowledge_parity():
+    """Per-leaf psum'd knowledge == dense knowledge on the concatenated
+    matrix for the stat-consuming attacks (per-coordinate moments are
+    leafwise, so splitting the gradient into leaves changes nothing)."""
+    code = COMMON + textwrap.dedent("""
+        leaves = {"a": (3, 5), "b": (17,), "c": (2, 2)}
+        gs = {n: rng.normal(size=(m,) + s).astype("f4")
+              for n, s in leaves.items()}
+        G = jnp.concatenate([jnp.asarray(v).reshape(m, -1)
+                             for v in gs.values()], axis=1)
+        for kind in ("negation", "alie", "ipm", "scale", "sign_flip"):
+            bcfg = ByzantineConfig(attack=kind, alpha=0.25,
+                                   negation_factor=7.0, scale_factor=7.0)
+            out = inject_tree(gs, bcfg, key)
+            got = np.concatenate([np.asarray(out[n]).reshape(m, -1)
+                                  for n in gs], axis=1)
+            want = np.asarray(threat.apply_dense(G, key, bcfg))
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                       err_msg=kind)
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code)
+
+
+def test_alie_ipm_through_aggregation_both_layouts():
+    """Regression: the full attack->aggregate pipeline runs under
+    shard_map in BOTH collective layouts for alie/ipm (the seed's
+    inject_attack raised ValueError) and matches the dense path."""
+    code = COMMON + textwrap.dedent("""
+        from repro.core.distributed import robust_aggregate
+        gs = {"w": rng.normal(size=(m, 4, 5)).astype("f4"),
+              "b": rng.normal(size=(m, 3)).astype("f4")}
+        G = jnp.concatenate([jnp.asarray(v).reshape(m, -1)
+                             for v in gs.values()], axis=1)
+        for kind in ("alie", "ipm"):
+            for agg in ("brsgd", "median"):
+                bcfg = ByzantineConfig(aggregator=agg, attack=kind,
+                                       alpha=0.25)
+                want = np.asarray(engine.aggregate_local(
+                    threat.apply_dense(G, key, bcfg), bcfg))
+                for layout in ("gather", "a2a"):
+                    @partial(shard_map, mesh=mesh,
+                             in_specs=({n: P("data") for n in gs}, P()),
+                             out_specs={n: P() for n in gs})
+                    def run(tree, kk):
+                        local = {n: v.reshape(v.shape[1:])
+                                 for n, v in tree.items()}
+                        local = threat.inject(local, kk, bcfg, axes)
+                        return robust_aggregate(local, bcfg, axes,
+                                                layout=layout)[0]
+                    out = run({n: jnp.asarray(v) for n, v in gs.items()},
+                              key)
+                    got = np.concatenate([np.asarray(out[n]).reshape(-1)
+                                          for n in gs])
+                    np.testing.assert_allclose(
+                        got, want, rtol=1e-4, atol=1e-5,
+                        err_msg=f"{kind}/{agg}/{layout}")
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code)
+
+
+def test_blocked_barrier_injects_any_registered_attack():
+    """The blocked custom-VJP barrier corrupts per-bucket gradients via
+    the SAME registry entries: barrier(bwd) with the mean rule ==
+    dense corrupt + mean, for alie/ipm/scale AND (bit-exact keys)
+    gaussian.  The noise key folds bucket+layer inside the barrier; the
+    dense reference folds the same ids."""
+    code = COMMON + textwrap.dedent("""
+        from repro.core.blocked import (bucket_key, key_carrier,
+                                        make_fsdp_agg_barrier,
+                                        selection_token)
+        bspecs = {"w": P(None)}
+        kf = key_carrier(key)
+        ct = rng.normal(size=(m, 7)).astype("f4")   # per-worker gradients
+
+        def blocked_mean(bcfg, name):
+            hook = make_fsdp_agg_barrier(bspecs, bcfg, axes, name)
+            @partial(shard_map, mesh=mesh, in_specs=(P("data"),),
+                     out_specs=P())
+            def f(ct_w):
+                p = {"w": jnp.zeros((7,), jnp.float32)}
+                _, vjp = jax.vjp(hook, p, selection_token(m),
+                                 jnp.float32(0), kf)
+                agg, _, _, _ = vjp({"w": ct_w.reshape(-1)})
+                return agg["w"]
+            return np.asarray(f(jnp.asarray(ct)))
+
+        for kind in ("alie", "ipm", "scale", "gaussian"):
+            bcfg = ByzantineConfig(aggregator="mean", attack=kind,
+                                   alpha=0.25)
+            got = blocked_mean(bcfg, "seg_0")
+            # dense reference: same noise-key derivation as the barrier
+            k_noise = jax.random.fold_in(bucket_key(key, "seg_0"), 0)
+            Gc = threat.apply_dense(jnp.asarray(ct), k_noise, bcfg)
+            want = np.asarray(engine.aggregate_local(Gc, bcfg))
+            np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5,
+                                       err_msg=kind)
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code)
+
+
+def test_blocked_train_step_runs_alie():
+    """Acceptance: ByzantineConfig(attack="alie") trains under
+    agg_scope=blocked on the tier-1 mesh with no ValueError (the seed's
+    inject_attack raised for alie/ipm in every blocked run)."""
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import ARCHS, TrainConfig, ByzantineConfig
+        from repro.training.step import build_train_step
+        from repro.models import transformer as TF, params as PM
+        from repro.launch.mesh import make_mesh
+        from repro.data.pipeline import LMWorkerPipeline
+
+        mesh = make_mesh((8,), ("data",))
+        cfg = ARCHS["qwen3-0.6b"].reduced()
+        bcfg = ByzantineConfig(aggregator="brsgd", attack="alie", alpha=0.25)
+        tcfg = TrainConfig(model=cfg, byzantine=bcfg, optimizer="sgd",
+                           lr=0.05, agg_scope="blocked", agg_layout="a2a")
+        bundle = build_train_step(tcfg, mesh)
+        psh, osh, bsh = bundle.shardings(mesh)
+        key = jax.random.PRNGKey(0)
+        params = jax.device_put(PM.init_params(TF.param_defs(cfg), key), psh)
+        pipe = LMWorkerPipeline(cfg, 8, 2, 32, byz=bcfg)
+        with mesh:
+            for s in range(2):
+                batch = {k: jax.device_put(jnp.asarray(v), bsh[k])
+                         for k, v in pipe.batch(s).items()}
+                params, _, met = bundle.step_fn(params, (), batch,
+                                                jnp.int32(s),
+                                                jax.random.fold_in(key, s))
+        met = {k: float(v) for k, v in met.items()}
+        assert np.isfinite(met["loss"]), met
+        assert 0 < met["n_selected"] <= 8, met
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code, timeout=560)
