@@ -8,11 +8,17 @@ keeps the real device); ``blocked`` is the FSDP in-backward bucket path
 (core.blocked) timed on one FSDP-sharded bucket.  Raw wall-times are printed as CSV, the
 scaling exponents are fitted (brsgd ~ m^a d^b with a ~ 1, b ~ 1; krum
 grows ~ m² at fixed d), and every row is emitted to ``BENCH_agg.json``
-at the repo root so the perf trajectory of the fused select+masked-mean
-kernel is tracked across PRs.
+at the repo root — stamped with backend/jax-version/git-rev metadata
+(``benchmarks/check_bench.py`` validates the schema in CI) so the perf
+trajectory of the fused statistics + select kernels is trackable across
+PRs: ``--compare BASELINE`` prints per-(aggregator × layout) speedups
+vs a previously committed file, and ``--compare OLD NEW`` diffs two
+files without re-timing anything.
 """
 from __future__ import annotations
 
+import argparse
+import datetime
 import json
 import os
 import subprocess
@@ -31,8 +37,25 @@ from .common import time_fn
 MS = [8, 16, 32, 64]
 DS = [10_000, 40_000, 160_000]
 D_DIST = 40_000          # distributed rows: one d, m = n_devices = 8
-BENCH_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                          "..", "BENCH_agg.json")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_PATH = os.path.join(REPO, "BENCH_agg.json")
+SCHEMA = 2               # 2: added the "meta" stamp (check_bench.py)
+
+
+def bench_meta() -> dict:
+    """Provenance stamp for one benchmark run — enough to interpret a
+    row months later: numbers from different backends or jax versions
+    are not comparable."""
+    try:
+        rev = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=REPO, capture_output=True, text=True,
+                             timeout=10).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        rev = "unknown"
+    return {"backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "git_rev": rev,
+            "date": datetime.date.today().isoformat()}
 
 _DIST_SNIPPET = textwrap.dedent("""
     import json, time
@@ -113,7 +136,50 @@ def _distributed_rows():
     return []
 
 
+def compare(base: dict, cur: dict) -> None:
+    """Print per-(aggregator × layout) speedup of ``cur`` over ``base``
+    (geometric mean across the (m, d) grid points both files share)."""
+    def keyed(rows):
+        return {(r["aggregator"], r["layout"], r["m"], r["d"]):
+                r["us_per_call"] for r in rows}
+    b, c = keyed(base["rows"]), keyed(cur["rows"])
+    shared = sorted(set(b) & set(c))
+    if not shared:
+        print("# compare: no shared (aggregator, layout, m, d) rows")
+        return
+    for meta_of, tag in ((base, "base"), (cur, "cur ")):
+        mt = meta_of.get("meta", {})
+        print(f"# {tag}: backend={mt.get('backend', '?')} "
+              f"jax={mt.get('jax_version', '?')} "
+              f"rev={mt.get('git_rev', '?')} date={mt.get('date', '?')}")
+    groups: dict = {}
+    for k in shared:
+        groups.setdefault(k[:2], []).append(b[k] / c[k])
+    print("aggregator,layout,n_points,speedup_geomean")
+    for (agg, layout), ratios in sorted(groups.items()):
+        gm = float(np.exp(np.mean(np.log(ratios))))
+        print(f"{agg},{layout},{len(ratios)},{gm:.2f}x")
+
+
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--compare", nargs="+", metavar="BENCH_JSON",
+                    help="one file: run, then print speedup vs it; "
+                         "two files: diff OLD NEW without running")
+    ap.add_argument("--out", default=BENCH_PATH,
+                    help="output path (default: repo BENCH_agg.json)")
+    args = ap.parse_args()
+
+    if args.compare and len(args.compare) == 2:
+        old, new = (json.load(open(p)) for p in args.compare)
+        compare(old, new)
+        return 0
+    if args.compare and len(args.compare) > 2:
+        ap.error("--compare takes one or two files")
+    # load the baseline BEFORE the run: --out may overwrite the very
+    # file being compared against (the committed-BENCH use case)
+    baseline = json.load(open(args.compare[0])) if args.compare else None
+
     rng = np.random.default_rng(0)
     rows, times = [], {}
     fns = {}
@@ -158,12 +224,14 @@ def main():
           f"brsgd x{rb:.1f} (O(m)->4x)")
     print(f"# CLAIM brsgd O(md): {'PASS' if ok else 'FAIL'}")
 
-    out = {"schema": 1, "rows": rows, "fits": fits,
-           "krum_ratio_16_to_64": float(r64_16),
+    out = {"schema": SCHEMA, "meta": bench_meta(), "rows": rows,
+           "fits": fits, "krum_ratio_16_to_64": float(r64_16),
            "brsgd_ratio_16_to_64": float(rb), "claim_pass": bool(ok)}
-    with open(BENCH_PATH, "w") as f:
+    with open(args.out, "w") as f:
         json.dump(out, f, indent=1)
-    print(f"# wrote {os.path.normpath(BENCH_PATH)} ({len(rows)} rows)")
+    print(f"# wrote {os.path.normpath(args.out)} ({len(rows)} rows)")
+    if baseline is not None:
+        compare(baseline, out)
     return 0
 
 

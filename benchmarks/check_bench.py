@@ -1,0 +1,92 @@
+"""Validate the committed ``BENCH_agg.json`` schema + metadata.
+
+Import-check tier: no timing, no devices — safe to run in CI on every
+PR (.github/workflows/ci.yml).  Guards the perf-trajectory contract:
+every benchmark file must carry the provenance stamp (backend /
+jax-version / git-rev) that makes cross-PR ``agg_cost.py --compare``
+runs meaningful, and every registered aggregator must have local-layout
+rows so a registry addition without a benchmark regeneration fails
+loudly.
+
+Usage: ``PYTHONPATH=src python benchmarks/check_bench.py [BENCH_JSON]``
+Exit code 0 on a valid file, 1 with a message per violation otherwise.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+LAYOUTS = {"local", "gather", "a2a", "blocked"}
+META_KEYS = ("backend", "jax_version", "git_rev", "date")
+ROW_KEYS = ("aggregator", "layout", "m", "d", "us_per_call")
+SCHEMA = 2
+
+
+def check(path: str) -> list:
+    errors = []
+    try:
+        with open(path) as f:
+            bench = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+
+    if bench.get("schema") != SCHEMA:
+        errors.append(f"schema must be {SCHEMA}, got {bench.get('schema')!r}")
+    meta = bench.get("meta")
+    if not isinstance(meta, dict):
+        errors.append("missing 'meta' provenance stamp")
+    else:
+        for k in META_KEYS:
+            if not isinstance(meta.get(k), str) or not meta.get(k):
+                errors.append(f"meta.{k} must be a non-empty string")
+
+    rows = bench.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return errors + ["'rows' must be a non-empty list"]
+    for i, r in enumerate(rows):
+        ctx = f"rows[{i}]"
+        if not isinstance(r, dict) or set(ROW_KEYS) - set(r):
+            errors.append(f"{ctx}: needs keys {ROW_KEYS}")
+            continue
+        if r["layout"] not in LAYOUTS:
+            errors.append(f"{ctx}: unknown layout {r['layout']!r}")
+        if not (isinstance(r["m"], int) and r["m"] > 0
+                and isinstance(r["d"], int) and r["d"] > 0):
+            errors.append(f"{ctx}: m/d must be positive ints")
+        us = r["us_per_call"]
+        if not (isinstance(us, (int, float)) and math.isfinite(us)
+                and us > 0):
+            errors.append(f"{ctx}: us_per_call must be positive finite")
+
+    # every registered aggregator has local rows (needs PYTHONPATH=src;
+    # skipped gracefully when repro isn't importable, e.g. bare checkout)
+    try:
+        from repro.core import engine
+    except ImportError:
+        engine = None
+    if engine is not None:
+        local = {r["aggregator"] for r in rows
+                 if isinstance(r, dict) and r.get("layout") == "local"}
+        missing = set(engine.registered()) - local
+        if missing:
+            errors.append(f"registered aggregators without local rows: "
+                          f"{sorted(missing)} — re-run benchmarks/agg_cost.py")
+    return errors
+
+
+def main(argv) -> int:
+    path = argv[1] if len(argv) > 1 else os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_agg.json")
+    errors = check(path)
+    for e in errors:
+        print(f"check_bench: {e}", file=sys.stderr)
+    if not errors:
+        print(f"check_bench: {os.path.normpath(path)} OK")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

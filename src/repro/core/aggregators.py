@@ -14,7 +14,11 @@ The same entries power the ``gather``/``a2a`` shard_map layouts in
 :mod:`.distributed`.
 
 Complexities (paper §2): brsgd O(md); cwise median O(dm log m);
-trimmed mean O(dm log m); krum O(m²(d + log m)).
+trimmed mean O(dm log m); krum O(m²(d + log m)).  Every statistic and
+order statistic flows through the fused one-sort pass
+(``ops.fused_stats`` / ``ref.sorted_worker_rows``; DESIGN.md §Perf),
+and the replicated BrSGD selection is a sort-free counting quantile —
+the measured local scaling is ~m^0.9 d^0.85 (BENCH_agg.json).
 """
 from __future__ import annotations
 

@@ -29,7 +29,9 @@ layer slice (see ``transformer.forward(param_hook=...)``):
                 stays on the 1×-memory a2a path (no all_gather
                 fallback; ``engine.pad_correction`` removes the pad
                 columns' score contribution)
-             -> ``engine.leaf_stats`` partials, one psum, the registry
+             -> ``engine.leaf_stats`` partials (ONE fused pass per
+                view — every statistic the rule declares from a single
+                read, DESIGN.md §Perf), one psum, the registry
                 ``select`` or ``column`` rule, weighted combine
              -> returns the aggregated gradient's local FSDP shard,
                 plus the bucket's n_selected histogram on the selection

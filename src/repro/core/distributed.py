@@ -52,7 +52,7 @@ def worker_index(axes):
 # ---------------------------------------------------------------------------
 
 def robust_aggregate(grads, cfg: ByzantineConfig, axes=("data",),
-                     layout: str = "gather"):
+                     layout: str = "gather", flatten_columns: bool = False):
     """Aggregate a gradient pytree across the worker axes.
 
     Returns the aggregated pytree (identical on every worker) plus the
@@ -61,6 +61,10 @@ def robust_aggregate(grads, cfg: ByzantineConfig, axes=("data",),
     mean fast path).
     Dispatches any aggregator registered in :mod:`.engine`;
     ``cfg.aggregator == "mean"`` reduces to a plain pmean (the
-    non-robust baseline fast path).
+    non-robust baseline fast path).  ``flatten_columns``: opt-in 2-D
+    view for gather-layout column rules on N-D leaves — pass True only
+    when the mesh has no auto ('model') axis (see
+    ``engine.aggregate_sharded``).
     """
-    return engine.aggregate_sharded(grads, cfg, axes=axes, layout=layout)
+    return engine.aggregate_sharded(grads, cfg, axes=axes, layout=layout,
+                                    flatten_columns=flatten_columns)

@@ -43,8 +43,12 @@ Layouts
             experimental setting; Pallas kernels when on TPU).
 ``gather``  inside shard_map: all_gather per leaf over the worker axes
             — every device redundantly holds all m workers' values for
-            the dims it owns (m× transient memory; paper-faithful
-            "master collects G").
+            the dims it owns (paper-faithful "master collects G").
+            Select rules gather each leaf exactly ONCE, for the fused
+            stats pass; the gathered view is transient (peak m× one
+            leaf, not m× the model) because the weighted combine is a
+            psum of each worker's own weighted gradient, never a second
+            pass over gathered data.
 ``a2a``     inside shard_map: flatten, zero-pad to m·⌈D/m⌉, all_to_all
             — each device owns ALL workers for 1/m of the dims (1×
             transient memory); per-worker stats finish with one psum of
@@ -70,7 +74,9 @@ from ..compat import axis_size
 from ..configs.base import ByzantineConfig
 from ..kernels import ops, ref
 
-STAT_NAMES = ("scores", "l1", "d2med", "gram")
+# canonical stat names live at the kernel layer (ref.py) so the fused
+# Pallas/jnp passes can share them without a circular import
+STAT_NAMES = ref.STAT_NAMES
 
 GEOMEDIAN_ITERS = 16
 GEOMEDIAN_EPS = 1e-6
@@ -121,7 +127,8 @@ def brsgd_select(scores, l1, beta: float, threshold: float) -> BrSGDState:
 # per-leaf statistics — written ONCE, used by every layout
 # ---------------------------------------------------------------------------
 
-def leaf_stats(G, needs, m: int, axis: int = 0) -> dict:
+def leaf_stats(G, needs, m: int, axis: int = 0,
+               use_pallas: bool | None = None) -> dict:
     """Partial statistics of one worker view of G (f32), whose ``axis``
     indexes the m workers (worker-major [m, cols] by default).
 
@@ -130,26 +137,17 @@ def leaf_stats(G, needs, m: int, axis: int = 0) -> dict:
     an N-D leaf — the returned partials are additive over the dimension
     ranges the views cover (psum over workers completes the a2a and
     blocked layouts).
+
+    Delegates to ``ops.fused_stats`` — ONE pass over the view, however
+    many statistics the spec declared: one HBM read on TPU, one shared
+    bitonic sorted-rows pass on the reference path (the seed's version
+    re-derived the coordinate-wise median per statistic through XLA's
+    scalarized CPU sort).  DESIGN.md §Perf has the contract.
     """
-    red = tuple(i for i in range(G.ndim) if i != axis)
-    out = {}
-    if "scores" in needs:
-        mean_c = jnp.mean(G, axis=axis, keepdims=True)
-        above = G >= mean_c
-        n_above = jnp.sum(above.astype(jnp.int32), axis=axis, keepdims=True)
-        M = jnp.where(n_above * 2 >= m, above, ~above)
-        out["scores"] = jnp.sum(M.astype(jnp.float32), axis=red)
-    if "l1" in needs or "d2med" in needs:
-        diff = G - jnp.median(G, axis=axis, keepdims=True)
-        if "l1" in needs:
-            out["l1"] = jnp.sum(jnp.abs(diff), axis=red)
-        if "d2med" in needs:
-            out["d2med"] = jnp.sum(diff * diff, axis=red)
-    if "gram" in needs:
-        # contract every non-worker dim: G @ G.T without reshaping the
-        # leaf to [m, cols] (keeps model-sharded dims where they are)
-        out["gram"] = jnp.tensordot(G, G, axes=(red, red))
-    return out
+    if not needs:
+        return {}
+    kw = {} if use_pallas is None else {"use_pallas": use_pallas}
+    return ops.fused_stats(G, tuple(sorted(needs)), axis=axis, **kw)
 
 
 def zero_stats(needs, m: int) -> dict:
@@ -356,7 +354,7 @@ def aggregate_local(G, cfg: ByzantineConfig, use_pallas: bool | None = None,
             return agg, brsgd_select(scores, l1, cfg.beta, cfg.threshold)
         return agg
 
-    stats = leaf_stats(G.astype(jnp.float32), spec.stats, m)
+    stats = leaf_stats(G.astype(jnp.float32), spec.stats, m, use_pallas=up)
     w, st = spec.select(stats, cfg, m)
     agg = _combine_rows(G, w, up, d_blk)
     if return_state and st is None:
@@ -406,13 +404,22 @@ def unchunk(vec, g, axes):
 def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
                       layout: str = "gather",
                       spec: AggregatorSpec | None = None,
-                      allow_fast_paths: bool = True):
+                      allow_fast_paths: bool = True,
+                      flatten_columns: bool = False):
     """Aggregate a gradient pytree across the worker mesh axes.
 
     Must be called inside a shard_map whose manual axes include ``axes``.
     Returns (aggregated pytree — identical on every worker, state | None).
     Any registered aggregator runs in either layout; see the module
     docstring for the layout semantics.
+
+    ``flatten_columns``: in the gather layout, apply column rules to N-D
+    leaves through a flattened [m, cols] view so the 2-D Pallas kernels
+    stay eligible.  Only safe when no leaf dim is sharded over an auto
+    ('model') mesh axis — the reshape would merge tensor-sharded dims
+    and force XLA to un-shard them — so the caller, who can see the
+    mesh, must opt in (training/step.py passes True on worker-only
+    meshes).
     """
     if layout not in ("gather", "a2a"):
         raise ValueError(f"unknown layout {layout!r}")
@@ -433,25 +440,39 @@ def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
             if layout == "a2a":
                 Gc, _pad = a2a_chunk(g, axes, m)
                 out.append(unchunk(spec.column(Gc, cfg, m), g, axes))
+                continue
+            Gv = gather_leaf(g, axes, m)
+            if Gv.ndim > 2 and flatten_columns:
+                # model-sharding-free leaf: 2-D view keeps the Pallas
+                # column kernels eligible
+                col = spec.column(Gv.reshape(m, -1), cfg, m)
+            elif Gv.ndim > 2:
+                # possibly tensor-sharded dims: stay N-D on the jnp
+                # path (see the blocked-scope column path)
+                col = spec.column(Gv, cfg, m, use_pallas=False)
             else:
-                Gv = gather_leaf(g, axes, m)
-                # N-D views pin the jnp path — the Pallas kernels are
-                # 2-D only (see the blocked-scope column path)
-                kw = {"use_pallas": False} if Gv.ndim > 2 else {}
-                col = spec.column(Gv, cfg, m, **kw)
-                out.append(col.astype(g.dtype).reshape(g.shape))
+                col = spec.column(Gv, cfg, m)
+            out.append(col.astype(g.dtype).reshape(g.shape))
         return jax.tree.unflatten(tdef, out), None
 
     # -- phase 1: per-leaf stats partials -------------------------------
+    # gather layout: each leaf is gathered EXACTLY once, consumed by the
+    # fused stats pass, and dropped — nothing m×-sized survives into
+    # phase 2, so steady-state transient memory is one gathered leaf
+    # instead of the seed's all-leaves cache.  a2a chunks are kept: they
+    # are this device's 1/m dim range (1× total), and phase 2 combines
+    # them in place.
     stats = zero_stats(spec.stats, m)
     cached, total_pad = [], 0
     for g in leaves:
         if layout == "a2a":
             Gv, pad = a2a_chunk(g, axes, m)
             total_pad += pad
+            cached.append(Gv)
+        elif not stats:
+            continue        # stat-free select (mean): nothing to gather
         else:
             Gv = gather_leaf(g, axes, m)
-        cached.append(Gv)
         part = leaf_stats(Gv, spec.stats, m)
         stats = {k: stats[k] + part[k] for k in stats}
     if layout == "a2a" and stats:
@@ -468,7 +489,12 @@ def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
         # all_gather (it would re-widen the wire to f32)
         out = list(jax.lax.optimization_barrier(tuple(out)))
     else:
-        for g, Gv in zip(leaves, cached):
-            agg = jnp.tensordot(w, Gv, axes=([0], [0])) / denom
-            out.append(agg.astype(g.dtype).reshape(g.shape))
+        # gather-free combine: Σᵢ wᵢgᵢ is a psum of each worker's OWN
+        # weighted gradient — no leaf is gathered twice and no gathered
+        # copy crosses the phase boundary.  The psum runs in f32 (a
+        # weighted reduction; 2L wire vs the (m-1)L a re-gather costs).
+        wi = w[jax.lax.axis_index(axes)]
+        for g in leaves:
+            agg = jax.lax.psum(wi * g.astype(jnp.float32), axes) / denom
+            out.append(agg.astype(g.dtype))
     return jax.tree.unflatten(tdef, out), st

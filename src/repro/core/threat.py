@@ -41,6 +41,11 @@ An :class:`AttackSpec` declares:
   ``(values, n_classes) -> values'`` the pipelines apply to byzantine
   workers' shards.
 
+* ``shared_row`` — declares the corrupt rule worker-independent (it
+  reads only the knowledge and the config, never g/key), so the dense
+  executor computes ONE evil row and broadcasts it over the byzantine
+  set instead of vmapping the rule over m identical rows.
+
 Membership
 ----------
 Adversary identity is a declared scenario knob (``cfg.membership``),
@@ -145,10 +150,19 @@ class AttackSpec:
     knows: frozenset = frozenset()      # honest stats the rule reads
     corrupt: Optional[Callable] = None  # (g, know, key, cfg) -> evil
     corrupt_labels: Optional[Callable] = None  # (y, n_classes) -> y'
+    # worker-independent rule: corrupt ignores (g, key), so every
+    # byzantine worker emits the SAME evil values (negation/alie/ipm —
+    # pure functions of the honest statistics).  The dense executor then
+    # computes ONE evil row and broadcasts it instead of vmapping the
+    # rule over m identical rows.
+    shared_row: bool = False
 
     def __post_init__(self):
         if self.scope not in ("gradient", "data"):
             raise ValueError(f"{self.name}: unknown scope {self.scope!r}")
+        if self.shared_row and self.scope != "gradient":
+            raise ValueError(f"{self.name}: shared_row is a gradient-scope "
+                             f"property")
         if (self.scope == "gradient") != (self.corrupt is not None):
             raise ValueError(
                 f"{self.name}: gradient specs set corrupt, data specs don't")
@@ -225,12 +239,13 @@ def _ipm(g, know, key, cfg):
 
 register(AttackSpec("gaussian", corrupt=_gaussian))
 register(AttackSpec("negation", knows=frozenset({"hsum"}),
-                    corrupt=_negation))
+                    corrupt=_negation, shared_row=True))
 register(AttackSpec("scale", corrupt=_scale))
 register(AttackSpec("sign_flip", corrupt=_sign_flip))
 register(AttackSpec("alie", knows=frozenset({"hsum", "hsqsum"}),
-                    corrupt=_alie))
-register(AttackSpec("ipm", knows=frozenset({"hsum"}), corrupt=_ipm))
+                    corrupt=_alie, shared_row=True))
+register(AttackSpec("ipm", knows=frozenset({"hsum"}), corrupt=_ipm,
+                    shared_row=True))
 # the paper's Label Shift: y -> (n_classes - 1) - y on byzantine shards.
 # Data corruption happens in data/pipeline.py; gradients stay untouched.
 register(AttackSpec("label_flip", scope="data",
@@ -304,6 +319,11 @@ def apply_dense(G, key, cfg: ByzantineConfig):
         return G
     mask = membership_mask(cfg, m, key)
     know = _dense_knowledge(G, mask, spec.knows, m - n_byz)
+    if spec.shared_row:
+        # worker-independent rule: ONE evil row, broadcast over the
+        # byzantine set (g and key are ignored by the rule)
+        evil = spec.corrupt(G[0], know, key, cfg)
+        return jnp.where(mask[:, None], evil[None].astype(G.dtype), G)
     keys = jax.vmap(lambda i: _leaf_key(key, i, 0))(jnp.arange(m))
     evil = jax.vmap(lambda g, k: spec.corrupt(g, know, k, cfg))(G, keys)
     return jnp.where(mask[:, None], evil.astype(G.dtype), G)

@@ -3,13 +3,21 @@
 The aggregation is memory-bound (O(1) FLOP per byte of G), so the win
 on TPU is minimizing HBM traffic over G.  Kernels here:
 
+* ``fused_stats_pallas``      ONE pass over G emitting any subset of
+                              ``ref.STAT_NAMES`` (majority-score, l1,
+                              d2med partials [grid, m]; Gram partials
+                              [grid, m, m]) — every statistic an
+                              aggregator declares costs a single shared
+                              HBM read, and the coordinate-wise median
+                              inside the tile is computed once for
+                              l1 AND d2med (the one-sort contract,
+                              DESIGN.md §Perf).
 * ``brsgd_stats_pallas``      one pass producing column mean [d],
                               coordinate-wise median [d], majority-score
                               partials and l1 partials [grid, m].
-* ``brsgd_partials_pallas``   the same pass emitting ONLY the [grid, m]
-                              score/l1 partials — no [d]-sized median/
-                              mean HBM writes.  First pass of the fused
-                              BrSGD path.
+* ``brsgd_partials_pallas``   fused_stats_pallas over (scores, l1) —
+                              no [d]-sized median/mean HBM writes.
+                              First pass of the fused BrSGD path.
 * ``select_mean_pallas``      second pass fusing the C1∩C2 selection
                               (recomputed per grid step from the [m]
                               score/l1 vectors — trivially cheap) with
@@ -46,32 +54,13 @@ from jax.experimental import pallas as pl
 from . import ref
 
 
-def _bitonic_stages(n: int):
-    """Compare-exchange index pairs for a bitonic sort network of size n
-    (n a power of two).  Returns list of (i, j) stage arrays."""
-    stages = []
-    k = 2
-    while k <= n:
-        j = k // 2
-        while j >= 1:
-            pairs = []
-            for i in range(n):
-                l = i ^ j
-                if l > i:
-                    asc = (i & k) == 0
-                    pairs.append((i, l, asc))
-            stages.append(pairs)
-            j //= 2
-        k *= 2
-    return stages
-
-
 def _sorted_rows(x, m: int):
     """Sort rows of x [mp, d_blk] (mp = padded pow2; rows >= m are +inf)
-    along axis 0 with a static bitonic network."""
+    along axis 0 with a static bitonic network (the SAME network the jnp
+    reference path runs — ref.bitonic_stages is the one copy)."""
     mp = x.shape[0]
     rows = [x[i] for i in range(mp)]
-    for stage in _bitonic_stages(mp):
+    for stage in ref.bitonic_stages(mp):
         for i, l, asc in stage:
             lo = jnp.minimum(rows[i], rows[l])
             hi = jnp.maximum(rows[i], rows[l])
@@ -116,13 +105,26 @@ def _stats_kernel(g_ref, med_ref, mean_ref, score_ref, l1_ref, *, m: int):
     l1_ref[0, :] = jnp.sum(jnp.abs(g - med[None, :]), axis=1)
 
 
-def _partials_kernel(g_ref, score_ref, l1_ref, *, m: int):
-    """Stats pass without the [d]-sized median/mean HBM writes."""
+def _fused_stats_kernel(g_ref, *out_refs, m: int, needs: tuple):
+    """One tile pass emitting the requested subset of ref.STAT_NAMES.
+
+    ``needs`` is a canonical-order tuple matching ``out_refs``.  The
+    tile's coordinate-wise median is computed at most once and shared by
+    l1/d2med; the Gram partial is the tile's g @ gᵀ (summed over the
+    grid by the wrapper, like the other partials)."""
+    outs = dict(zip(needs, out_refs))
     g = g_ref[...].astype(jnp.float32)                       # [m, d_blk]
-    _, scores = _majority_scores(g, m)
-    score_ref[0, :] = scores
-    med = _median_rows(g, m)
-    l1_ref[0, :] = jnp.sum(jnp.abs(g - med[None, :]), axis=1)
+    if "scores" in outs:
+        _, scores = _majority_scores(g, m)
+        outs["scores"][0, :] = scores
+    if "l1" in outs or "d2med" in outs:
+        diff = g - _median_rows(g, m)[None, :]
+        if "l1" in outs:
+            outs["l1"][0, :] = jnp.sum(jnp.abs(diff), axis=1)
+        if "d2med" in outs:
+            outs["d2med"][0, :] = jnp.sum(diff * diff, axis=1)
+    if "gram" in outs:
+        outs["gram"][0, :, :] = jnp.dot(g, g.T)
 
 
 def _pad_cols(G, d_blk: int):
@@ -170,31 +172,54 @@ def brsgd_stats_pallas(G, d_blk: int = 2048, interpret: bool = True):
     return med[:d], mean[:d], scores, l1
 
 
-def brsgd_partials_pallas(G, d_blk: int = 2048, interpret: bool = True):
-    """G: [m, d] -> (scores [m], l1 [m]) with no [d]-sized outputs."""
+def fused_stats_pallas(G, needs, d_blk: int = 2048,
+                       interpret: bool = True) -> dict:
+    """G [m, d] -> {stat: summed partial} for any subset of
+    ref.STAT_NAMES, in ONE grid pass over G (one HBM read total,
+    however many statistics the aggregator declared).
+
+    Per-worker partials ([grid, m]; [grid, m, m] for gram) are emitted
+    per grid step and reduced here — they are tiny next to G.  Zero-pad
+    columns contribute +1 per worker to ``scores`` (subtracted) and
+    exactly 0 to l1/d2med/gram."""
     m, d = G.shape
+    needs = tuple(n for n in ref.STAT_NAMES if n in needs)
     d_blk = min(d_blk, d)
     G, pad = _pad_cols(G, d_blk)
     grid = G.shape[1] // d_blk
-    kern = functools.partial(_partials_kernel, m=m)
-    score_p, l1_p = pl.pallas_call(
+    out_specs, out_shape = [], []
+    for n in needs:
+        if n == "gram":
+            out_specs.append(pl.BlockSpec((1, m, m), lambda i: (i, 0, 0)))
+            out_shape.append(jax.ShapeDtypeStruct((grid, m, m), jnp.float32))
+        else:
+            out_specs.append(pl.BlockSpec((1, m), lambda i: (i, 0)))
+            out_shape.append(jax.ShapeDtypeStruct((grid, m), jnp.float32))
+    kern = functools.partial(_fused_stats_kernel, m=m, needs=needs)
+    parts = pl.pallas_call(
         kern,
         grid=(grid,),
         in_specs=[pl.BlockSpec((m, d_blk), lambda i: (0, i))],
-        out_specs=[
-            pl.BlockSpec((1, m), lambda i: (i, 0)),
-            pl.BlockSpec((1, m), lambda i: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((grid, m), jnp.float32),
-            jax.ShapeDtypeStruct((grid, m), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(G)
-    scores = jnp.sum(score_p, axis=0)
-    if pad:
-        scores = scores - pad
-    return scores, jnp.sum(l1_p, axis=0)
+    out = {}
+    for n, p in zip(needs, parts if isinstance(parts, (list, tuple))
+                    else [parts]):
+        s = jnp.sum(p, axis=0)
+        if n == "scores" and pad:
+            s = s - pad
+        out[n] = s
+    return out
+
+
+def brsgd_partials_pallas(G, d_blk: int = 2048, interpret: bool = True):
+    """G: [m, d] -> (scores [m], l1 [m]) with no [d]-sized outputs —
+    the fused-stats pass over exactly BrSGD's declared statistics."""
+    st = fused_stats_pallas(G, ("scores", "l1"), d_blk=d_blk,
+                            interpret=interpret)
+    return st["scores"], st["l1"]
 
 
 def _select_mean_kernel(g_ref, sl_ref, pr_ref, out_ref, w_ref, *, m: int):
@@ -294,9 +319,7 @@ def trimmed_mean_pallas(G, trim_frac: float, d_blk: int = 2048,
     """Coordinate-wise trimmed mean (Yin et al. 2018): drop the k
     smallest and k largest per dimension, k = ⌊trim_frac·m⌋."""
     m, d = G.shape
-    k = int(trim_frac * m)
-    if 2 * k >= m:                      # degenerate trim: median-like guard
-        k = (m - 1) // 2
+    k = ref.trim_k(trim_frac, m)        # shared degenerate-trim guard
     d_blk = min(d_blk, d)
     G, _pad = _pad_cols(G, d_blk)       # zero columns trim to 0, sliced off
     dp = G.shape[1]

@@ -14,8 +14,9 @@ import jax.numpy as jnp
 
 from . import ref
 from .brsgd_stats import (brsgd_partials_pallas, brsgd_stats_pallas,
-                          cwise_median_pallas, masked_mean_pallas,
-                          select_mean_pallas, trimmed_mean_pallas)
+                          cwise_median_pallas, fused_stats_pallas,
+                          masked_mean_pallas, select_mean_pallas,
+                          trimmed_mean_pallas)
 
 _BACKEND = jax.default_backend()
 _INTERPRET = _BACKEND != "tpu"
@@ -38,15 +39,37 @@ def brsgd_stats(G, use_pallas: bool = _USE_PALLAS_DEFAULT, d_blk: int = 2048):
     return ref.brsgd_stats_ref(G)
 
 
+@functools.partial(jax.jit, static_argnames=("needs", "axis", "use_pallas",
+                                             "d_blk"))
+def fused_stats(G, needs: tuple, axis: int = 0,
+                use_pallas: bool = _USE_PALLAS_DEFAULT,
+                d_blk: int = 2048) -> dict:
+    """Fused statistics pass: any subset of ``ref.STAT_NAMES`` from one
+    read of G (DESIGN.md §Perf).
+
+    ``axis`` indexes the m workers; G may be N-D (blocked-scope views
+    keep the worker axis mid-leaf).  On TPU the worker-major 2-D case
+    runs the single-HBM-read Pallas kernel; everywhere else the jnp
+    reference shares ONE bitonic sorted-rows pass across the requested
+    statistics.  ``needs`` must be hashable (tuple/frozenset); unknown
+    names are rejected by the engine registry before reaching here.
+    """
+    needs = tuple(n for n in ref.STAT_NAMES if n in needs)
+    if not needs:
+        return {}
+    if use_pallas and axis == 0 and G.ndim == 2:
+        return fused_stats_pallas(G, needs, d_blk=d_blk,
+                                  interpret=_INTERPRET)
+    return ref.fused_stats_ref(G, needs, axis=axis)
+
+
 @functools.partial(jax.jit, static_argnames=("use_pallas", "d_blk"))
 def brsgd_partials(G, use_pallas: bool = _USE_PALLAS_DEFAULT,
                    d_blk: int = 2048):
     """G [m,d] -> (scores [m], l1 [m]) — the stats pass without the
     [d]-sized median/mean outputs (first pass of the fused BrSGD path)."""
-    if use_pallas:
-        return brsgd_partials_pallas(G, d_blk=d_blk, interpret=_INTERPRET)
-    med = ref.cwise_median_ref(G)
-    return ref.majority_score_ref(G), ref.l1_to_median_ref(G, med)
+    st = fused_stats(G, ("scores", "l1"), use_pallas=use_pallas, d_blk=d_blk)
+    return st["scores"], st["l1"]
 
 
 @functools.partial(jax.jit, static_argnames=("beta", "use_pallas", "d_blk"))

@@ -19,10 +19,112 @@ is validated against it under tolerance.
 """
 from __future__ import annotations
 
+import functools
 import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+# Canonical names of the additive per-leaf aggregation statistics (the
+# engine registry re-exports this; it lives here so the kernel layer can
+# share it without a circular import).  Order is the canonical emission
+# order of the fused-stats pass.
+STAT_NAMES = ("scores", "l1", "d2med", "gram")
+
+
+# ---------------------------------------------------------------------------
+# one-sort contract: the shared sorted-rows pass (DESIGN.md §Perf)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def bitonic_stages(n: int):
+    """Compare-exchange index pairs for a bitonic sorting network of
+    size n (a power of two): tuple of stages, each a tuple of
+    (i, j, ascending) pairs.  Shared by the jnp reference sort below and
+    the Pallas kernels (kernels/brsgd_stats.py)."""
+    stages = []
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            pairs = []
+            for i in range(n):
+                l = i ^ j
+                if l > i:
+                    pairs.append((i, l, (i & k) == 0))
+            stages.append(tuple(pairs))
+            j //= 2
+        k *= 2
+    return tuple(stages)
+
+
+def sorted_worker_rows(G, axis: int = 0):
+    """Worker slices of G sorted ascending along ``axis`` — a list of m
+    arrays (f32, ``axis`` removed), via a static bitonic network of
+    vectorized jnp.minimum/maximum stages.
+
+    This is THE sort of the one-sort contract (DESIGN.md §Perf): every
+    order statistic the reference path needs (coordinate-wise median,
+    l1/d2med distances to it, trimmed mean) derives from this one pass.
+    XLA lowers its CPU ``sort`` to scalar loops — at [8, 160k] the
+    network is >100x faster and bit-identical on finite inputs (min/max
+    networks don't totally order NaNs; callers assume finite data, as
+    the Pallas kernels already do).  The worker count is a compile-time
+    constant, so the network fully unrolls (O(m log^2 m) vector ops).
+    """
+    x = jnp.moveaxis(G.astype(jnp.float32), axis, 0)
+    m = x.shape[0]
+    mp = 1 << max(1, math.ceil(math.log2(m)))
+    rows = [x[i] for i in range(m)]
+    rows += [jnp.full_like(rows[0], jnp.inf)] * (mp - m)   # pad sorts last
+    for stage in bitonic_stages(mp):
+        for i, l, asc in stage:
+            lo = jnp.minimum(rows[i], rows[l])
+            hi = jnp.maximum(rows[i], rows[l])
+            rows[i], rows[l] = (lo, hi) if asc else (hi, lo)
+    return rows[:m]
+
+
+def median_from_sorted(rows):
+    """Coordinate-wise median from :func:`sorted_worker_rows` output —
+    identical to jnp.median on finite inputs (the two-middle average
+    divides by 2 exactly)."""
+    m = len(rows)
+    if m % 2:
+        return rows[m // 2]
+    return 0.5 * (rows[m // 2 - 1] + rows[m // 2])
+
+
+def sorted_worker_stack(G, axis: int = 0):
+    """Full ascending sort along ``axis`` as one stacked [m, ...] array,
+    running each bitonic stage as ONE vectorized permute+min+max+select
+    over the whole stack.
+
+    Complements :func:`sorted_worker_rows` for consumers that read MANY
+    sorted rows (trimmed mean at larger m): the per-row network relies
+    on XLA dead-code elimination, and XLA's CPU fusion re-computes the
+    surviving compare-exchange cone once per consumer — O(m) duplication
+    when all m rows are read.  Here every stage has a single
+    producer-consumer edge, so the work stays O(m log² m) passes."""
+    x = jnp.moveaxis(G.astype(jnp.float32), axis, 0)
+    m = x.shape[0]
+    mp = 1 << max(1, math.ceil(math.log2(m)))
+    if mp > m:
+        pad = jnp.full((mp - m,) + x.shape[1:], jnp.inf, jnp.float32)
+        x = jnp.concatenate([x, pad], axis=0)
+    bshape = (mp,) + (1,) * (x.ndim - 1)
+    for stage in bitonic_stages(mp):
+        perm = np.arange(mp)
+        keep_lo = np.zeros(mp, bool)
+        for i, l, asc in stage:
+            perm[i], perm[l] = l, i
+            keep_lo[i], keep_lo[l] = asc, not asc
+        partner = x[jnp.asarray(perm)]
+        lo = jnp.minimum(x, partner)
+        hi = jnp.maximum(x, partner)
+        x = jnp.where(jnp.asarray(keep_lo).reshape(bshape), lo, hi)
+    return x[:m]
 
 
 def det_sum_rows(G):
@@ -43,9 +145,61 @@ def column_mean_ref(G):
     return _exact_div(det_sum_rows(Gf), jnp.float32(Gf.shape[0]))
 
 
-def cwise_median_ref(G):
-    """Coordinate-wise median over workers (axis 0)."""
-    return jnp.median(G.astype(jnp.float32), axis=0)
+def cwise_median_ref(G, axis: int = 0):
+    """Coordinate-wise median over workers (along ``axis``) — one
+    bitonic sorted-rows pass, not an XLA sort."""
+    return median_from_sorted(sorted_worker_rows(G, axis))
+
+
+def fused_stats_ref(G, needs, axis: int = 0) -> dict:
+    """One-pass fused statistics: any subset of :data:`STAT_NAMES` from
+    a single shared sorted-rows pass (jnp reference of ops.fused_stats).
+
+    G's ``axis`` indexes the m workers; every other dimension is reduced
+    (the partials are additive over disjoint dimension ranges, so views
+    over dim ranges sum — the ``engine.leaf_stats`` contract).  N-D
+    views (blocked scope: worker axis mid-leaf) never reshape across the
+    non-worker dims — only ``axis`` is moved, never merged.  The
+    coordinate-wise median is computed at most once and shared by
+    ``l1`` and ``d2med``; before this pass existed each statistic
+    re-sorted G independently.
+
+    The [d]-sized invariants (column mean, majority mask, median) are
+    consumed through ``lax.scan``/``lax.map`` bodies rather than
+    broadcast expressions: a loop body is a separate XLA computation, so
+    the invariant is materialized ONCE.  Fusing the broadcast instead
+    lets XLA's CPU fusion re-compute the whole producer (including the
+    sort network) per worker row — measured ~m× the work at m = 64
+    (DESIGN.md §Perf).
+    """
+    x = jnp.moveaxis(G.astype(jnp.float32), axis, 0)         # [m, ...]
+    m = x.shape[0]
+    out = {}
+    if "scores" in needs:
+        mean_c = jnp.mean(x, axis=0)
+        n_above, _ = jax.lax.scan(
+            lambda c, g: (c + (g >= mean_c).astype(jnp.int32), None),
+            jnp.zeros(x.shape[1:], jnp.int32), x)
+        majority_is_above = n_above * 2 >= m
+        out["scores"] = jax.lax.map(
+            lambda g: jnp.sum(jnp.where(majority_is_above, g >= mean_c,
+                                        g < mean_c).astype(jnp.float32)), x)
+    if "l1" in needs or "d2med" in needs:
+        med = median_from_sorted(sorted_worker_rows(x))
+        def dists(g):
+            diff = g - med
+            return jnp.sum(jnp.abs(diff)), jnp.sum(diff * diff)
+        l1, d2med = jax.lax.map(dists, x)
+        if "l1" in needs:
+            out["l1"] = l1
+        if "d2med" in needs:
+            out["d2med"] = d2med
+    if "gram" in needs:
+        # contract every non-worker dim: G @ G.T without reshaping the
+        # leaf to [m, cols] (keeps model-sharded dims where they are)
+        red = tuple(range(1, x.ndim))
+        out["gram"] = jnp.tensordot(x, x, axes=(red, red))
+    return out
 
 
 def majority_score_ref(G):
@@ -97,6 +251,35 @@ def masked_mean_det(G, mask):
     return _exact_div(s, jnp.where(sw > 0, sw, 1.0))
 
 
+def rank_select(x, k: int):
+    """k-th smallest value of the 1-D vector x (0-indexed) WITHOUT
+    sorting: counting ranks.  An element is the k-th order statistic iff
+    (# strictly smaller) <= k < (# smaller-or-equal); duplicates all
+    satisfy the predicate with the same value, so the masked max is
+    exact.  Equal to ``jnp.sort(x)[k]`` on finite inputs.
+
+    Replaces the last O(m log m) replicated step of the BrSGD selection
+    with O(m)-depth counting (the [m, m] comparison is m <= 64 bools —
+    one vector op — while XLA's CPU sort is a scalar loop); the
+    per-dimension work that dominates Algorithm 2 stays O(md).
+    """
+    lt = jnp.sum((x[None, :] < x[:, None]).astype(jnp.int32), axis=1)
+    le = jnp.sum((x[None, :] <= x[:, None]).astype(jnp.int32), axis=1)
+    hit = (lt <= k) & (k < le)
+    return jnp.max(jnp.where(hit, x, -jnp.inf))
+
+
+def quantile_nearest_index(q: float, m: int) -> int:
+    """Index of the ``method='nearest'`` q-quantile of a sorted m-vector,
+    with jnp.quantile's tie rule: the virtual index q·(m-1) rounds half
+    DOWN (jax selects low_value when the high weight is exactly 0.5;
+    numpy's banker's rounding differs at .5 — we pin the jax semantics
+    the selection previously compiled to)."""
+    virt = q * (m - 1)
+    low = math.floor(virt)
+    return low if (virt - low) <= 0.5 else low + 1
+
+
 def brsgd_thresholds(scores, l1, beta: float, threshold):
     """Resolved C1/C2 cutoffs of paper Algorithm 2: (kth score, 𝔗).
 
@@ -104,12 +287,14 @@ def brsgd_thresholds(scores, l1, beta: float, threshold):
     math — engine.brsgd_select, the fused Pallas wrapper and the jnp
     fused fallback all stage through here (they live below the core
     layer, so the kernels can share them without a circular import).
+    Both cutoffs are :func:`rank_select` counting quantiles — no sort
+    anywhere in the replicated phase.
     """
     m = scores.shape[0]
     k = max(1, math.ceil(beta * m))
-    kth = jnp.sort(scores)[m - k]
+    kth = rank_select(scores, m - k)
     T = jnp.where(threshold > 0, threshold,
-                  jnp.quantile(l1, 0.25, method="nearest"))
+                  rank_select(l1, quantile_nearest_index(0.25, m)))
     return kth, T
 
 
@@ -124,13 +309,34 @@ def brsgd_select_mask(scores, l1, beta: float, threshold):
     return sel, c1, c2, T
 
 
-def trimmed_mean_ref(G, trim_frac: float):
-    """Coordinate-wise trimmed mean (Yin et al. 2018 baseline)."""
-    m = G.shape[0]
+def trim_k(trim_frac: float, m: int) -> int:
+    """Per-side trim count k = ⌊trim_frac·m⌋, guarded so at least one
+    row survives (degenerate trims fall back to median-like k)."""
     k = int(trim_frac * m)
-    if 2 * k >= m:                      # degenerate trim: median-like guard
+    if 2 * k >= m:
         k = (m - 1) // 2
-    Gs = jnp.sort(G.astype(jnp.float32), axis=0)
-    if k:
-        Gs = Gs[k:m - k]
-    return jnp.mean(Gs, axis=0)
+    return k
+
+
+# above this worker count the trimmed mean reads enough sorted rows
+# that XLA's per-consumer re-fusion of the row-list network costs more
+# than the stage-vectorized stack's extra full passes (measured
+# crossover between m=32 and m=64 on CPU at d=160k)
+_TRIM_STACK_MIN_M = 33
+
+
+def trimmed_mean_ref(G, trim_frac: float):
+    """Coordinate-wise trimmed mean (Yin et al. 2018 baseline): mean of
+    the sorted rows k..m-k-1 from the shared sorted-rows pass — the
+    row-list network (DCE-pruned) for small m, the stage-vectorized
+    stack for larger m (see :func:`sorted_worker_stack`)."""
+    m = G.shape[0]
+    k = trim_k(trim_frac, m)
+    if m >= _TRIM_STACK_MIN_M:
+        S = sorted_worker_stack(G)
+        return jnp.sum(S[k:m - k], axis=0) / (m - 2 * k)
+    rows = sorted_worker_rows(G)
+    acc = rows[k]
+    for i in range(k + 1, m - k):
+        acc = acc + rows[i]
+    return acc / (m - 2 * k)

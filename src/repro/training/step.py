@@ -177,7 +177,12 @@ def build_train_step(tcfg: TrainConfig, mesh) -> StepBundle:
 
             (loss, met), grads = jax.value_and_grad(lfn, has_aux=True)(params)
             grads = threat.inject(grads, key, bcfg, waxes)
-            agg, st = robust_aggregate(grads, bcfg, waxes, layout=layout)
+            # worker-only mesh => no leaf dim can be model-sharded, so
+            # gather-layout column rules may flatten N-D leaves to the
+            # Pallas-eligible [m, cols] view
+            flat_ok = set(mesh.axis_names) == set(waxes)
+            agg, st = robust_aggregate(grads, bcfg, waxes, layout=layout,
+                                       flatten_columns=flat_ok)
             sel_hist = None
 
         new_params, new_opt = opt.update(agg, opt_state, params, step_idx)

@@ -221,6 +221,73 @@ def test_mean_fast_path_matches_generic_engine():
     assert "OK" in run_multidevice(code, n_devices=4)
 
 
+def test_gather_layout_select_rules_gather_each_leaf_at_most_once():
+    """Jaxpr regression for the gather-free weighted combine: in the
+    gather layout a select-rule aggregator emits exactly ONE all_gather
+    per leaf (phase 1, fused stats) and ZERO in phase 2 — the combine
+    is a weighted psum of each worker's own gradient, so no gathered
+    copy crosses the phase boundary.  The seed kept every gathered leaf
+    live across both phases (m× transient memory for the whole tree)."""
+    code = PARITY + textwrap.dedent("""
+        import jax
+        for name in ("brsgd", "krum", "multi_krum", "geomedian"):
+            cfg = ByzantineConfig(aggregator=name, alpha=0.25)
+            @partial(shard_map, mesh=mesh,
+                     in_specs=({k: P(("pod", "data")) for k in gs},),
+                     out_specs={k: P() for k in gs})
+            def agg(tree):
+                local = {k: v.reshape(v.shape[1:]) for k, v in tree.items()}
+                return engine.aggregate_sharded(local, cfg, axes,
+                                                layout="gather")[0]
+            jx = str(jax.make_jaxpr(agg)(
+                {k: jnp.asarray(v) for k, v in gs.items()}))
+            n_ag = jx.count("all_gather[")
+            assert n_ag == len(gs), (name, n_ag, len(gs))
+            assert "psum" in jx, name
+        # the stat-free select (mean, fast paths off) needs NO gather
+        cfg = ByzantineConfig(aggregator="mean")
+        @partial(shard_map, mesh=mesh,
+                 in_specs=({k: P(("pod", "data")) for k in gs},),
+                 out_specs={k: P() for k in gs})
+        def agg_mean(tree):
+            local = {k: v.reshape(v.shape[1:]) for k, v in tree.items()}
+            return engine.aggregate_sharded(local, cfg, axes,
+                                            layout="gather",
+                                            allow_fast_paths=False)[0]
+        jx = str(jax.make_jaxpr(agg_mean)(
+            {k: jnp.asarray(v) for k, v in gs.items()}))
+        assert jx.count("all_gather[") == 0, jx.count("all_gather[")
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code, n_devices=4)
+
+
+def test_gather_column_flatten_matches_nd_path():
+    """flatten_columns routes N-D leaves through the 2-D [m, cols] view
+    (Pallas-eligible) — results must match the N-D jnp path exactly."""
+    code = PARITY + textwrap.dedent("""
+        for name in ("median", "trimmed_mean"):
+            cfg = ByzantineConfig(aggregator=name, alpha=0.25)
+            def run(flat):
+                @partial(shard_map, mesh=mesh,
+                         in_specs=({k: P(("pod", "data")) for k in gs},),
+                         out_specs={k: P() for k in gs})
+                def agg(tree):
+                    local = {k: v.reshape(v.shape[1:])
+                             for k, v in tree.items()}
+                    return engine.aggregate_sharded(
+                        local, cfg, axes, layout="gather",
+                        flatten_columns=flat)[0]
+                out = agg({k: jnp.asarray(v) for k, v in gs.items()})
+                return np.concatenate([np.asarray(out[k]).reshape(-1)
+                                       for k in gs])
+            np.testing.assert_allclose(run(True), run(False),
+                                       rtol=1e-5, atol=1e-6, err_msg=name)
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code, n_devices=4)
+
+
 def test_robust_aggregate_dispatches_every_aggregator():
     """The public shard_map entry point (training/step.py path) accepts
     all registered aggregators in both layouts — the seed supported 3."""
