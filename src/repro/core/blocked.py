@@ -11,6 +11,13 @@ bucket-local selections — aggregation happens the moment a layer's
 gradients are produced by the backward scan, and only one layer's worth
 of cross-worker state is ever live.
 
+Mesh contract (DESIGN.md §Mesh): the barrier runs inside a FULL-manual
+shard_map whose manual axes are EVERY mesh axis, and the worker axes
+are every mesh axis too — a tensor-parallel 'model' axis is folded
+into the FSDP worker set by the step builder (XLA's partial-manual
+subgroups cannot lower the all_to_all/all_gather/axis_index this
+barrier needs, and per-layer TP would be re-gathered here anyway).
+
 The mechanism is a ``jax.custom_vjp`` barrier applied to each scanned
 layer slice (see ``transformer.forward(param_hook=...)``):
 
@@ -91,10 +98,10 @@ def _shard_view(g, spec: P, k: int, m: int, axes):
     # AFTER the optimization barrier, which stops XLA hoisting the f32
     # convert to BEFORE the collective (that would double wire bytes).
     x = _a2a_worker_view(g, k, m)
-    # keep the tensor-parallel ('model' etc.) sharding of the OTHER dims
-    # through the worker re-shard — without the hint XLA un-shards the
-    # auto axes around the manual all_to_all (a 16x all-gather of
-    # expert-sharded MoE grads)
+    # under the full-manual step every mesh axis is a worker axis, so
+    # spec entries can only reference ``axes`` and the hint below is a
+    # no-op; it is kept for spec-generality (a non-worker entry would
+    # need its sharding preserved through the re-shard)
     vspec = []
     for i, e in enumerate(spec):
         ent = None if (e == tuple(axes) or e in axes
@@ -210,7 +217,11 @@ def key_carrier(key):
     zeros).  The key CANNOT be closed over by the barrier instead: its
     bwd runs at scan-transposition time, where a closed-over tracer
     (the step key is a shard_map argument) becomes an unlowerable jaxpr
-    constant."""
+    constant.  Typed (extended-dtype) keys are unwrapped to their
+    uint32 data first — the dry-run drives the step with
+    ``jax.random.key`` structs."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        key = jax.random.key_data(key)
     return jax.lax.bitcast_convert_type(key, jnp.float32)
 
 

@@ -30,10 +30,10 @@ once in ``engine.py``; nothing here changes.
 This module keeps the shard_map-facing aggregation API
 (``robust_aggregate``); training-time fault injection lives in
 :mod:`.threat` (``threat.inject`` — the same AttackSpec registry the
-dense and blocked scopes execute).  Must be called inside a shard_map
-whose manual axes == ``axes`` (the worker axes); the 'model' mesh axis
-stays auto, so leaves may be arbitrarily tensor-sharded — the math here
-never notices.
+dense and blocked scopes execute).  Must be called inside a FULL-manual
+shard_map (every mesh axis manual — DESIGN.md §Mesh); tensor-sharded
+leaves arrive as this device's 'model' shard and are declared via
+``model_axes``/``leaf_specs``.
 """
 from __future__ import annotations
 
@@ -52,19 +52,22 @@ def worker_index(axes):
 # ---------------------------------------------------------------------------
 
 def robust_aggregate(grads, cfg: ByzantineConfig, axes=("data",),
-                     layout: str = "gather", flatten_columns: bool = False):
+                     layout: str = "gather", flatten_columns: bool = False,
+                     model_axes=(), leaf_specs=None):
     """Aggregate a gradient pytree across the worker axes.
 
-    Returns the aggregated pytree (identical on every worker) plus the
-    selection diagnostics (BrSGDState for ``brsgd``, SelectionState for
-    the other row-selection rules, None for per-dimension rules and the
-    mean fast path).
+    Returns the aggregated pytree (identical on every worker, model
+    shards intact) plus the selection diagnostics (BrSGDState for
+    ``brsgd``, SelectionState for the other row-selection rules, None
+    for per-dimension rules and the mean fast path).
     Dispatches any aggregator registered in :mod:`.engine`;
     ``cfg.aggregator == "mean"`` reduces to a plain pmean (the
-    non-robust baseline fast path).  ``flatten_columns``: opt-in 2-D
-    view for gather-layout column rules on N-D leaves — pass True only
-    when the mesh has no auto ('model') axis (see
+    non-robust baseline fast path).  Must run inside a FULL-manual
+    shard_map; on meshes with tensor-parallel axes pass them as
+    ``model_axes`` plus each leaf's PartitionSpec as ``leaf_specs`` (see
     ``engine.aggregate_sharded``).
     """
     return engine.aggregate_sharded(grads, cfg, axes=axes, layout=layout,
-                                    flatten_columns=flatten_columns)
+                                    flatten_columns=flatten_columns,
+                                    model_axes=model_axes,
+                                    leaf_specs=leaf_specs)

@@ -401,32 +401,80 @@ def unchunk(vec, g, axes):
     return full[:g.size].reshape(g.shape)
 
 
+def _model_split(pspec, model_axes) -> int:
+    """Number of model shards a leaf is split into under ``pspec`` (1 =
+    replicated over the model axes)."""
+    if pspec is None or not model_axes:
+        return 1
+    n = 1
+    for entry in pspec:
+        names = entry if isinstance(entry, tuple) else (entry,)
+        hit = tuple(a for a in names if a in model_axes)
+        if hit:
+            n *= axis_size(hit)
+    return n
+
+
+def _model_origin(model_axes):
+    """1.0 on the devices whose model-axis indices are all zero, else
+    0.0 — the mask that keeps model-replicated partials from being
+    counted once per model shard in a cross-model psum."""
+    ok = jnp.bool_(True)
+    for a in model_axes:
+        ok = ok & (jax.lax.axis_index((a,)) == 0)
+    return ok.astype(jnp.float32)
+
+
 def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
                       layout: str = "gather",
                       spec: AggregatorSpec | None = None,
                       allow_fast_paths: bool = True,
-                      flatten_columns: bool = False):
+                      flatten_columns: bool = False,
+                      model_axes=(), leaf_specs=None):
     """Aggregate a gradient pytree across the worker mesh axes.
 
-    Must be called inside a shard_map whose manual axes include ``axes``.
-    Returns (aggregated pytree — identical on every worker, state | None).
+    Must be called inside a FULL-manual shard_map (every mesh axis
+    manual): XLA's partial-manual subgroups only support reduce-type
+    collectives, so the all_gather/all_to_all paths here cannot coexist
+    with auto axes (DESIGN.md §Mesh).  Returns (aggregated pytree —
+    identical on every worker, its model shards intact, state | None).
     Any registered aggregator runs in either layout; see the module
     docstring for the layout semantics.
 
-    ``flatten_columns``: in the gather layout, apply column rules to N-D
-    leaves through a flattened [m, cols] view so the 2-D Pallas kernels
-    stay eligible.  Only safe when no leaf dim is sharded over an auto
-    ('model') mesh axis — the reshape would merge tensor-sharded dims
-    and force XLA to un-shard them — so the caller, who can see the
-    mesh, must opt in (training/step.py passes True on worker-only
-    meshes).
+    ``model_axes``/``leaf_specs``: the mesh's tensor-parallel axes and
+    each leaf's PartitionSpec.  Leaves sharded over a model axis are
+    this device's shard; their statistic partials cover disjoint dim
+    ranges across model shards, while model-replicated leaves' partials
+    are identical across shards — the executor masks the latter to the
+    model-origin devices and closes both with ONE psum over
+    worker+model axes (additivity over dimension ranges, the
+    ``leaf_stats`` contract).
+
+    ``flatten_columns``: apply gather-layout column rules to N-D leaves
+    through a flattened [m, cols] view so the 2-D Pallas kernels stay
+    eligible.  Under full-manual the reshape is purely local, so this
+    is always safe; it is an opt-in only to keep the N-D jnp path
+    testable.
     """
     if layout not in ("gather", "a2a"):
         raise ValueError(f"unknown layout {layout!r}")
     spec = spec or get_spec(cfg.aggregator)
     axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    model_axes = tuple(model_axes)
     m = axis_size(axes)
     leaves, tdef = jax.tree.flatten(grads)
+    if leaf_specs is None:
+        spec_leaves = [None] * len(leaves)
+    else:
+        from jax.sharding import PartitionSpec as P
+        # None is a conventional "replicated" spec: keep it as a LEAF
+        # (jax.tree would otherwise drop it as an empty subtree and
+        # silently misalign every following spec with its gradient)
+        spec_leaves = jax.tree.leaves(
+            leaf_specs, is_leaf=lambda x: x is None or isinstance(x, P))
+        assert len(spec_leaves) == len(leaves), \
+            (len(spec_leaves), len(leaves))
+    origin = _model_origin(model_axes) if model_axes else None
 
     if spec.name == "mean" and allow_fast_paths:
         # uniform weights == plain pmean: skip the gather/a2a machinery
@@ -443,12 +491,11 @@ def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
                 continue
             Gv = gather_leaf(g, axes, m)
             if Gv.ndim > 2 and flatten_columns:
-                # model-sharding-free leaf: 2-D view keeps the Pallas
-                # column kernels eligible
+                # 2-D view keeps the Pallas column kernels eligible
+                # (purely local under full-manual)
                 col = spec.column(Gv.reshape(m, -1), cfg, m)
             elif Gv.ndim > 2:
-                # possibly tensor-sharded dims: stay N-D on the jnp
-                # path (see the blocked-scope column path)
+                # N-D jnp path (see the blocked-scope column path)
                 col = spec.column(Gv, cfg, m, use_pallas=False)
             else:
                 col = spec.column(Gv, cfg, m)
@@ -464,19 +511,29 @@ def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
     # them in place.
     stats = zero_stats(spec.stats, m)
     cached, total_pad = [], 0
-    for g in leaves:
+    for g, ps in zip(leaves, spec_leaves):
+        n_split = _model_split(ps, model_axes)
         if layout == "a2a":
             Gv, pad = a2a_chunk(g, axes, m)
-            total_pad += pad
+            # each model shard pads its own flattened chunk; the psum
+            # below sums them, so sharded leaves contribute n_split pads
+            total_pad += pad * n_split if n_split > 1 else pad
             cached.append(Gv)
         elif not stats:
             continue        # stat-free select (mean): nothing to gather
         else:
             Gv = gather_leaf(g, axes, m)
         part = leaf_stats(Gv, spec.stats, m)
+        if origin is not None and n_split == 1:
+            # model-replicated leaf: every model shard would add the
+            # same partial — keep only the model-origin copy
+            part = {k: v * origin for k, v in part.items()}
         stats = {k: stats[k] + part[k] for k in stats}
-    if layout == "a2a" and stats:
-        stats = jax.lax.psum(stats, axes)
+    if stats and (layout == "a2a" or model_axes):
+        # a2a partials close over the worker axes; model-sharded leaves'
+        # partials close over the model axes in the same reduction
+        psum_axes = (axes if layout == "a2a" else ()) + model_axes
+        stats = jax.lax.psum(stats, psum_axes)
         stats = pad_correction(stats, total_pad)
 
     # -- phase 2: replicated selection + weighted combine ---------------

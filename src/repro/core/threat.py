@@ -199,8 +199,18 @@ def registered() -> tuple:
 # ---- corruption rules (paper §5.1 + literature) ----------------------------
 
 def _gaussian(g, know, key, cfg):
-    """Replace byzantine values with N(0, std²) noise (paper: std=200)."""
-    return jax.random.normal(key, g.shape, jnp.float32) * cfg.gaussian_std
+    """Replace byzantine values with N(0, std²) noise (paper: std=200).
+
+    When the executor runs on a model-sharded view of the leaf it passes
+    the GLOBAL leaf shape and this shard's offsets via the knowledge dict
+    (``noise_shape``/``noise_start`` — see :func:`inject`): the noise is
+    drawn for the full leaf and sliced, so every layout produces
+    bit-identical noise regardless of how the leaf is sharded."""
+    shape = know.get("noise_shape", g.shape)
+    noise = jax.random.normal(key, shape, jnp.float32) * cfg.gaussian_std
+    if shape != g.shape:
+        noise = jax.lax.dynamic_slice(noise, know["noise_start"], g.shape)
+    return noise
 
 
 def _negation(g, know, key, cfg):
@@ -329,7 +339,32 @@ def apply_dense(G, key, cfg: ByzantineConfig):
     return jnp.where(mask[:, None], evil.astype(G.dtype), G)
 
 
-def inject(grads, key, cfg: ByzantineConfig, axes, membership_key=None):
+def _noise_view(g, pspec, model_axes):
+    """(global shape, per-dim start indices) of this device's view of a
+    leaf sharded over ``model_axes`` — identity when the leaf is
+    replicated over them.  Lets key-driven corruption rules (gaussian)
+    draw noise for the FULL leaf and slice their shard, so the injected
+    values are invariant to the mesh's model sharding."""
+    if pspec is None or not model_axes:
+        return g.shape, None
+    shape, start = list(g.shape), [0] * g.ndim
+    sharded = False
+    for dim, entry in enumerate(pspec):
+        names = entry if isinstance(entry, tuple) else (entry,)
+        names = tuple(a for a in names if a in model_axes)
+        if not names:
+            continue
+        n = axis_size(names)
+        shape[dim] = g.shape[dim] * n
+        start[dim] = jax.lax.axis_index(names) * g.shape[dim]
+        sharded = True
+    if not sharded:
+        return g.shape, None
+    return tuple(shape), tuple(jnp.int32(s) for s in start)
+
+
+def inject(grads, key, cfg: ByzantineConfig, axes, membership_key=None,
+           leaf_specs=None, model_axes=()):
     """Corrupt this worker's gradient pytree inside shard_map (global
     scope before aggregation, or one bucket inside the blocked backward
     scan).
@@ -338,7 +373,14 @@ def inject(grads, key, cfg: ByzantineConfig, axes, membership_key=None):
     into it so noise decorrelates across buckets and layers);
     ``membership_key`` — when given — drives WHO is byzantine instead,
     so every bucket of a step shares one membership draw (defaults to
-    ``key``)."""
+    ``key``).
+
+    ``leaf_specs``/``model_axes``: when the caller runs full-manual on a
+    mesh with tensor-parallel axes, each leaf is this device's model
+    shard.  Per-coordinate knowledge still psums over the worker axes
+    only (the coordinates ARE the shard), but key-driven rules receive
+    the global leaf shape + shard offsets through the knowledge dict so
+    their noise is sharding-invariant (see :func:`_gaussian`)."""
     if not is_gradient_attack(cfg):
         return grads
     spec = get_spec(cfg.attack)
@@ -351,9 +393,22 @@ def inject(grads, key, cfg: ByzantineConfig, axes, membership_key=None):
     mkey = key if membership_key is None else membership_key
     is_byz = membership_mask(cfg, m, mkey)[idx]
     leaves, tdef = jax.tree.flatten(grads)
+    if leaf_specs is None:
+        spec_leaves = [None] * len(leaves)
+    else:
+        from jax.sharding import PartitionSpec as P
+        # keep None ("replicated") entries as leaves — dropping them
+        # would misalign every following spec with its gradient leaf
+        spec_leaves = jax.tree.leaves(
+            leaf_specs, is_leaf=lambda x: x is None or isinstance(x, P))
+        assert len(spec_leaves) == len(leaves), \
+            (len(spec_leaves), len(leaves))
     out = []
-    for li, g in enumerate(leaves):
+    for li, (g, ps) in enumerate(zip(leaves, spec_leaves)):
         know = _sharded_knowledge(g, is_byz, spec.knows, axes, m - n_byz)
+        shape, start = _noise_view(g, ps, tuple(model_axes))
+        if start is not None:
+            know["noise_shape"], know["noise_start"] = shape, start
         evil = spec.corrupt(g, know, _leaf_key(key, idx, li), cfg)
         out.append(jnp.where(is_byz, evil.astype(g.dtype), g))
     return jax.tree.unflatten(tdef, out)

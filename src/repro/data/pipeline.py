@@ -64,27 +64,31 @@ class ImageWorkerPipeline:
     """FashionMNIST-like shards for the LeNet repro: each worker owns n
     samples (paper: i.i.d. per-worker datasets); byzantine workers'
     labels are corrupted by any registered data-scope attack.  The
-    dataset is built once, so membership is the step-0 draw (the
-    ``resample`` policy degenerates to a seeded-random set here)."""
+    dataset stays CLEAN in storage and corruption is applied per
+    ``batch(step)`` from a step-keyed membership mask — exactly like
+    the LM pipeline — so the ``resample`` policy draws a fresh
+    byzantine set every step instead of degenerating to the step-0
+    draw (the previous behaviour: the dataset was corrupted once at
+    construction)."""
 
     def __init__(self, n_workers: int, n_per_worker: int, seed: int = 0,
                  byz: Optional[ByzantineConfig] = None, n_classes: int = 10):
         self.m, self.n = n_workers, n_per_worker
+        self.byz, self.n_classes = byz, n_classes
         imgs, labels = fmnist_like(n_workers * n_per_worker, seed=seed)
         self.images = imgs.reshape(n_workers, n_per_worker, *imgs.shape[1:])
-        labels = labels.reshape(n_workers, n_per_worker)
-        spec = data_attack_spec(byz)
-        if spec is not None:
-            mask = threat.data_membership(byz, n_workers)
-            labels[mask] = spec.corrupt_labels(labels[mask], n_classes)
-        self.labels = labels
+        self.labels = labels.reshape(n_workers, n_per_worker)
         self.test_images, self.test_labels = fmnist_like(2048, seed=seed + 777)
 
     def batch(self, step: int, batch_per_worker: int) -> dict:
         rng = np.random.default_rng(step)
         idx = rng.integers(0, self.n, size=(self.m, batch_per_worker))
-        take = np.take_along_axis
+        labels = np.stack([self.labels[w, idx[w]] for w in range(self.m)])
+        spec = data_attack_spec(self.byz)
+        if spec is not None:
+            mask = threat.data_membership(self.byz, self.m, step)
+            labels[mask] = spec.corrupt_labels(labels[mask], self.n_classes)
         return {
             "images": np.stack([self.images[w, idx[w]] for w in range(self.m)]),
-            "labels": np.stack([self.labels[w, idx[w]] for w in range(self.m)]),
+            "labels": labels,
         }

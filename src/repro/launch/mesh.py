@@ -25,10 +25,26 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     return _make_mesh(shape, axes)
 
 
-def worker_axes(mesh) -> Tuple[str, ...]:
+def worker_axes(mesh, scope: str = "global") -> Tuple[str, ...]:
+    """Mesh axes that index Byzantine workers for the given agg scope.
+
+    ``global`` (and the serving paths): every axis except the
+    tensor-parallel 'model' axis — the model axis stays a GSPMD-auto /
+    full-manual *dimension* axis, never a worker identity.
+
+    ``blocked``: EVERY mesh axis.  The blocked/FSDP scope runs the whole
+    step as one full-manual shard_map (XLA's partial-manual subgroups
+    only support reduce-type collectives — DESIGN.md §Mesh), and its
+    per-layer barrier re-gathers each bucket's params anyway, so a
+    'model' axis buys nothing as tensor parallelism there; it is folded
+    into the FSDP worker set instead (ZeRO-3-style: more workers, finer
+    param shards).
+    """
+    if scope == "blocked":
+        return tuple(mesh.axis_names)
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
-def n_workers(mesh) -> int:
+def n_workers(mesh, scope: str = "global") -> int:
     sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
-    return int(np.prod([sizes[a] for a in worker_axes(mesh)]))
+    return int(np.prod([sizes[a] for a in worker_axes(mesh, scope)]))

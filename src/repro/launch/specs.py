@@ -36,12 +36,23 @@ def variant_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
     return cfg
 
 
-def train_inputs(cfg: ModelConfig, shape: InputShape, mesh) -> dict:
-    """Batch pytree [m, b, ...] for the worker-sharded train step."""
-    m = n_workers(mesh)
-    assert shape.global_batch % m == 0, (shape.global_batch, m)
-    b = shape.global_batch // m
-    waxes = worker_axes(mesh)
+def train_inputs(cfg: ModelConfig, shape: InputShape, mesh,
+                 scope: str = "global") -> dict:
+    """Batch pytree [m, b, ...] for the worker-sharded train step.
+
+    ``scope`` picks the worker set (blocked folds the 'model' axis into
+    the workers); when the worker count exceeds the shape's global
+    batch, every worker gets one sequence (the dry-run only needs
+    shapes, and the real driver sizes its own batches).  Callers that
+    account flops against the batch must use :func:`train_batch_used`
+    — the m·b actually fed to the step, which the inflation can raise
+    above ``shape.global_batch``.
+    """
+    m = n_workers(mesh, scope)
+    assert shape.global_batch % m == 0 or shape.global_batch < m, \
+        (shape.global_batch, m)
+    b = max(1, shape.global_batch // m)
+    waxes = worker_axes(mesh, scope)
     wspec = tuple(waxes) if len(waxes) > 1 else waxes[0]
     s_tok = shape.seq_len - cfg.n_prefix_tokens
     out = {"tokens": _sds((m, b, s_tok), jnp.int32, mesh, P(wspec))}
@@ -49,6 +60,14 @@ def train_inputs(cfg: ModelConfig, shape: InputShape, mesh) -> dict:
         out["prefix_embed"] = _sds((m, b, cfg.n_prefix_tokens, cfg.d_model),
                                    jnp.bfloat16, mesh, P(wspec))
     return out
+
+
+def train_batch_used(shape: InputShape, mesh, scope: str = "global") -> int:
+    """The sequence count :func:`train_inputs` actually builds (m·b) —
+    equals ``shape.global_batch`` except when the worker count exceeds
+    it and every worker gets one sequence."""
+    m = n_workers(mesh, scope)
+    return m * max(1, shape.global_batch // m)
 
 
 def prefill_inputs(cfg: ModelConfig, shape: InputShape, mesh) -> dict:

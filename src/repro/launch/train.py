@@ -89,11 +89,13 @@ def main(argv=None):
                        lr=args.lr, agg_layout=args.agg_layout,
                        agg_scope=args.agg_scope, remat=args.remat)
 
-    m = n_workers(mesh)
-    print(f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} workers={m} "
-          f"arch={cfg.name} params={PM.count_params(TF.param_defs(cfg)):,}")
-
     bundle = build_train_step(tcfg, mesh)
+    # blocked scope folds every mesh axis (incl. 'model') into the
+    # worker set, so the pipeline's worker count is scope-dependent
+    m = n_workers(mesh, bundle.scope)
+    print(f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} workers={m} "
+          f"scope={bundle.scope} arch={cfg.name} "
+          f"params={PM.count_params(TF.param_defs(cfg)):,}")
     psh, osh, bsh = bundle.shardings(mesh)
     key = jax.random.PRNGKey(tcfg.seed)
     params = jax.device_put(PM.init_params(TF.param_defs(cfg), key), psh)

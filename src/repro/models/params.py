@@ -86,14 +86,16 @@ def count_params(defs) -> int:
     return int(sum(np.prod(d.shape) for d in leaves))
 
 
-def _spec_for(d: ParamDef, mesh_shape: dict, fsdp_axes: Sequence[str] = ()) -> P:
+def _spec_for(d: ParamDef, mesh_shape: dict, fsdp_axes: Sequence[str] = (),
+              tp: bool = True) -> P:
     """PartitionSpec for one leaf.
 
-    Primary: first dim whose logical axis maps to 'model' and divides.
+    Primary: first dim whose logical axis maps to 'model' and divides
+    (skipped when ``tp`` is False).
     FSDP: if ``fsdp_axes`` given, additionally shard the largest
     remaining eligible dim over the (flattened) worker axes.
     """
-    n_model = mesh_shape.get("model", 1)
+    n_model = mesh_shape.get("model", 1) if tp else 1
     entries: list = [None] * len(d.shape)
     used_model = False
     for i, (s, a) in enumerate(zip(d.shape, d.axes)):
@@ -118,21 +120,26 @@ def _spec_for(d: ParamDef, mesh_shape: dict, fsdp_axes: Sequence[str] = ()) -> P
     return P(*entries)
 
 
-def pspec_tree(defs, mesh, fsdp: bool = False):
+def pspec_tree(defs, mesh, fsdp: bool = False, tp: bool = True):
     """PartitionSpec pytree for a def-tree on ``mesh``.
 
-    fsdp=True additionally shards a secondary dim over the worker axes
-    (all mesh axes except 'model').
+    fsdp=True additionally shards a secondary dim over the worker axes.
+    tp=False drops the tensor-parallel 'model' entries and widens the
+    FSDP worker set to EVERY mesh axis — the blocked scope's layout,
+    where the whole step is one full-manual shard_map and the 'model'
+    axis acts as extra FSDP workers (see launch.mesh.worker_axes).
     """
     mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape))
-    worker_axes = tuple(a for a in mesh.axis_names if a != "model")
+    worker_axes = tuple(a for a in mesh.axis_names
+                        if not tp or a != "model")
     fsdp_axes = worker_axes if fsdp else ()
-    return tree_map_defs(lambda d: _spec_for(d, mesh_shape, fsdp_axes), defs)
+    return tree_map_defs(lambda d: _spec_for(d, mesh_shape, fsdp_axes, tp),
+                         defs)
 
 
-def shardings_tree(defs, mesh, fsdp: bool = False):
+def shardings_tree(defs, mesh, fsdp: bool = False, tp: bool = True):
     from jax.sharding import NamedSharding
-    specs = pspec_tree(defs, mesh, fsdp)
+    specs = pspec_tree(defs, mesh, fsdp, tp)
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))
 

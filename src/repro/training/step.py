@@ -1,19 +1,34 @@
 """Distributed train-step builder.
 
-One ``jax.shard_map`` (partial-manual over the worker axes, 'model'
-stays auto) wraps gradient computation, Byzantine attack injection,
-robust aggregation, and the optimizer update:
+Mesh execution strategy (DESIGN.md §Mesh): XLA's partial-manual
+subgroups only support reduce-type collectives — worker all_gather /
+all_to_all / axis_index (and any lax.scan) must live in a FULL-manual
+region with no auto axis — so every region's manual axes are explicit
+per scope:
 
-  global scope  : per-worker full-gradient pytree -> robust_aggregate
-                  (any aggregator registered in core.engine; gather or
-                  a2a collective layout)
-  blocked scope : FSDP params + aggregation inside the backward scan
-                  (core.blocked) — the >20B path.  Any registered
-                  aggregator runs per-bucket; each bucket's real
-                  n_selected rides out of the backward on a selection
-                  token's cotangent (a histogram over counts), so the
-                  n_selected / n_selected_min metrics are truthful —
-                  the seed hard-coded n_selected == m here.
+  global scope  : auto-SPMD loss + ONE full-manual aggregation region.
+                  The loss is a vmap over the batch's worker axis under
+                  plain jit (NO shard_map): GSPMD shards the vmapped
+                  compute over the worker axes and the tensor-parallel
+                  math over 'model', like the serving paths.  The
+                  per-worker gradient stack then enters a shard_map
+                  that is manual over EVERY mesh axis — attack
+                  injection + robust aggregation run there, with
+                  model-sharded leaves as local shards
+                  (engine.aggregate_sharded model_axes/leaf_specs).
+                  The optimizer update runs outside in plain auto-SPMD
+                  (elementwise math).
+  blocked scope : ONE full-manual shard_map over EVERY mesh axis, with
+                  all axes acting as FSDP worker axes (a 'model' axis
+                  is folded into the worker set — launch.mesh
+                  worker_axes(scope="blocked")).  FSDP params +
+                  aggregation inside the backward scan (core.blocked)
+                  — the >20B path.  Any registered aggregator runs
+                  per-bucket; each bucket's real n_selected rides out
+                  of the backward on a selection token's cotangent (a
+                  histogram over counts), so the n_selected /
+                  n_selected_min metrics are truthful — the seed
+                  hard-coded n_selected == m here.
 
 The builder returns the jitted step plus the sharding trees needed by
 both the real driver and the dry-run (which feeds ShapeDtypeStructs).
@@ -21,11 +36,10 @@ both the real driver and the dry-run (which feeds ShapeDtypeStructs).
 from __future__ import annotations
 
 from functools import partial
-from typing import NamedTuple, Optional
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
@@ -97,125 +111,91 @@ def batch_specs_for(cfg: ModelConfig, waxes) -> dict:
     return out
 
 
-def build_train_step(tcfg: TrainConfig, mesh) -> StepBundle:
+def _local_batch(batch):
+    """Squeeze the (locally size-1) sharded worker axis."""
+    return {k: v.reshape(v.shape[1:]) if v.shape[0] == 1 else v[0]
+            for k, v in batch.items()}
+
+
+def _build_blocked_step(tcfg, mesh, opt, layout):
+    """One FULL-manual shard_map over every mesh axis: FSDP params,
+    per-bucket aggregation inside the backward scan."""
     cfg = tcfg.model
     bcfg = tcfg.byzantine
-    opt = get_optimizer(tcfg)
-    scope, layout = resolve_strategy(tcfg)
-    waxes = worker_axes(mesh)
-    wspec = tuple(waxes) if len(waxes) > 1 else waxes[0]
-    m = n_workers(mesh)
+    waxes = worker_axes(mesh, "blocked")            # every axis
+    m = n_workers(mesh, "blocked")
     defs = TF.param_defs(cfg)
-    fsdp = scope == "blocked"
-    pspecs = PM.pspec_tree(defs, mesh, fsdp=fsdp)
+    # tp=False: the 'model' axis acts as extra FSDP workers here, never
+    # as tensor parallelism — the whole step is manual over it
+    pspecs = PM.pspec_tree(defs, mesh, fsdp=True, tp=False)
     ospecs = _opt_state_specs(tcfg.optimizer, pspecs)
     bspecs = batch_specs_for(cfg, waxes)
     remat = tcfg.remat == "block"
-
-    # manual in_specs: params replicated over worker axes in global scope,
-    # FSDP-sharded (their own pspec entries reference worker axes) in
-    # blocked scope.  Under partial-manual shard_map the in_specs may only
-    # mention MANUAL axes — the 'model' sharding rides along automatically.
-    def manual_only(spec: P) -> P:
-        return P(*[e if (e == wspec or (isinstance(e, tuple) and
-                                        set(e) <= set(waxes))
-                         or e in waxes) else None
-                   for e in spec])
-
-    p_in = jax.tree.map(manual_only, pspecs, is_leaf=lambda x: isinstance(x, P))
-    o_in = jax.tree.map(manual_only, ospecs, is_leaf=lambda x: isinstance(x, P))
     metric_spec = P()
 
     @partial(shard_map, mesh=mesh,
-             in_specs=(p_in, o_in, bspecs, P(), P()),
-             out_specs=(p_in, o_in, {"loss": metric_spec, "ce": metric_spec,
-                                     "gnorm": metric_spec,
-                                     "n_selected": metric_spec,
-                                     "n_selected_min": metric_spec}),
+             in_specs=(pspecs, ospecs, bspecs, P(), P()),
+             out_specs=(pspecs, ospecs, {"loss": metric_spec, "ce": metric_spec,
+                                         "gnorm": metric_spec,
+                                         "n_selected": metric_spec,
+                                         "n_selected_min": metric_spec}),
              axis_names=set(waxes), check_vma=False)
     def step(params, opt_state, batch, step_idx, key):
-        # local worker batch: squeeze the sharded worker axis
-        lbatch = {k: v.reshape(v.shape[1:]) if v.shape[0] == 1 else v[0]
-                  for k, v in batch.items()}
+        lbatch = _local_batch(batch)
+        lspecs = {k: _layer_slice_specs(v) for k, v in pspecs.items()
+                  if k.startswith("seg_")}
+        top_specs = {k: v for k, v in pspecs.items()
+                     if not k.startswith("seg_")}
+        # every barrier receives the RAW step key (key_carrier);
+        # the bucket name (static, folded inside the barrier bwd)
+        # and the scan index decorrelate the injected noise across
+        # buckets and layers, while byzantine membership is drawn
+        # from the unfolded key so all buckets corrupt ONE worker
+        # set (threat.membership_mask, incl. the resample policy)
+        barriers = {k: make_fsdp_agg_barrier(v, bcfg, waxes, k)
+                    for k, v in lspecs.items()}
+        top_barrier = make_fsdp_agg_barrier(top_specs, bcfg, waxes, "top")
+        keyf = key_carrier(key)
+        toks = {k: selection_token(m) for k in (*barriers, "top")}
 
-        if scope == "blocked":
-            lspecs = {k: _layer_slice_specs(v) for k, v in pspecs.items()
-                      if k.startswith("seg_")}
-            top_specs = {k: v for k, v in pspecs.items()
-                         if not k.startswith("seg_")}
-            # every barrier receives the RAW step key (key_carrier);
-            # the bucket name (static, folded inside the barrier bwd)
-            # and the scan index decorrelate the injected noise across
-            # buckets and layers, while byzantine membership is drawn
-            # from the unfolded key so all buckets corrupt ONE worker
-            # set (threat.membership_mask, incl. the resample policy)
-            barriers = {k: make_fsdp_agg_barrier(v, bcfg, waxes, k)
-                        for k, v in lspecs.items()}
-            top_barrier = make_fsdp_agg_barrier(top_specs, bcfg, waxes, "top")
-            keyf = key_carrier(key)
-            toks = {k: selection_token(m) for k in (*barriers, "top")}
+        def lfn(params, toks):
+            hooks = {k: (lambda p, i, b=b, t=toks[k]: b(p, t, i, keyf))
+                     for k, b in barriers.items()}
+            return TF.loss_fn(cfg, params, lbatch, remat=remat,
+                              seg_hooks=hooks,
+                              top_hook=lambda p: top_barrier(
+                                  p, toks["top"], jnp.float32(0),
+                                  keyf))
 
-            def lfn(params, toks):
-                hooks = {k: (lambda p, i, b=b, t=toks[k]: b(p, t, i, keyf))
-                         for k, b in barriers.items()}
-                return TF.loss_fn(cfg, params, lbatch, remat=remat,
-                                  seg_hooks=hooks,
-                                  top_hook=lambda p: top_barrier(
-                                      p, toks["top"], jnp.float32(0),
-                                      keyf))
-
-            (loss, met), (grads, tgrads) = jax.value_and_grad(
-                lfn, argnums=(0, 1), has_aux=True)(params, toks)
-            agg, st = grads, None    # already aggregated in backward
-            # each token's cotangent is one_hot(n_selected) per barrier
-            # call; gradient accumulation sums them over buckets and
-            # scan iterations into one histogram over counts 0..m
-            sel_hist = sum(jax.tree.leaves(tgrads))
-        else:
-            def lfn(params):
-                return TF.loss_fn(cfg, params, lbatch, remat=remat)
-
-            (loss, met), grads = jax.value_and_grad(lfn, has_aux=True)(params)
-            grads = threat.inject(grads, key, bcfg, waxes)
-            # worker-only mesh => no leaf dim can be model-sharded, so
-            # gather-layout column rules may flatten N-D leaves to the
-            # Pallas-eligible [m, cols] view
-            flat_ok = set(mesh.axis_names) == set(waxes)
-            agg, st = robust_aggregate(grads, bcfg, waxes, layout=layout,
-                                       flatten_columns=flat_ok)
-            sel_hist = None
+        (loss, met), (agg, tgrads) = jax.value_and_grad(
+            lfn, argnums=(0, 1), has_aux=True)(params, toks)
+        # each token's cotangent is one_hot(n_selected) per barrier
+        # call; gradient accumulation sums them over buckets and
+        # scan iterations into one histogram over counts 0..m
+        sel_hist = sum(jax.tree.leaves(tgrads))
 
         new_params, new_opt = opt.update(agg, opt_state, params, step_idx)
-        if scope == "blocked":
-            # fsdp-sharded leaves need a cross-worker psum; replicated
-            # leaves are already global.
-            from ..core.blocked import _fsdp_dim
-            ss_f = jnp.float32(0)
-            ss_r = jnp.float32(0)
-            for g, s in zip(jax.tree.leaves(agg),
-                            jax.tree.leaves(pspecs,
-                                            is_leaf=lambda x: isinstance(x, P))):
-                ss = jnp.sum(jnp.square(g.astype(jnp.float32)))
-                if _fsdp_dim(s, waxes) is not None:
-                    ss_f += ss
-                else:
-                    ss_r += ss
-            gnorm = jnp.sqrt(jax.lax.psum(ss_f, waxes) + ss_r)
-        else:
-            gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
-                                 for g in jax.tree.leaves(agg)))
-        if sel_hist is not None:
-            # stats were psum'd before the (replicated) selection, so
-            # the histogram is identical on every worker — no further
-            # cross-worker reduction needed
-            counts = jnp.arange(m + 1, dtype=jnp.float32)
-            n_sel = (jnp.sum(counts * sel_hist)
-                     / jnp.maximum(jnp.sum(sel_hist), 1.0))
-            n_sel_min = jnp.argmax(sel_hist > 0).astype(jnp.float32)
-        else:
-            n_sel = (jnp.sum(st.selected.astype(jnp.float32))
-                     if st is not None else jnp.float32(m))
-            n_sel_min = n_sel
+        # fsdp-sharded leaves need a cross-worker psum; replicated
+        # leaves are already global.
+        from ..core.blocked import _fsdp_dim
+        ss_f = jnp.float32(0)
+        ss_r = jnp.float32(0)
+        for g, s in zip(jax.tree.leaves(agg),
+                        jax.tree.leaves(pspecs,
+                                        is_leaf=lambda x: isinstance(x, P))):
+            ss = jnp.sum(jnp.square(g.astype(jnp.float32)))
+            if _fsdp_dim(s, waxes) is not None:
+                ss_f += ss
+            else:
+                ss_r += ss
+        gnorm = jnp.sqrt(jax.lax.psum(ss_f, waxes) + ss_r)
+        # stats were psum'd before the (replicated) selection, so the
+        # histogram is identical on every worker — no further
+        # cross-worker reduction needed
+        counts = jnp.arange(m + 1, dtype=jnp.float32)
+        n_sel = (jnp.sum(counts * sel_hist)
+                 / jnp.maximum(jnp.sum(sel_hist), 1.0))
+        n_sel_min = jnp.argmax(sel_hist > 0).astype(jnp.float32)
         metrics = {
             "loss": jax.lax.pmean(loss, waxes),
             "ce": jax.lax.pmean(met["ce"], waxes),
@@ -225,5 +205,80 @@ def build_train_step(tcfg: TrainConfig, mesh) -> StepBundle:
         }
         return new_params, new_opt, metrics
 
+    return step, pspecs, ospecs, bspecs
+
+
+def _build_global_step(tcfg, mesh, opt, layout):
+    """Auto-SPMD loss region + full-manual aggregation region +
+    auto-SPMD optimizer update.
+
+    The loss is a vmap over the worker axis of the batch — NO shard_map:
+    a lax.scan (the layer stack) inside a partial-manual region trips
+    XLA's manual-subgroup handling, and under plain jit GSPMD shards the
+    vmapped compute over the worker axes and the tensor-parallel math
+    over 'model' exactly as the serving paths do.  Only the aggregation,
+    which needs real worker collectives, enters manual mode — over
+    EVERY axis at once."""
+    cfg = tcfg.model
+    bcfg = tcfg.byzantine
+    waxes = worker_axes(mesh, "global")
+    maxes = tuple(a for a in mesh.axis_names if a not in waxes)
+    wspec = tuple(waxes) if len(waxes) > 1 else waxes[0]
+    m = n_workers(mesh, "global")
+    defs = TF.param_defs(cfg)
+    pspecs = PM.pspec_tree(defs, mesh, fsdp=False)
+    ospecs = _opt_state_specs(tcfg.optimizer, pspecs)
+    bspecs = batch_specs_for(cfg, waxes)
+    remat = tcfg.remat == "block"
+    is_pspec = lambda x: isinstance(x, P)
+
+    # full-manual aggregation region: worker collectives in any engine
+    # layout lower cleanly; leaves arrive as [1, *model-local shard]
+    gb_in = jax.tree.map(lambda s: P(wspec, *s), pspecs, is_leaf=is_pspec)
+
+    @partial(shard_map, mesh=mesh, in_specs=(gb_in, P()),
+             out_specs=(pspecs, P()),
+             axis_names=set(mesh.axis_names), check_vma=False)
+    def agg_region(gstack, key):
+        local = jax.tree.map(lambda g: g.reshape(g.shape[1:]), gstack)
+        local = threat.inject(local, key, bcfg, waxes,
+                              leaf_specs=pspecs, model_axes=maxes)
+        agg, st = robust_aggregate(local, bcfg, waxes, layout=layout,
+                                   flatten_columns=True,
+                                   model_axes=maxes, leaf_specs=pspecs)
+        n_sel = (jnp.sum(st.selected.astype(jnp.float32))
+                 if st is not None else jnp.float32(m))
+        return agg, n_sel
+
+    def step(params, opt_state, batch, step_idx, key):
+        def wloss(p, wbatch):
+            return TF.loss_fn(cfg, p, wbatch, remat=remat)
+
+        (loss, met), grads = jax.vmap(
+            jax.value_and_grad(wloss, has_aux=True),
+            in_axes=(None, 0))(params, batch)
+        # pin the per-worker grad stack to [worker axes, *param sharding]
+        # so the hand-off into the manual region inserts no resharding
+        grads = jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(
+                g, NamedSharding(mesh, P(wspec, *s))),
+            grads, pspecs, is_leaf=is_pspec)
+        agg, n_sel = agg_region(grads, key)
+        new_params, new_opt = opt.update(agg, opt_state, params, step_idx)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(agg)))
+        metrics = {"loss": jnp.mean(loss), "ce": jnp.mean(met["ce"]),
+                   "gnorm": gnorm,
+                   "n_selected": n_sel, "n_selected_min": n_sel}
+        return new_params, new_opt, metrics
+
+    return step, pspecs, ospecs, bspecs
+
+
+def build_train_step(tcfg: TrainConfig, mesh) -> StepBundle:
+    opt = get_optimizer(tcfg)
+    scope, layout = resolve_strategy(tcfg)
+    build = _build_blocked_step if scope == "blocked" else _build_global_step
+    step, pspecs, ospecs, bspecs = build(tcfg, mesh, opt, layout)
     return StepBundle(jax.jit(step, donate_argnums=(0, 1)),
                       pspecs, ospecs, bspecs, scope, layout)

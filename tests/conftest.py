@@ -10,6 +10,14 @@ SRC = os.path.join(REPO, "src")
 sys.path.insert(0, SRC)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "mesh_matrix: parity tests parametrized over tests/meshes.py — "
+        "CI runs `-m mesh_matrix` with REPRO_TEST_MESHES=dm so the "
+        "data×model job skips everything the worker-only job covers")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -1,0 +1,82 @@
+"""Mesh-matrix harness: one place that says WHICH CPU meshes the
+distributed parity suites run on, and emits the subprocess preamble
+that builds each mesh.
+
+Every scope must hold its parity guarantees on two mesh families:
+
+  flat  — worker-only mesh (the original tier-1 coverage): every axis
+          indexes workers, nothing is tensor-sharded.
+  dm    — data×model mesh with a tensor-parallel 'model' axis: the
+          global scope keeps m = n_data workers and tensor-shards
+          eligible leaf dims over 'model' (the aggregation region runs
+          full-manual and psums model-sharded partials across shards —
+          DESIGN.md §Mesh); the blocked scope folds 'model' into the
+          FSDP worker set, so its m is the full device count.
+
+Adding a mesh is one entry in :data:`MESHES` — each parametrized parity
+test picks it up automatically.  The ``REPRO_TEST_MESHES`` env var
+(comma list of names) restricts the matrix, so CI can split the two
+families into separate jobs without a test change.
+
+Subprocess protocol: tests render ``preamble(name, m)`` at the top of a
+``conftest.run_multidevice`` snippet.  The preamble defines::
+
+  mesh      the jax Mesh (axis types Auto)
+  AXES      all mesh axis names (tuple)
+  WAXES     global-scope worker axes  (== AXES minus 'model')
+  MAXES     tensor-parallel axes      (== AXES minus WAXES)
+  BAXES     blocked-scope worker axes (== AXES)
+  m         global-scope worker count
+  bm        blocked-scope worker count (== device count)
+  wspec     P entry for the global worker axes (name or tuple)
+  bspec     P entry for the blocked worker axes
+
+``n_devices(name, m)`` gives the host-device count to pass through to
+``run_multidevice``.
+"""
+import os
+import textwrap
+
+# name -> (mesh shape fn, axis names) where the shape fn maps the
+# requested GLOBAL-scope worker count m to the device grid
+MESHES = {
+    "flat": (lambda m: (m,), ("data",)),
+    "dm": (lambda m: (m, 2), ("data", "model")),
+}
+
+
+def mesh_names():
+    """Active mesh-matrix entries (REPRO_TEST_MESHES filters)."""
+    want = os.environ.get("REPRO_TEST_MESHES", "")
+    names = [n.strip() for n in want.split(",") if n.strip()] or list(MESHES)
+    unknown = [n for n in names if n not in MESHES]
+    if unknown:
+        raise ValueError(f"REPRO_TEST_MESHES: unknown meshes {unknown}; "
+                         f"known: {sorted(MESHES)}")
+    return names
+
+
+def n_devices(name: str, m: int) -> int:
+    shape_fn, _ = MESHES[name]
+    n = 1
+    for s in shape_fn(m):
+        n *= s
+    return n
+
+
+def preamble(name: str, m: int) -> str:
+    shape_fn, axes = MESHES[name]
+    shape = shape_fn(m)
+    return textwrap.dedent(f"""
+        from repro.compat import P
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh({shape!r}, {axes!r})
+        AXES = {axes!r}
+        WAXES = tuple(a for a in AXES if a != "model")
+        MAXES = tuple(a for a in AXES if a == "model")
+        BAXES = AXES
+        m = {m}
+        bm = {n_devices(name, m)}
+        wspec = WAXES if len(WAXES) > 1 else WAXES[0]
+        bspec = BAXES if len(BAXES) > 1 else BAXES[0]
+    """)

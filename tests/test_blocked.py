@@ -1,74 +1,91 @@
 """Blocked (FSDP, in-backward) aggregation on the engine registry.
 
 The parity matrix runs every registered aggregator through
-``core.blocked._bucket_aggregate`` on a 4-device CPU mesh and compares
-against the local [m, d] execution of the SAME registry entry — a
-single bucket's bucket-local selection IS the global selection, so the
-two must agree.  The bucket mixes all three leaf classes: an
+``core.blocked._bucket_aggregate`` and compares against the local
+[m, d] execution of the SAME registry entry — a single bucket's
+bucket-local selection IS the global selection, so the two must agree.
+It runs over the mesh matrix in ``tests/meshes.py``: the worker-only
+CPU mesh AND a data×model mesh — blocked scope folds the 'model' axis
+into the FSDP worker set (every mesh axis is a worker axis, the step is
+one full-manual shard_map; DESIGN.md §Mesh), so the (4,2) case runs
+m = 8 workers.  The bucket mixes all three leaf classes: an
 FSDP-sharded leaf (in-place a2a), a replicated leaf with numel % m != 0
 (flat zero-pad a2a + pad_correction), and a nominally-sharded but
 non-divisible leaf (flat-path fallback).
 
 Also covered: truthful ``n_selected`` under attack (the seed always
-reported m in blocked scope), and decorrelated per-bucket attack noise
-(the seed reused one key for every bucket hook).
+reported m in blocked scope), decorrelated per-bucket attack noise
+(the seed reused one key for every bucket hook), and a jaxpr-level pin
+that the barrier backward never falls back to gathering an m×-sized
+worker matrix (the no-all_gather-fallback guarantee that used to be
+ROADMAP prose).
 """
 import textwrap
 
 import pytest
 
+import meshes
 from conftest import run_multidevice
 
-COMMON = textwrap.dedent("""
-    import jax, jax.numpy as jnp, numpy as np
-    from functools import partial
-    from repro.compat import P, shard_map
-    from repro.configs.base import ByzantineConfig
-    from repro.core import engine
-    from repro.core.blocked import (_bucket_aggregate, bucket_key,
-                                    key_carrier, make_fsdp_agg_barrier,
-                                    selection_token)
-    from repro.launch.mesh import make_mesh
 
-    mesh = make_mesh((4,), ("data",))
-    axes = ("data",)
-    m = 4
-    rng = np.random.default_rng(0)
-    # "w": FSDP dim 0 (8 % 4 == 0)         -> in-place a2a worker view
-    # "b": replicated, numel 7 (7 % 4 != 0) -> flat zero-pad a2a path
-    # "u": sharded spec but 6 % 4 != 0      -> flat-path fallback
-    specs = {"w": P("data", None), "b": P(None), "u": P("data")}
-    full = {"w": rng.normal(size=(m, 8, 6)).astype("f4"),
-            "b": rng.normal(size=(m, 7)).astype("f4"),
-            "u": rng.normal(size=(m, 6)).astype("f4")}
-    SHARDED = {"w": 0}          # leaves whose output is the local shard
+def _common(mesh_name: str) -> str:
+    """Bucket fixture on one mesh-matrix entry.  Blocked scope's worker
+    set is EVERY mesh axis (BAXES/bm from tests/meshes.py)."""
+    return meshes.preamble(mesh_name, 4) + textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from functools import partial
+        from repro.compat import shard_map
+        from repro.configs.base import ByzantineConfig
+        from repro.core import engine
+        from repro.core.blocked import (_bucket_aggregate, bucket_key,
+                                        key_carrier, make_fsdp_agg_barrier,
+                                        selection_token)
 
-    def flatG(tree):
-        return np.concatenate([np.asarray(v).reshape(m, -1)
-                               for v in tree.values()], axis=1)
+        axes = BAXES
+        m = bm
+        rng = np.random.default_rng(0)
+        # "w": FSDP dim 0 (2m % m == 0)          -> in-place a2a worker view
+        # "b": replicated, numel 7 (7 % m != 0)  -> flat zero-pad a2a path
+        # "u": sharded spec but numel m-2        -> flat-path fallback
+        specs = {"w": P(bspec, None), "b": P(None), "u": P(bspec)}
+        full = {"w": rng.normal(size=(m, 2 * m, 6)).astype("f4"),
+                "b": rng.normal(size=(m, 7)).astype("f4"),
+                "u": rng.normal(size=(m, m - 2)).astype("f4")}
+        SHARDED = {"w": 0}          # leaves whose output is the local shard
 
-    def blocked(cfg, tree):
-        @partial(shard_map, mesh=mesh,
-                 in_specs=({k: P("data") for k in tree},),
-                 out_specs=({k: P() for k in tree}, P()))
-        def run(t):
-            local = {k: v.reshape(v.shape[1:]) for k, v in t.items()}
-            out, st = _bucket_aggregate(local, specs, cfg, axes)
-            out = {k: (jax.lax.all_gather(v, axes, axis=SHARDED[k],
-                                          tiled=True)
-                       if k in SHARDED else v) for k, v in out.items()}
-            return out, jnp.sum(st.selected.astype(jnp.float32))
-        out, n_sel = run({k: jnp.asarray(v) for k, v in tree.items()})
-        flat = np.concatenate([np.asarray(out[k]).reshape(-1)
-                               for k in tree])
-        return flat, float(n_sel)
-""")
+        def flatG(tree):
+            return np.concatenate([np.asarray(v).reshape(m, -1)
+                                   for v in tree.values()], axis=1)
+
+        def blocked(cfg, tree):
+            @partial(shard_map, mesh=mesh,
+                     in_specs=({k: P(bspec) for k in tree},),
+                     out_specs=({k: P() for k in tree}, P()))
+            def run(t):
+                local = {k: v.reshape(v.shape[1:]) for k, v in t.items()}
+                out, st = _bucket_aggregate(local, specs, cfg, axes)
+                out = {k: (jax.lax.all_gather(v, axes, axis=SHARDED[k],
+                                              tiled=True)
+                           if k in SHARDED else v) for k, v in out.items()}
+                return out, jnp.sum(st.selected.astype(jnp.float32))
+            out, n_sel = run({k: jnp.asarray(v) for k, v in tree.items()})
+            flat = np.concatenate([np.asarray(out[k]).reshape(-1)
+                                   for k in tree])
+            return flat, float(n_sel)
+    """)
 
 
-def test_blocked_vs_global_parity_all_aggregators():
+def _devices(mesh_name: str) -> int:
+    return meshes.n_devices(mesh_name, 4)
+
+
+@pytest.mark.mesh_matrix
+@pytest.mark.parametrize("mesh_name", meshes.mesh_names())
+def test_blocked_vs_global_parity_all_aggregators(mesh_name):
     """Every registered rule — not just brsgd/mean — runs in blocked
-    scope and matches the local execution of the same registry entry."""
-    code = COMMON + textwrap.dedent("""
+    scope and matches the local execution of the same registry entry,
+    on the worker-only AND the data×model mesh."""
+    code = _common(mesh_name) + textwrap.dedent("""
         for name in engine.registered():
             cfg = ByzantineConfig(aggregator=name, alpha=0.25)
             want = np.asarray(engine.aggregate_local(
@@ -81,14 +98,16 @@ def test_blocked_vs_global_parity_all_aggregators():
                                        err_msg=name)
         print("OK")
     """)
-    assert "OK" in run_multidevice(code, n_devices=4)
+    assert "OK" in run_multidevice(code, n_devices=_devices(mesh_name))
 
 
-def test_blocked_selection_truthful_under_attack():
+@pytest.mark.mesh_matrix
+@pytest.mark.parametrize("mesh_name", meshes.mesh_names())
+def test_blocked_selection_truthful_under_attack(mesh_name):
     """One worker scaled by 1e6: the bucket's SelectionState must report
     n_selected < m, exactly matching the global rule's selection, and
     the aggregate must stay near the honest one."""
-    code = COMMON + textwrap.dedent("""
+    code = _common(mesh_name) + textwrap.dedent("""
         evil = {k: v.copy() for k, v in full.items()}
         for k in evil:
             evil[k][0] *= 1e6                 # worker 0 byzantine
@@ -111,10 +130,12 @@ def test_blocked_selection_truthful_under_attack():
         assert k_sel == 1.0, k_sel
         print("OK")
     """)
-    assert "OK" in run_multidevice(code, n_devices=4)
+    assert "OK" in run_multidevice(code, n_devices=_devices(mesh_name))
 
 
-def test_bucket_attack_noise_decorrelated():
+@pytest.mark.mesh_matrix
+@pytest.mark.parametrize("mesh_name", meshes.mesh_names())
+def test_bucket_attack_noise_decorrelated(mesh_name):
     """Regression: two buckets fed the SAME step key must inject
     DIFFERENT gaussian noise (the seed passed one key to every hook, so
     all buckets received bit-identical noise — a correlated attack
@@ -122,18 +143,18 @@ def test_bucket_attack_noise_decorrelated():
     segment (same hook, different scan index) must differ.  Every
     barrier now receives the RAW step key; the bucket name folds into
     the noise key inside the barrier's backward."""
-    code = COMMON + textwrap.dedent("""
-        bspecs = {"w": P("data", None)}
+    code = _common(mesh_name) + textwrap.dedent("""
+        bspecs = {"w": P(bspec, None)}
         bcfg = ByzantineConfig(aggregator="mean", attack="gaussian",
                                alpha=0.5)
         key = jax.random.PRNGKey(7)
         kf = key_carrier(key)
-        ct = {"w": jnp.asarray(rng.normal(size=(8, 6)).astype("f4"))}
+        ct = {"w": jnp.asarray(rng.normal(size=(2 * m, 6)).astype("f4"))}
 
         def run_bucket(name, layer=0.0):
             hook = make_fsdp_agg_barrier(bspecs, bcfg, axes, name)
             @partial(shard_map, mesh=mesh, in_specs=(P(),),
-                     out_specs=P("data"))
+                     out_specs=P(bspec))
             def f(ct_full):
                 p = {"w": jnp.zeros((2, 6), jnp.float32)}   # local shard
                 _, vjp = jax.vjp(hook, p, selection_token(m),
@@ -150,31 +171,100 @@ def test_bucket_attack_noise_decorrelated():
         assert not np.allclose(a, a1), "layer noise is bit-identical"
         print("OK")
     """)
-    assert "OK" in run_multidevice(code, n_devices=4)
+    assert "OK" in run_multidevice(code, n_devices=_devices(mesh_name))
 
 
-def test_blocked_step_reports_true_selection():
+@pytest.mark.mesh_matrix
+@pytest.mark.parametrize("mesh_name", meshes.mesh_names())
+def test_blocked_backward_never_gathers_worker_matrix(mesh_name):
+    """Jaxpr-level pin of the no-fallback guarantee (previously ROADMAP
+    prose): the barrier BACKWARD keeps every leaf on the 1×-memory a2a
+    path — the only all_gathers it may contain are the re-assembly of
+    already-aggregated flat chunks (``engine.unchunk``), whose output is
+    one leaf, never m× one leaf.  A gather-layout fallback would emit an
+    all_gather whose output is m·numel(leaf) — we assert no all_gather
+    output exceeds the largest padded leaf, on BOTH mesh shapes."""
+    code = _common(mesh_name) + textwrap.dedent("""
+        import math
+        bcfg = ByzantineConfig(aggregator="brsgd", alpha=0.25)
+        bspecs = {"w": P(bspec, None), "b": P(None)}
+        hook = make_fsdp_agg_barrier(bspecs, bcfg, axes, "seg_0")
+        kf = key_carrier(jax.random.PRNGKey(0))
+
+        def bwd_only(p, ct):
+            _, vjp = jax.vjp(hook, p, selection_token(m), jnp.float32(0), kf)
+            return vjp(ct)
+
+        @partial(shard_map, mesh=mesh, in_specs=(P(),), out_specs=P())
+        def traced(_):
+            p = {"w": jnp.zeros((2, 6), jnp.float32),    # local FSDP shard
+                 "b": jnp.zeros((7,), jnp.float32)}      # replicated
+            ct = {"w": jnp.zeros((2 * m, 6), jnp.float32),
+                  "b": jnp.zeros((7,), jnp.float32)}
+            out = bwd_only(p, ct)
+            return sum(jnp.sum(x) for x in jax.tree.leaves(out))
+
+        jaxpr = jax.make_jaxpr(traced)(jnp.float32(0))
+
+        def walk(jx, out):
+            for eqn in jx.eqns:
+                if eqn.primitive.name == "all_gather":
+                    out.append(eqn)
+                for v in eqn.params.values():
+                    if hasattr(v, "jaxpr"):       # ClosedJaxpr
+                        walk(v.jaxpr, out)
+                    elif hasattr(v, "eqns"):      # raw Jaxpr
+                        walk(v, out)
+            return out
+
+        gathers = walk(jaxpr.jaxpr, [])
+        assert gathers, "expected unchunk all_gathers in the backward"
+        # largest leaf (the FSDP "w") padded to a multiple of m
+        leaf_max = max(2 * m * 6, m * math.ceil(7 / m), m)
+        for eqn in gathers:
+            out_sz = int(np.prod(eqn.outvars[0].aval.shape))
+            in_sz = int(np.prod(eqn.invars[0].aval.shape))
+            assert out_sz <= leaf_max, (
+                f"all_gather output {out_sz} exceeds one padded leaf "
+                f"({leaf_max}): an m x-sized worker-matrix gather "
+                f"(gather-layout fallback) leaked into the backward")
+            assert out_sz == in_sz * m, (out_sz, in_sz)
+        print("OK", len(gathers))
+    """)
+    assert "OK" in run_multidevice(code, n_devices=_devices(mesh_name))
+
+
+@pytest.mark.mesh_matrix
+@pytest.mark.parametrize("mesh_name", meshes.mesh_names())
+def test_blocked_step_reports_true_selection(mesh_name):
     """End-to-end blocked train step under a scale attack: n_selected
     comes from the real per-bucket selections (< m; the seed hard-coded
-    m), with n_selected_min <= n_selected."""
-    code = textwrap.dedent("""
+    m), with n_selected_min <= n_selected — on the worker-only mesh AND
+    the (4,2) data×model mesh (8 workers, 'model' folded into the FSDP
+    worker set)."""
+    shape, axes = ((8,), ("data",)) if mesh_name == "flat" else \
+        ((4, 2), ("data", "model"))
+    code = textwrap.dedent(f"""
         import jax, jax.numpy as jnp, numpy as np
         from repro.configs import ARCHS, TrainConfig, ByzantineConfig
         from repro.training.step import build_train_step
         from repro.models import transformer as TF, params as PM
-        from repro.launch.mesh import make_mesh
+        from repro.launch.mesh import make_mesh, n_workers
         from repro.data.pipeline import LMWorkerPipeline
 
-        mesh = make_mesh((8,), ("data",))
+        mesh = make_mesh({shape!r}, {axes!r})
+    """) + textwrap.dedent("""
         cfg = ARCHS["qwen3-0.6b"].reduced()
         bcfg = ByzantineConfig(aggregator="brsgd", attack="scale", alpha=0.25)
         tcfg = TrainConfig(model=cfg, byzantine=bcfg, optimizer="sgd",
                            lr=0.05, agg_scope="blocked", agg_layout="a2a")
         bundle = build_train_step(tcfg, mesh)
+        m = n_workers(mesh, bundle.scope)
+        assert m == 8, m
         psh, osh, bsh = bundle.shardings(mesh)
         key = jax.random.PRNGKey(0)
         params = jax.device_put(PM.init_params(TF.param_defs(cfg), key), psh)
-        pipe = LMWorkerPipeline(cfg, 8, 2, 32, byz=bcfg)
+        pipe = LMWorkerPipeline(cfg, m, 2, 32, byz=bcfg)
         with mesh:
             for s in range(2):
                 batch = {k: jax.device_put(jnp.asarray(v), bsh[k])

@@ -6,6 +6,7 @@ import textwrap
 
 import pytest
 
+import meshes
 from conftest import run_multidevice
 
 COMMON = textwrap.dedent("""
@@ -176,6 +177,53 @@ def test_blocked_fsdp_aggregation_runs_and_filters():
         print("OK")
     """)
     assert "OK" in run_multidevice(code, timeout=560)
+
+
+@pytest.mark.mesh_matrix
+@pytest.mark.parametrize("mesh_name", meshes.mesh_names())
+@pytest.mark.parametrize("layout", ["gather", "a2a"])
+def test_global_train_step_mesh_matrix(mesh_name, layout):
+    """End-to-end GLOBAL-scope train step on the mesh matrix: on the
+    data×model mesh the loss runs auto-SPMD with tensor parallelism and
+    only the aggregation region enters (full-)manual mode — the
+    configuration that used to die in XLA SPMD partitioning
+    (PartitionId / IsManualSubgroup).  Under a scale attack brsgd must
+    reject the byzantine worker (n_selected < m) and keep the loss
+    finite, in BOTH collective layouts."""
+    code = meshes.preamble(mesh_name, 4) + textwrap.dedent(f"""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import ARCHS, TrainConfig, ByzantineConfig
+        from repro.training.step import build_train_step
+        from repro.models import transformer as TF, params as PM
+        from repro.data.pipeline import LMWorkerPipeline
+
+        cfg = ARCHS["qwen3-0.6b"].reduced()
+        bcfg = ByzantineConfig(aggregator="brsgd", attack="scale",
+                               alpha=0.25)
+        tcfg = TrainConfig(model=cfg, byzantine=bcfg, optimizer="sgd",
+                           lr=0.05, agg_scope="global",
+                           agg_layout={layout!r})
+        bundle = build_train_step(tcfg, mesh)
+        assert bundle.scope == "global" and bundle.layout == {layout!r}
+        psh, osh, bsh = bundle.shardings(mesh)
+        key = jax.random.PRNGKey(0)
+        params = jax.device_put(PM.init_params(TF.param_defs(cfg), key), psh)
+        pipe = LMWorkerPipeline(cfg, m, 2, 32, byz=bcfg)
+        with mesh:
+            for s in range(2):
+                batch = {{k: jax.device_put(jnp.asarray(v), bsh[k])
+                          for k, v in pipe.batch(s).items()}}
+                params, _, met = bundle.step_fn(params, (), batch,
+                                                jnp.int32(s),
+                                                jax.random.fold_in(key, s))
+        met = {{k: float(v) for k, v in met.items()}}
+        assert np.isfinite(met["loss"]), met
+        assert 0 < met["n_selected"] < m, met      # 1/4 byzantine rejected
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code,
+                                   n_devices=meshes.n_devices(mesh_name, 4),
+                                   timeout=560)
 
 
 def test_multipod_mesh_axes():

@@ -1,10 +1,15 @@
 """Layout-aware aggregation engine: registry contract + layout parity.
 
-The parity matrix runs every registered aggregator on a 2×2 CPU mesh
-(worker axes ("pod", "data"), m = 4) in both collective layouts and
-compares against the local [m, d] execution of the SAME registry entry.
-Leaf sizes are chosen so no leaf is divisible by m — every a2a transfer
-exercises the zero-pad score-correction path.
+The parity matrix runs every registered aggregator in both collective
+layouts and compares against the local [m, d] execution of the SAME
+registry entry, over the mesh matrix in ``tests/meshes.py``: a
+worker-only mesh AND a data×model mesh whose 'model' axis tensor-shards
+one leaf (the aggregation runs full-manual; model-sharded partials
+close with a cross-shard psum).  Leaf sizes are chosen so no
+model-replicated leaf is divisible by m — every a2a transfer exercises
+the zero-pad score-correction path.  A second fixed 2×2 ("pod","data")
+mesh covers multi-worker-axis specifics (jaxpr regressions, fast
+paths).
 """
 import textwrap
 
@@ -12,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import meshes
 from conftest import run_multidevice
 from repro.configs.base import ByzantineConfig
 from repro.core import aggregators as A
@@ -172,8 +178,58 @@ PARITY = textwrap.dedent("""
 """)
 
 
-def test_all_aggregators_layout_parity_2x2_mesh():
-    code = PARITY + textwrap.dedent("""
+# ---------------------------------------------------------------------------
+# mesh-matrix parity (tests/meshes.py): worker-only AND data×model
+# ---------------------------------------------------------------------------
+
+def _matrix_preamble(mesh_name: str) -> str:
+    """Leaf set + full-manual sharded() runner for one mesh-matrix
+    entry.  Leaf "w" tensor-shards its last dim over 'model' where the
+    mesh has one; "a"/"b"/"c" are model-replicated with numels 15/9/2 —
+    none divisible by m=4, so every a2a transfer zero-pads and the
+    score correction must fire ("c", numel 2 < m, is the degenerate
+    1-column chunk)."""
+    return meshes.preamble(mesh_name, 4) + textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from functools import partial
+        from repro.compat import shard_map
+        from repro.configs.base import ByzantineConfig
+        from repro.core import engine
+        from repro.core.aggregators import AGGREGATORS, aggregate
+
+        rng = np.random.default_rng(0)
+        gs = {"a": rng.normal(size=(m, 3, 5)).astype("f4"),
+              "b": rng.normal(size=(m, 9)).astype("f4"),
+              "c": rng.normal(size=(m, 2)).astype("f4"),
+              "w": rng.normal(size=(m, 4, 6)).astype("f4")}
+        SPECS = {"a": P(None, None), "b": P(None), "c": P(None),
+                 "w": P(None, "model") if MAXES else P(None, None)}
+        G = jnp.concatenate([jnp.asarray(v).reshape(m, -1)
+                             for v in gs.values()], axis=1)
+
+        def sharded(cfg, layout, fast):
+            @partial(shard_map, mesh=mesh,
+                     in_specs=({k: P(wspec, *SPECS[k]) for k in gs},),
+                     out_specs=({k: SPECS[k] for k in gs}, P()))
+            def agg(tree):
+                local = {k: v.reshape(v.shape[1:]) for k, v in tree.items()}
+                out, st = engine.aggregate_sharded(
+                    local, cfg, WAXES, layout=layout, allow_fast_paths=fast,
+                    model_axes=MAXES, leaf_specs=SPECS)
+                scores = getattr(st, "scores", None)
+                if scores is None:
+                    scores = jnp.zeros((m,), jnp.float32)
+                return out, scores
+            out, scores = agg({k: jnp.asarray(v) for k, v in gs.items()})
+            flat = np.concatenate([np.asarray(out[k]).reshape(-1) for k in gs])
+            return flat, np.asarray(scores)
+    """)
+
+
+@pytest.mark.mesh_matrix
+@pytest.mark.parametrize("mesh_name", meshes.mesh_names())
+def test_all_aggregators_layout_parity_mesh_matrix(mesh_name):
+    code = _matrix_preamble(mesh_name) + textwrap.dedent("""
         for name in AGGREGATORS:
             cfg = ByzantineConfig(aggregator=name, alpha=0.25)
             want = np.asarray(aggregate(G, cfg))
@@ -186,14 +242,18 @@ def test_all_aggregators_layout_parity_2x2_mesh():
                                            err_msg=f"{name}/{layout}")
         print("OK")
     """)
-    assert "OK" in run_multidevice(code, n_devices=4)
+    assert "OK" in run_multidevice(code,
+                                   n_devices=meshes.n_devices(mesh_name, 4))
 
 
-def test_brsgd_scores_integer_exact_across_layouts():
-    """Majority scores are sums of 0/1 indicators — every layout must
-    produce the SAME integers, including through the a2a zero-pad
-    correction (d % m != 0 on every leaf here)."""
-    code = PARITY + textwrap.dedent("""
+@pytest.mark.mesh_matrix
+@pytest.mark.parametrize("mesh_name", meshes.mesh_names())
+def test_brsgd_scores_integer_exact_across_layouts(mesh_name):
+    """Majority scores are sums of 0/1 indicators — every layout on
+    every mesh must produce the SAME integers, including through the
+    a2a zero-pad correction (d % m != 0 on the replicated leaves) and
+    the cross-model-shard psum on the data×model mesh."""
+    code = _matrix_preamble(mesh_name) + textwrap.dedent("""
         cfg = ByzantineConfig(aggregator="brsgd")
         from repro.core.aggregators import brsgd
         _, st = brsgd(G, cfg, return_state=True)
@@ -204,7 +264,8 @@ def test_brsgd_scores_integer_exact_across_layouts():
             np.testing.assert_array_equal(got, want, err_msg=layout)
         print("OK")
     """)
-    assert "OK" in run_multidevice(code, n_devices=4)
+    assert "OK" in run_multidevice(code,
+                                   n_devices=meshes.n_devices(mesh_name, 4))
 
 
 def test_mean_fast_path_matches_generic_engine():

@@ -104,6 +104,64 @@ def test_masked_mean_full_mask_is_mean(G):
     np.testing.assert_allclose(out, G.mean(axis=0), rtol=1e-4, atol=1e-4)
 
 
+def tie_heavy_vectors(min_m=3, max_m=32):
+    """1-D vectors drawn from a tiny value pool — adversarially many
+    exact ties, the regime where quantile index conventions and
+    counting-rank predicates disagree if either is off by one."""
+    return st.integers(min_m, max_m).flatmap(
+        lambda n: st.integers(1, 4).flatmap(
+            lambda k: st.lists(
+                st.sampled_from([-1.5, 0.0, 0.25, 7.0][:k]),
+                min_size=n, max_size=n))).map(
+                    lambda xs: np.asarray(xs, np.float32))
+
+
+@given(tie_heavy_vectors(), st.floats(0.0, 1.0))
+def test_rank_select_matches_quantile_nearest_on_ties(x, q):
+    """ref.rank_select (the sort-free counting quantile that replaced
+    jnp.quantile in the BrSGD selection) must agree with
+    jnp.quantile(method='nearest') — including on tie-heavy inputs and
+    at the .5 rounding boundary pinned by quantile_nearest_index."""
+    m = x.shape[0]
+    k = ref.quantile_nearest_index(q, m)
+    got = float(ref.rank_select(jnp.asarray(x), k))
+    want = float(jnp.quantile(jnp.asarray(x), q, method="nearest"))
+    assert got == want, (x.tolist(), q, k, got, want)
+
+
+@given(tie_heavy_vectors(), st.integers(0, 31))
+def test_rank_select_equals_sorted_index(x, k):
+    m = x.shape[0]
+    k = k % m
+    got = float(ref.rank_select(jnp.asarray(x), k))
+    want = float(np.sort(x)[k])
+    assert got == want, (x.tolist(), k, got, want)
+
+
+@given(matrices(min_d=2),
+       st.lists(st.integers(1, 200), min_size=1, max_size=5))
+def test_fused_stats_additive_over_arbitrary_splits(G, cuts):
+    """The engine.leaf_stats contract: every statistic of the fused
+    pass is additive over ARBITRARY disjoint dimension splits — the
+    property the gather/a2a/blocked layouts rely on when they sum
+    per-leaf / per-shard / per-model-shard partials (+psum).  Scores
+    are 0/1 indicator sums, so they must be exactly equal."""
+    from repro.kernels import ops
+    m, d = G.shape
+    bounds = sorted({c % d for c in cuts} | {0, d})
+    slices = [slice(a, b) for a, b in zip(bounds, bounds[1:])]
+    needs = tuple(sorted(ref.STAT_NAMES))
+    whole = ops.fused_stats(jnp.asarray(G), needs)
+    parts = [ops.fused_stats(jnp.asarray(G[:, s]), needs) for s in slices]
+    for k in needs:
+        summed = sum(np.asarray(p[k]) for p in parts)
+        np.testing.assert_allclose(summed, np.asarray(whole[k]),
+                                   rtol=1e-4, atol=1e-3, err_msg=k)
+    np.testing.assert_array_equal(
+        sum(np.asarray(p["scores"]) for p in parts),
+        np.asarray(whole["scores"]))
+
+
 @given(st.integers(2, 16), st.integers(1, 50))
 def test_identical_workers_all_selected(m, d):
     """If every worker reports the same gradient, nobody is filtered and

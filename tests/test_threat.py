@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+import meshes
 from conftest import run_multidevice
 from repro.configs.base import ByzantineConfig
 from repro.core import threat
@@ -103,57 +104,119 @@ def test_resample_moves_corruption_between_steps(rng):
     assert hit[0] != hit[1], "resample reused one byzantine set"
 
 
+def test_image_pipeline_resamples_membership_per_step():
+    """Regression: ImageWorkerPipeline applied the step-0 membership
+    draw to the dataset at construction, so ``resample`` degenerated to
+    a fixed seeded-random set.  Corruption now happens per batch() from
+    a step-keyed mask (matching the LM pipeline): two steps must
+    corrupt DIFFERENT worker sets, while the fixed policies stay
+    fixed."""
+    from repro.data.pipeline import ImageWorkerPipeline
+
+    m, bpw = 12, 16
+    byz = ByzantineConfig(attack="label_flip", alpha=0.25,
+                          membership="resample")
+    pipe = ImageWorkerPipeline(m, n_per_worker=32, byz=byz)
+    clean = ImageWorkerPipeline(m, n_per_worker=32)
+
+    def corrupted_workers(step):
+        got = pipe.batch(step, bpw)["labels"]
+        want = clean.batch(step, bpw)["labels"]
+        return frozenset(np.flatnonzero((got != want).any(axis=1)).tolist())
+
+    hit = {s: corrupted_workers(s) for s in range(4)}
+    assert all(len(h) == 3 for h in hit.values()), hit
+    assert len(set(hit.values())) > 1, f"resample reused one set: {hit}"
+    # per-step masks match the declared membership contract exactly
+    for s, h in hit.items():
+        want = frozenset(np.flatnonzero(
+            threat.data_membership(byz, m, s)).tolist())
+        assert h == want, (s, h, want)
+    # fixed policies keep one set across steps
+    fixed = ByzantineConfig(attack="label_flip", alpha=0.25,
+                            membership="random", byz_seed=5)
+    fpipe = ImageWorkerPipeline(m, n_per_worker=32, byz=fixed)
+
+    def fixed_workers(step):
+        got = fpipe.batch(step, bpw)["labels"]
+        want = clean.batch(step, bpw)["labels"]
+        return frozenset(np.flatnonzero((got != want).any(axis=1)).tolist())
+
+    assert fixed_workers(0) == fixed_workers(3)
+
+
 # ---------------------------------------------------------------------------
 # dense ↔ shard_map ↔ blocked parity (subprocess, 8 host devices)
 # ---------------------------------------------------------------------------
 
-COMMON = textwrap.dedent("""
-    import jax, jax.numpy as jnp, numpy as np
-    from functools import partial
-    from repro.compat import P, shard_map
-    from repro.configs.base import ByzantineConfig
-    from repro.core import engine, threat
-    from repro.launch.mesh import make_mesh
+def _common(mesh_name: str) -> str:
+    """Mesh-matrix preamble (tests/meshes.py): 8 host devices per case
+    — flat keeps the original m=8; dm runs m=4 global workers × 2
+    model shards, with leaf "w" tensor-sharded over 'model' so the
+    noise-view slicing (threat._noise_view) is exercised."""
+    m = 8 if mesh_name == "flat" else 4
+    return meshes.preamble(mesh_name, m) + textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from functools import partial
+        from repro.compat import shard_map
+        from repro.configs.base import ByzantineConfig
+        from repro.core import engine, threat
 
-    mesh = make_mesh((8,), ("data",))
-    axes = ("data",)
-    m = 8
-    rng = np.random.default_rng(0)
-    key = jax.random.PRNGKey(0)
-    GRAD = [n for n in threat.registered()
-            if threat.get_spec(n).scope == "gradient"]
-    assert "alie" in GRAD and "ipm" in GRAD
+        rng = np.random.default_rng(0)
+        key = jax.random.PRNGKey(0)
+        GRAD = [n for n in threat.registered()
+                if threat.get_spec(n).scope == "gradient"]
+        assert "alie" in GRAD and "ipm" in GRAD
 
-    def inject_tree(gs, bcfg, k):
-        @partial(shard_map, mesh=mesh,
-                 in_specs=({n: P("data") for n in gs}, P()),
-                 out_specs={n: P("data") for n in gs})
-        def inj(tree, kk):
-            local = {n: v.reshape(v.shape[1:]) for n, v in tree.items()}
-            out = threat.inject(local, kk, bcfg, axes)
-            return {n: v[None] for n, v in out.items()}
-        return inj({n: jnp.asarray(v) for n, v in gs.items()}, k)
-""")
+        def spec_of(n):
+            # leaf "w" tensor-shards its LAST dim over 'model' (if any)
+            return P(None, "model") if (n == "w" and MAXES) else None
+
+        def inject_tree(gs, bcfg, k):
+            SPECS = {n: spec_of(n) or P(*([None] * (v.ndim - 1)))
+                     for n, v in gs.items()}
+            @partial(shard_map, mesh=mesh,
+                     in_specs=({n: P(wspec, *SPECS[n]) for n in gs}, P()),
+                     out_specs={n: P(wspec, *SPECS[n]) for n in gs})
+            def inj(tree, kk):
+                local = {n: v.reshape(v.shape[1:]) for n, v in tree.items()}
+                out = threat.inject(local, kk, bcfg, WAXES,
+                                    leaf_specs=SPECS, model_axes=MAXES)
+                return {n: v[None] for n, v in out.items()}
+            return inj({n: jnp.asarray(v) for n, v in gs.items()}, k)
+    """)
 
 
-def test_dense_vs_shardmap_parity_all_gradient_attacks():
+@pytest.mark.mesh_matrix
+@pytest.mark.parametrize("mesh_name", meshes.mesh_names())
+def test_dense_vs_shardmap_parity_all_gradient_attacks(mesh_name):
     """threat.inject inside shard_map == threat.apply_dense on the same
     G, for EVERY registered gradient attack — the seed raised
     ValueError for alie/ipm here.  Single leaf: noise keys line up, so
-    even gaussian matches bit-for-bit."""
-    code = COMMON + textwrap.dedent("""
+    even gaussian matches bit-for-bit (on the data×model mesh the
+    model-sharded leaf draws full-leaf noise and slices its shard, so
+    the bits still line up)."""
+    code = _common(mesh_name) + textwrap.dedent("""
         g = rng.normal(size=(m, 12)).astype("f4")
+        w = rng.normal(size=(m, 4, 6)).astype("f4")   # model-shardable
         for kind in GRAD:
             bcfg = ByzantineConfig(attack=kind, alpha=0.25)
             got = np.asarray(inject_tree({"g": g}, bcfg, key)["g"])
             want = np.asarray(threat.apply_dense(jnp.asarray(g), key, bcfg))
             np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5,
                                        err_msg=kind)
-        # gaussian noise keys are derived identically -> bit-exact
+        # gaussian noise keys are derived identically -> bit-exact; the
+        # dense reference is UNSHARDED, so on the data×model mesh this
+        # also proves the tensor-sharded leaf "w" draws
+        # sharding-invariant noise (full-leaf draw + shard slice,
+        # threat._noise_view)
         bcfg = ByzantineConfig(attack="gaussian", alpha=0.25)
-        got = np.asarray(inject_tree({"g": g}, bcfg, key)["g"])
-        want = np.asarray(threat.apply_dense(jnp.asarray(g), key, bcfg))
-        np.testing.assert_array_equal(got, want)
+        for name, ref in (("g", g), ("w", w)):
+            got = np.asarray(inject_tree({name: ref}, bcfg, key)[name])
+            want = np.asarray(threat.apply_dense(
+                jnp.asarray(ref).reshape(m, -1), key, bcfg))
+            np.testing.assert_array_equal(got.reshape(m, -1), want,
+                                          err_msg=name)
         # membership policies hold per-worker too: the corrupted set is
         # the dense mask, not a worker-index prefix
         bcfg = ByzantineConfig(attack="scale", alpha=0.25,
@@ -168,12 +231,14 @@ def test_dense_vs_shardmap_parity_all_gradient_attacks():
     assert "OK" in run_multidevice(code)
 
 
-def test_multi_leaf_knowledge_parity():
+@pytest.mark.mesh_matrix
+@pytest.mark.parametrize("mesh_name", meshes.mesh_names())
+def test_multi_leaf_knowledge_parity(mesh_name):
     """Per-leaf psum'd knowledge == dense knowledge on the concatenated
     matrix for the stat-consuming attacks (per-coordinate moments are
     leafwise, so splitting the gradient into leaves changes nothing)."""
-    code = COMMON + textwrap.dedent("""
-        leaves = {"a": (3, 5), "b": (17,), "c": (2, 2)}
+    code = _common(mesh_name) + textwrap.dedent("""
+        leaves = {"a": (3, 5), "b": (17,), "c": (2, 2), "w": (4, 6)}
         gs = {n: rng.normal(size=(m,) + s).astype("f4")
               for n, s in leaves.items()}
         G = jnp.concatenate([jnp.asarray(v).reshape(m, -1)
@@ -192,14 +257,19 @@ def test_multi_leaf_knowledge_parity():
     assert "OK" in run_multidevice(code)
 
 
-def test_alie_ipm_through_aggregation_both_layouts():
+@pytest.mark.mesh_matrix
+@pytest.mark.parametrize("mesh_name", meshes.mesh_names())
+def test_alie_ipm_through_aggregation_both_layouts(mesh_name):
     """Regression: the full attack->aggregate pipeline runs under
     shard_map in BOTH collective layouts for alie/ipm (the seed's
-    inject_attack raised ValueError) and matches the dense path."""
-    code = COMMON + textwrap.dedent("""
+    inject_attack raised ValueError) and matches the dense path — on
+    the data×model mesh with leaf "w" tensor-sharded."""
+    code = _common(mesh_name) + textwrap.dedent("""
         from repro.core.distributed import robust_aggregate
-        gs = {"w": rng.normal(size=(m, 4, 5)).astype("f4"),
+        gs = {"w": rng.normal(size=(m, 4, 6)).astype("f4"),
               "b": rng.normal(size=(m, 3)).astype("f4")}
+        SPECS = {n: spec_of(n) or P(*([None] * (v.ndim - 1)))
+                 for n, v in gs.items()}
         G = jnp.concatenate([jnp.asarray(v).reshape(m, -1)
                              for v in gs.values()], axis=1)
         for kind in ("alie", "ipm"):
@@ -210,14 +280,19 @@ def test_alie_ipm_through_aggregation_both_layouts():
                     threat.apply_dense(G, key, bcfg), bcfg))
                 for layout in ("gather", "a2a"):
                     @partial(shard_map, mesh=mesh,
-                             in_specs=({n: P("data") for n in gs}, P()),
-                             out_specs={n: P() for n in gs})
+                             in_specs=({n: P(wspec, *SPECS[n])
+                                        for n in gs}, P()),
+                             out_specs={n: SPECS[n] for n in gs})
                     def run(tree, kk):
                         local = {n: v.reshape(v.shape[1:])
                                  for n, v in tree.items()}
-                        local = threat.inject(local, kk, bcfg, axes)
-                        return robust_aggregate(local, bcfg, axes,
-                                                layout=layout)[0]
+                        local = threat.inject(local, kk, bcfg, WAXES,
+                                              leaf_specs=SPECS,
+                                              model_axes=MAXES)
+                        return robust_aggregate(local, bcfg, WAXES,
+                                                layout=layout,
+                                                model_axes=MAXES,
+                                                leaf_specs=SPECS)[0]
                     out = run({n: jnp.asarray(v) for n, v in gs.items()},
                               key)
                     got = np.concatenate([np.asarray(out[n]).reshape(-1)
@@ -230,27 +305,31 @@ def test_alie_ipm_through_aggregation_both_layouts():
     assert "OK" in run_multidevice(code)
 
 
-def test_blocked_barrier_injects_any_registered_attack():
+@pytest.mark.mesh_matrix
+@pytest.mark.parametrize("mesh_name", meshes.mesh_names())
+def test_blocked_barrier_injects_any_registered_attack(mesh_name):
     """The blocked custom-VJP barrier corrupts per-bucket gradients via
     the SAME registry entries: barrier(bwd) with the mean rule ==
     dense corrupt + mean, for alie/ipm/scale AND (bit-exact keys)
     gaussian.  The noise key folds bucket+layer inside the barrier; the
-    dense reference folds the same ids."""
-    code = COMMON + textwrap.dedent("""
+    dense reference folds the same ids.  Blocked scope folds EVERY mesh
+    axis into the worker set, so on the data×model mesh m is the full
+    device count."""
+    code = _common(mesh_name) + textwrap.dedent("""
         from repro.core.blocked import (bucket_key, key_carrier,
                                         make_fsdp_agg_barrier,
                                         selection_token)
         bspecs = {"w": P(None)}
         kf = key_carrier(key)
-        ct = rng.normal(size=(m, 7)).astype("f4")   # per-worker gradients
+        ct = rng.normal(size=(bm, 7)).astype("f4")  # per-worker gradients
 
         def blocked_mean(bcfg, name):
-            hook = make_fsdp_agg_barrier(bspecs, bcfg, axes, name)
-            @partial(shard_map, mesh=mesh, in_specs=(P("data"),),
+            hook = make_fsdp_agg_barrier(bspecs, bcfg, BAXES, name)
+            @partial(shard_map, mesh=mesh, in_specs=(P(bspec),),
                      out_specs=P())
             def f(ct_w):
                 p = {"w": jnp.zeros((7,), jnp.float32)}
-                _, vjp = jax.vjp(hook, p, selection_token(m),
+                _, vjp = jax.vjp(hook, p, selection_token(bm),
                                  jnp.float32(0), kf)
                 agg, _, _, _ = vjp({"w": ct_w.reshape(-1)})
                 return agg["w"]
