@@ -1,15 +1,18 @@
-"""Validate the committed ``BENCH_agg.json`` schema + metadata.
+"""Validate the committed ``BENCH_agg.json`` + ``BENCH_contracts.json``
+schemas and metadata.
 
 Import-check tier: no timing, no devices — safe to run in CI on every
 PR (.github/workflows/ci.yml).  Guards the perf-trajectory contract:
 every benchmark file must carry the provenance stamp (backend /
 jax-version / git-rev) that makes cross-PR ``agg_cost.py --compare``
-runs meaningful, and every registered aggregator must have local-layout
-rows so a registry addition without a benchmark regeneration fails
-loudly.
+and ``lint`` bytes-envelope runs meaningful, and every registered
+aggregator must be covered (local timing rows; per-layout contract
+cases) so a registry addition without a regeneration fails loudly.
 
-Usage: ``PYTHONPATH=src python benchmarks/check_bench.py [BENCH_JSON]``
-Exit code 0 on a valid file, 1 with a message per violation otherwise.
+Usage: ``PYTHONPATH=src python benchmarks/check_bench.py [JSON ...]``
+No arguments validates both committed files.  A contracts file is
+recognized by its ``"kind": "contracts"`` stamp.  Exit code 0 when
+every file is valid, 1 with a message per violation otherwise.
 """
 from __future__ import annotations
 
@@ -19,9 +22,13 @@ import os
 import sys
 
 LAYOUTS = {"local", "gather", "a2a", "blocked"}
+CONTRACT_MESHES = {"flat", "dm", "none"}
 META_KEYS = ("backend", "jax_version", "git_rev", "date")
 ROW_KEYS = ("aggregator", "layout", "m", "d", "us_per_call")
+CASE_KEYS = ("aggregator", "layout", "mesh", "scope", "counts", "bytes",
+             "collective_bytes")
 SCHEMA = 2
+CONTRACTS_SCHEMA = 1
 
 
 def check(path: str) -> list:
@@ -76,15 +83,103 @@ def check(path: str) -> list:
     return errors
 
 
+def _registered_aggregators():
+    """Registry names, or None when repro isn't importable (bare
+    checkout without PYTHONPATH=src) — coverage checks then skip."""
+    try:
+        from repro.core import engine
+    except ImportError:
+        return None
+    return set(engine.registered())
+
+
+def check_contracts(path: str) -> list:
+    """Validate a BENCH_contracts.json (written by ``python -m
+    repro.launch.lint --record``): provenance stamp, per-case schema,
+    no unknown aggregator/layout/mesh names, full (aggregator × layout)
+    coverage, finite non-negative byte counts."""
+    errors = []
+    try:
+        with open(path) as f:
+            bench = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+
+    if bench.get("schema") != CONTRACTS_SCHEMA:
+        errors.append(f"contracts schema must be {CONTRACTS_SCHEMA}, "
+                      f"got {bench.get('schema')!r}")
+    if bench.get("kind") != "contracts":
+        errors.append("missing 'kind': 'contracts' stamp")
+    meta = bench.get("meta")
+    if not isinstance(meta, dict):
+        errors.append("missing 'meta' provenance stamp")
+    else:
+        for k in META_KEYS:
+            if not isinstance(meta.get(k), str) or not meta.get(k):
+                errors.append(f"meta.{k} must be a non-empty string")
+
+    cases = bench.get("cases")
+    if not isinstance(cases, list) or not cases:
+        return errors + ["'cases' must be a non-empty list"]
+    known = _registered_aggregators()
+    seen = set()
+    for i, c in enumerate(cases):
+        ctx = f"cases[{i}]"
+        if not isinstance(c, dict) or set(CASE_KEYS) - set(c):
+            errors.append(f"{ctx}: needs keys {CASE_KEYS}")
+            continue
+        ctx = f"cases[{i}] ({c['aggregator']}/{c['layout']}/{c['mesh']})"
+        if known is not None and c["aggregator"] not in known:
+            errors.append(f"{ctx}: unknown aggregator — registry has "
+                          f"{sorted(known)}")
+        if c["layout"] not in LAYOUTS:
+            errors.append(f"{ctx}: unknown layout {c['layout']!r}")
+        if c["mesh"] not in CONTRACT_MESHES:
+            errors.append(f"{ctx}: unknown mesh {c['mesh']!r}")
+        if (c["layout"] == "local") != (c["mesh"] == "none"):
+            errors.append(f"{ctx}: the local layout (and only it) is "
+                          f"meshless")
+        nb = c["collective_bytes"]
+        vals = [nb, *c["bytes"].values(), *c["counts"].values()] \
+            if isinstance(c["bytes"], dict) and isinstance(c["counts"], dict) \
+            else [nb]
+        if not all(isinstance(v, (int, float)) and math.isfinite(v)
+                   and v >= 0 for v in vals):
+            errors.append(f"{ctx}: counts/bytes must be finite and "
+                          f"non-negative")
+        seen.add((c["aggregator"], c["layout"]))
+    if known is not None:
+        missing = {(a, l) for a in known for l in LAYOUTS} - seen
+        if missing:
+            errors.append(
+                f"missing (aggregator × layout) contract coverage: "
+                f"{sorted(missing)} — re-run "
+                f"`python -m repro.launch.lint --all --record`")
+    return errors
+
+
+def _check_any(path: str) -> list:
+    """Dispatch on the file's ``kind`` stamp."""
+    try:
+        with open(path) as f:
+            kind = json.load(f).get("kind")
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    return check_contracts(path) if kind == "contracts" else check(path)
+
+
 def main(argv) -> int:
-    path = argv[1] if len(argv) > 1 else os.path.join(
-        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
-        "BENCH_agg.json")
-    errors = check(path)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    paths = argv[1:] or [os.path.join(root, "BENCH_agg.json"),
+                         os.path.join(root, "BENCH_contracts.json")]
+    errors = []
+    for path in paths:
+        errs = _check_any(path)
+        errors += [f"{os.path.basename(path)}: {e}" for e in errs]
+        if not errs:
+            print(f"check_bench: {os.path.normpath(path)} OK")
     for e in errors:
         print(f"check_bench: {e}", file=sys.stderr)
-    if not errors:
-        print(f"check_bench: {os.path.normpath(path)} OK")
     return 1 if errors else 0
 
 

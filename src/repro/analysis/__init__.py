@@ -1,0 +1,22 @@
+"""Static analysis of what a compiled step structurally does.
+
+Two IR walkers produce one :class:`~repro.analysis.contract.
+CollectiveContract` shape — ``jaxpr`` (trace-time, axis names + manual
+context) and ``hlo`` (lowered text via ``launch.hlo_stats``) — checked
+by the declarative rule registry in :mod:`.rules` over the full
+(aggregator × layout × mesh) matrix in :mod:`.matrix`.  CLI:
+``python -m repro.launch.lint``.  DESIGN.md §Analysis.
+"""
+from .contract import (COMM_KINDS, KINDS, CollectiveContract, CollectiveOp,
+                       merge)
+from .jaxpr import extract, trace
+from .rules import (LintRule, RuleContext, Violation, get_rule,
+                    register, registered, run_rules)
+from . import hlo, jaxpr, matrix, rules  # noqa: F401
+
+__all__ = [
+    "COMM_KINDS", "KINDS", "CollectiveContract", "CollectiveOp", "merge",
+    "extract", "trace", "LintRule", "RuleContext", "Violation",
+    "get_rule", "register", "registered", "run_rules",
+    "hlo", "jaxpr", "matrix", "rules",
+]

@@ -1,0 +1,138 @@
+"""CollectiveContract — what a compiled step structurally DOES on the
+wire, as data.
+
+A contract is the list of collective operations a traced (jaxpr) or
+lowered (HLO) step executes per call: which collective, over which mesh
+axes, on which shapes/dtypes, how many bytes, how many times (loop trip
+counts folded in), and the manual-vs-auto axis context it runs in.
+Communication becomes a first-class, checkable quantity — the way
+Alistarh et al. (1803.08917) and Yin et al. (1803.01498) account
+per-round bytes analytically instead of treating them as an emergent
+property of the compiler.
+
+Two walkers produce the same shape:
+
+  * :mod:`.jaxpr`  — trace-time, axis names + manual context available;
+    catches violations before XLA ever runs (the readable-error path).
+  * :mod:`.hlo`    — from lowered/compiled HLO text via
+    ``launch.hlo_stats``; axis names are gone (only replica groups),
+    but the contract is exactly what ships to the runtime, so the two
+    must agree (tests/test_analysis.py pins it).
+
+Declarative rules over contracts live in :mod:`.rules`; the
+(aggregator × layout × mesh × scope) sweep in :mod:`.matrix`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Iterable, Optional
+
+# Canonical collective kinds, shared by both walkers.  jaxpr primitive
+# and HLO opcode names both map onto these (see KIND_FROM_PRIM /
+# KIND_FROM_HLO); ``axis_index`` is not communication but is tracked
+# because it has the same manual-axes lowering constraint the PR-5
+# crash class is about.
+KINDS = ("all_gather", "all_reduce", "all_to_all", "reduce_scatter",
+         "ppermute", "axis_index")
+COMM_KINDS = tuple(k for k in KINDS if k != "axis_index")
+
+KIND_FROM_PRIM = {
+    "all_gather": "all_gather",
+    "all_gather_invariant": "all_gather",
+    "psum": "all_reduce",
+    "psum2": "all_reduce",
+    "pmin": "all_reduce",
+    "pmax": "all_reduce",
+    "all_to_all": "all_to_all",
+    "psum_scatter": "reduce_scatter",
+    "reduce_scatter": "reduce_scatter",
+    "ppermute": "ppermute",
+    "pshuffle": "ppermute",
+    "axis_index": "axis_index",
+}
+
+KIND_FROM_HLO = {
+    "all-gather": "all_gather",
+    "all-reduce": "all_reduce",
+    "all-to-all": "all_to_all",
+    "reduce-scatter": "reduce_scatter",
+    "collective-permute": "ppermute",
+}
+
+
+@dataclass(frozen=True)
+class CollectiveOp:
+    """One collective operation of a step.
+
+    ``bytes`` is the PAYLOAD moved by one execution (result bytes;
+    operand bytes for reduce_scatter) — a layout-comparable quantity,
+    deliberately NOT the ring-algorithm wire volume
+    (``launch.hlo_stats`` keeps that for the roofline).  ``count`` is
+    how many times the op executes per step (enclosing scan/while trip
+    counts multiplied through); per-step traffic is ``bytes * count``.
+    """
+    kind: str                     # one of KINDS
+    axes: tuple = ()              # mesh axis names (jaxpr walker only)
+    shape: tuple = ()             # payload shape (jaxpr walker only)
+    dtype: str = ""               # payload dtype / HLO type string
+    bytes: float = 0.0            # payload bytes per execution
+    count: float = 1.0            # executions per step (trip counts)
+    manual_axes: tuple = ()       # manual axes of the enclosing region
+    auto_axes: tuple = ()         # auto axes of the enclosing shard_map
+    in_shard_map: bool = False
+    source: str = ""              # "file:line (fn)" when known
+    ir: str = "jaxpr"             # "jaxpr" | "hlo"
+
+    @property
+    def total_bytes(self) -> float:
+        return self.bytes * self.count
+
+    def describe(self) -> str:
+        loc = f" @ {self.source}" if self.source else ""
+        ax = f" over {'×'.join(self.axes)}" if self.axes else ""
+        sh = (f" {self.dtype}{list(self.shape)}" if self.shape
+              else (f" {self.dtype}" if self.dtype else ""))
+        cnt = f" ×{self.count:g}" if self.count != 1 else ""
+        return (f"{self.kind}{sh}{ax} ({self.bytes:.0f} B{cnt}, "
+                f"manual={','.join(self.manual_axes) or '-'}"
+                + (f", AUTO={','.join(self.auto_axes)}" if self.auto_axes
+                   else "") + f"){loc}")
+
+
+@dataclass(frozen=True)
+class CollectiveContract:
+    """The per-step collective behaviour of one traced/lowered step."""
+    ops: tuple = ()               # tuple[CollectiveOp, ...]
+    meta: dict = field(default_factory=dict)
+    notes: dict = field(default_factory=dict)   # e.g. unknown_trip_whiles
+
+    def with_meta(self, **kw) -> "CollectiveContract":
+        return replace(self, meta={**self.meta, **kw})
+
+    def of_kind(self, *kinds: str) -> tuple:
+        return tuple(op for op in self.ops if op.kind in kinds)
+
+    def count(self, kind: str) -> float:
+        return sum(op.count for op in self.ops if op.kind == kind)
+
+    def total_bytes(self, kind: Optional[str] = None) -> float:
+        """Per-step payload traffic, axis_index excluded."""
+        kinds = (kind,) if kind else COMM_KINDS
+        return sum(op.total_bytes for op in self.ops if op.kind in kinds)
+
+    def summary(self) -> dict:
+        """JSON-able roll-up (the BENCH_contracts.json case body)."""
+        counts = {k: self.count(k) for k in KINDS if self.count(k)}
+        nbytes = {k: round(self.total_bytes(k), 1) for k in COMM_KINDS
+                  if self.count(k)}
+        return {"counts": counts, "bytes": nbytes,
+                "collective_bytes": round(self.total_bytes(), 1)}
+
+
+def merge(contracts: Iterable[CollectiveContract]) -> CollectiveContract:
+    ops, notes = [], {}
+    for c in contracts:
+        ops.extend(c.ops)
+        for k, v in c.notes.items():
+            notes[k] = notes.get(k, 0) + v
+    return CollectiveContract(ops=tuple(ops), notes=notes)

@@ -1,0 +1,56 @@
+"""Lowered-side contract extraction: the same CollectiveContract shape
+as :mod:`.jaxpr`, read from HLO text via ``launch.hlo_stats``.
+
+Works on BOTH HLO flavours the launch layer produces:
+
+  * unoptimized pre-SPMD HLO (``jax.stages.Lowered.compiler_ir('hlo')``
+    — what ``dryrun --lower-only`` persists): only the manual-region
+    collectives exist (GSPMD has not partitioned the auto regions yet),
+    so the contract matches the jaxpr walker's op-for-op — the
+    agreement pin in tests/test_analysis.py.
+  * compiled post-SPMD HLO (``compiled.as_text()`` — what the dryrun
+    sweep saves): additionally contains whatever collectives GSPMD
+    inserted for the auto regions, and XLA's combiner passes may have
+    merged ops — counts can only shrink, per-kind payload bytes are
+    preserved.
+
+Axis names and manual context do not survive lowering, so HLO-side ops
+carry replica-group size in ``axes``-free form and the rules that need
+axis context are jaxpr-only (``LintRule.ir``).
+"""
+from __future__ import annotations
+
+from .contract import KIND_FROM_HLO, CollectiveContract, CollectiveOp
+
+
+def extract(hlo_text: str, meta=None) -> CollectiveContract:
+    """Contract of an HLO module (text form, either flavour)."""
+    from ..launch.hlo_stats import module_stats
+    stats = module_stats(hlo_text)
+    ops = []
+    for rec in stats["collective_ops"]:
+        kind = KIND_FROM_HLO.get(rec["op"])
+        if kind is None:
+            continue
+        ops.append(CollectiveOp(
+            kind=kind, axes=(), shape=(), dtype=rec["type"],
+            bytes=float(rec["bytes"]), count=float(rec["count"]),
+            source=f"group_size={rec['group']}", ir="hlo"))
+    notes = {}
+    if stats.get("unknown_trip_whiles"):
+        notes["unknown_trip_whiles"] = stats["unknown_trip_whiles"]
+    return CollectiveContract(ops=tuple(ops), meta=dict(meta or {}),
+                              notes=notes)
+
+
+def lower_to_hlo_text(lowered) -> str:
+    """Unoptimized HLO text of a ``jax.stages.Lowered`` — the
+    pre-execution path (``dryrun --lower-only``): no compile needed,
+    manual-region collectives already present."""
+    try:
+        return lowered.compiler_ir(dialect="hlo").as_hlo_text()
+    except Exception:
+        # very old/new jax: fall back to whatever text exists (StableHLO
+        # — collective extraction then yields an empty contract, which
+        # callers surface rather than crash on)
+        return lowered.as_text()

@@ -1,0 +1,323 @@
+"""The (aggregator × layout × mesh) lint matrix: trace every registered
+aggregator through every execution path and check the contracts.
+
+Pure tracing — ``jax.make_jaxpr`` on ShapeDtypeStructs, nothing is
+executed or compiled, so the whole matrix is cheap on CPU.  Scope
+follows layout: ``gather``/``a2a`` run the global-scope step,
+``blocked`` the blocked/FSDP step, ``local`` the single-host dense
+executor (no mesh).  The driver CLI is ``python -m repro.launch.lint``
+(which forces the 8 host devices the meshes below need BEFORE jax
+imports); CI runs it per mesh family via ``REPRO_TEST_MESHES``.
+
+:func:`seeded_cases` builds the deliberately-broken toys (double
+gather, bf16 stats psum, partial-manual gather, worker-matrix gather,
+tiny budget) that prove each shipped rule actually fires —
+``lint --selftest`` and tests/test_analysis.py run them.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+from . import jaxpr as ajaxpr
+from .rules import RuleContext, run_rules
+
+# mesh families mirror tests/meshes.py, sized to the 8 host devices the
+# lint CLI forces: flat = worker-only, dm = data×model (tensor-parallel
+# 'model' axis in the global scope, folded into the workers in blocked)
+LINT_MESHES = {
+    "flat": ((8,), ("data",)),
+    "dm": ((4, 2), ("data", "model")),
+}
+N_DEVICES = 8
+LINT_ARCH = "qwen3-0.6b"    # smallest arch; traced in reduced() form
+LAYOUTS = ("local", "gather", "a2a", "blocked")
+LOCAL_D = 4096              # dense-executor G columns
+
+
+def make_lint_mesh(name: str):
+    from ..launch.mesh import make_mesh
+    shape, axes = LINT_MESHES[name]
+    return make_mesh(shape, axes)
+
+
+def mesh_names():
+    """Active mesh families (REPRO_TEST_MESHES comma-list filters,
+    exactly like tests/meshes.py)."""
+    import os
+    want = os.environ.get("REPRO_TEST_MESHES", "")
+    names = [n.strip() for n in want.split(",") if n.strip()] \
+        or list(LINT_MESHES)
+    unknown = [n for n in names if n not in LINT_MESHES]
+    if unknown:
+        raise ValueError(f"REPRO_TEST_MESHES: unknown meshes {unknown}; "
+                         f"known: {sorted(LINT_MESHES)}")
+    return names
+
+
+def case_key(aggregator: str, layout: str, mesh_name: str) -> str:
+    return f"{aggregator}/{layout}/{mesh_name}"
+
+
+def all_cases(meshes=None):
+    """Yield (aggregator, layout, mesh_name) over the full matrix.
+    ``local`` has no mesh (mesh_name "none")."""
+    from ..core import engine
+    meshes = list(meshes if meshes is not None else LINT_MESHES)
+    for agg in engine.registered():
+        yield agg, "local", "none"
+        for mesh_name in meshes:
+            for layout in ("gather", "a2a", "blocked"):
+                yield agg, layout, mesh_name
+
+
+def lint_train_config(aggregator: str, layout: str):
+    from ..configs import ARCHS, ByzantineConfig, TrainConfig
+    scope = "blocked" if layout == "blocked" else "global"
+    return TrainConfig(
+        model=ARCHS[LINT_ARCH].reduced(),
+        byzantine=ByzantineConfig(aggregator=aggregator),
+        optimizer="sgd",
+        agg_scope=scope,
+        agg_layout="a2a" if layout == "blocked" else layout)
+
+
+def _step_structs(tcfg, bundle, mesh):
+    """(params, opt_state, batch, step_idx, key) ShapeDtypeStructs for
+    one make_jaxpr of the train step — shapes only, nothing allocated."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..launch.mesh import n_workers
+    from ..launch.specs import key_struct
+    from ..models import params as PM
+    from ..models import transformer as TF
+
+    cfg = tcfg.model
+    pdtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    p = jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, pdtype),
+                     TF.param_defs(cfg),
+                     is_leaf=lambda x: isinstance(x, PM.ParamDef))
+    if tcfg.optimizer == "sgd":
+        o = ()
+    else:
+        f32 = jnp.float32
+        mk = lambda: jax.tree.map(
+            lambda d: jax.ShapeDtypeStruct(d.shape, f32), TF.param_defs(cfg),
+            is_leaf=lambda x: isinstance(x, PM.ParamDef))
+        o = mk() if tcfg.optimizer == "momentum" else {"m": mk(), "v": mk()}
+    mw = n_workers(mesh, bundle.scope)
+    batch = {"tokens": jax.ShapeDtypeStruct((mw, 1, 16), jnp.int32)}
+    if cfg.n_prefix_tokens:
+        batch["prefix_embed"] = jax.ShapeDtypeStruct(
+            (mw, 1, cfg.n_prefix_tokens, cfg.d_model), jnp.bfloat16)
+    return p, o, batch, jax.ShapeDtypeStruct((), jnp.int32), key_struct()
+
+
+def _blocked_gather_ceiling(cfg, m: int) -> int:
+    """Largest legal all_gather payload (numel) of the blocked step: one
+    m-padded BUCKET leaf — seg_* buckets hand the barrier per-layer
+    slices (the scan consumes the leading stack dim), the top bucket
+    full leaves.  FSDP streaming gathers a full leaf (≤ the padded
+    size); ``engine.unchunk`` re-assembly gathers exactly the padded
+    size.  Anything larger is an m×-sized worker matrix."""
+    import jax
+
+    from ..models import params as PM
+    from ..models import transformer as TF
+    ceiling = m   # selection-token / scalar traffic floor
+    for key, leaves in TF.param_defs(cfg).items():
+        for d in jax.tree.leaves(
+                leaves, is_leaf=lambda x: isinstance(x, PM.ParamDef)):
+            n = 1
+            for s in d.shape:
+                n *= int(s)
+            if key.startswith("seg_"):
+                n //= int(d.shape[0])       # scan slice
+            ceiling = max(ceiling, m * math.ceil(n / m))
+    return ceiling
+
+
+def trace_case(aggregator: str, layout: str, mesh_name: str, mesh=None,
+               budgets=None, budget_factor: float = 2.0):
+    """Trace one matrix case -> (CollectiveContract, RuleContext)."""
+    import jax
+
+    from ..configs import ByzantineConfig
+    from ..core import engine, threat
+
+    spec = engine.get_spec(aggregator)
+    budget = (budgets or {}).get(case_key(aggregator, layout, mesh_name))
+
+    if layout == "local":
+        m = N_DEVICES
+        G = jax.ShapeDtypeStruct((m, LOCAL_D), jax.numpy.float32)
+        cfg = ByzantineConfig(aggregator=aggregator)
+        contract = ajaxpr.trace(
+            partial(engine.aggregate_local, cfg=cfg), G,
+            meta={"ir": "jaxpr"})
+        ctx = RuleContext(case=case_key(aggregator, layout, mesh_name),
+                          aggregator=aggregator, layout=layout,
+                          scope="none", mesh_name="none", m=m, n_leaves=1,
+                          spec=spec, budget=budget,
+                          budget_factor=budget_factor)
+        return contract, ctx
+
+    from ..launch.mesh import n_workers
+    from ..training.step import build_train_step
+
+    if mesh is None:
+        mesh = make_lint_mesh(mesh_name)
+    tcfg = lint_train_config(aggregator, layout)
+    bundle = build_train_step(tcfg, mesh, jit=False)
+    structs = _step_structs(tcfg, bundle, mesh)
+    contract = ajaxpr.extract(jax.make_jaxpr(bundle.step_fn)(*structs),
+                              meta={"ir": "jaxpr"})
+    m = n_workers(mesh, bundle.scope)
+    n_leaves = len(jax.tree.leaves(structs[0]))
+    ceiling = (_blocked_gather_ceiling(tcfg.model, m)
+               if layout == "blocked" else 0)
+    ctx = RuleContext(
+        case=case_key(aggregator, layout, mesh_name),
+        aggregator=aggregator, layout=layout, scope=bundle.scope,
+        mesh_name=mesh_name, m=m, n_leaves=n_leaves,
+        max_gather_numel=ceiling, spec=spec,
+        attack_counts=threat.inject_collectives(tcfg.byzantine, n_leaves, m),
+        budget=budget, budget_factor=budget_factor)
+    return contract, ctx
+
+
+def run_matrix(meshes=None, budgets=None, budget_factor: float = 2.0,
+               progress=None):
+    """Trace + lint the whole matrix.
+
+    Returns ``(records, violations)``: one record per case (case info +
+    ``CollectiveContract.summary()`` — the BENCH_contracts.json body)
+    and the flat list of rule Violations."""
+    meshes = list(meshes if meshes is not None else mesh_names())
+    mesh_cache = {n: make_lint_mesh(n) for n in meshes}
+    records, violations = [], []
+    for agg, layout, mesh_name in all_cases(meshes):
+        contract, ctx = trace_case(agg, layout, mesh_name,
+                                   mesh=mesh_cache.get(mesh_name),
+                                   budgets=budgets,
+                                   budget_factor=budget_factor)
+        vs = run_rules(contract, ctx)
+        violations.extend(vs)
+        records.append({"aggregator": agg, "layout": layout,
+                        "mesh": mesh_name, "scope": ctx.scope,
+                        "m": ctx.m, "n_leaves": ctx.n_leaves,
+                        **contract.summary()})
+        if progress:
+            progress(ctx.case, contract, vs)
+    return records, violations
+
+
+# ---------------------------------------------------------------------------
+# seeded violations — proof each shipped rule fires (lint --selftest)
+# ---------------------------------------------------------------------------
+
+def seeded_cases(meshes=("flat",)):
+    """[(expected_rule_name, contract, ctx)] of deliberately-broken
+    toys, one per shipped rule."""
+    import jax
+    import jax.numpy as jnp
+
+    from ..compat import P, shard_map
+    from ..configs import ByzantineConfig
+    from ..core import engine
+
+    flat = make_lint_mesh("flat")
+    m = N_DEVICES
+    spec = engine.get_spec("brsgd")
+    bcfg = ByzantineConfig(aggregator="brsgd")
+    cases = []
+
+    def toy_ctx(layout, **kw):
+        return RuleContext(case=f"seeded/{layout}", aggregator="brsgd",
+                           layout=layout, scope="global", mesh_name="flat",
+                           m=m, n_leaves=1, spec=spec, **kw)
+
+    # 1. the seed's bug class: gather each leaf for stats, then gather
+    #    it AGAIN for the combine — one-gather-per-leaf must fire
+    @partial(shard_map, mesh=flat, in_specs=(P("data"),), out_specs=P())
+    def double_gather(g):
+        g = g.reshape(g.shape[1:])
+        G = engine.gather_leaf(g, ("data",), m)
+        stats = engine.leaf_stats(G, ("l1", "scores"), m)
+        w, _, denom = engine.resolve_select(spec, stats, bcfg, m)
+        G2 = engine.gather_leaf(g, ("data",), m)        # BUG: re-gather
+        return jnp.tensordot(w, G2.reshape(m, -1), axes=1) / denom
+
+    g = jax.ShapeDtypeStruct((m, 24), jnp.float32)
+    cases.append(("one-gather-per-leaf",
+                  ajaxpr.trace(double_gather, g, meta={"ir": "jaxpr"}),
+                  toy_ctx("gather")))
+
+    # 2. bf16 stats partials psum — psum-stats-dtype must fire
+    @partial(shard_map, mesh=flat, in_specs=(P("data"),), out_specs=P())
+    def bf16_stats(x):
+        part = jnp.sum(x.astype(jnp.bfloat16), axis=0)      # [m] partial
+        return jax.lax.psum(part, ("data",)).astype(jnp.float32)
+
+    x = jax.ShapeDtypeStruct((m, m), jnp.float32)
+    cases.append(("psum-stats-dtype",
+                  ajaxpr.trace(bf16_stats, x, meta={"ir": "jaxpr"}),
+                  toy_ctx("gather")))
+
+    # 3. the PR-5 crash class: a worker all_gather inside a
+    #    PARTIAL-manual region (dm mesh, 'model' left auto) — trace-time
+    #    only; lowering this dies in XLA SPMD with IsManualSubgroup
+    if "dm" in meshes:
+        dm = make_lint_mesh("dm")
+
+        @partial(shard_map, mesh=dm, in_specs=(P("data"),), out_specs=P(),
+                 axis_names=("data",))
+        def partial_manual(g):
+            return jnp.sum(jax.lax.all_gather(g, ("data",)))
+
+        g = jax.ShapeDtypeStruct((4, 8), jnp.float32)
+        cases.append(("no-collective-over-auto-axis",
+                      ajaxpr.trace(partial_manual, g, meta={"ir": "jaxpr"}),
+                      toy_ctx("gather")))
+
+    # 4. a gather-layout fallback inside a blocked step: all_gather of
+    #    [m, *leaf] — no-worker-gather-in-blocked-bwd must fire
+    @partial(shard_map, mesh=flat, in_specs=(P("data"),), out_specs=P())
+    def worker_matrix_gather(g):
+        g = g.reshape(g.shape[1:])
+        G = jax.lax.all_gather(g, ("data",))                # [m, *leaf]
+        return jnp.sum(G.astype(jnp.float32))
+
+    g = jax.ShapeDtypeStruct((m, 6), jnp.float32)
+    ceiling = m * math.ceil(6 / m)
+    cases.append(("no-worker-gather-in-blocked-bwd",
+                  ajaxpr.trace(worker_matrix_gather, g, meta={"ir": "jaxpr"}),
+                  toy_ctx("blocked", max_gather_numel=ceiling)))
+
+    # 5. a 1-byte envelope — bytes-budget must fire on any real traffic
+    cases.append(("bytes-budget", cases[0][1],
+                  toy_ctx("gather", budget={"collective_bytes": 1.0})))
+
+    return cases
+
+
+def run_selftest(meshes=("flat", "dm")) -> list:
+    """Check every seeded toy trips exactly its rule, with the op-level
+    (file/collective) detail attached.  Returns failure strings."""
+    failures = []
+    for rule, contract, ctx in seeded_cases(meshes):
+        vs = run_rules(contract, ctx, rules=[rule])
+        if not vs:
+            failures.append(f"{rule}: seeded violation NOT detected "
+                            f"({ctx.case})")
+            continue
+        if rule != "bytes-budget" and not any(v.op for v in vs):
+            failures.append(f"{rule}: violation carries no collective "
+                            f"detail ({ctx.case})")
+        if rule in ("one-gather-per-leaf",
+                    "no-collective-over-auto-axis") and not any(
+                        v.op and v.op.source for v in vs):
+            failures.append(f"{rule}: violation carries no source "
+                            f"location ({ctx.case})")
+    return failures

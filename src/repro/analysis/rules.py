@@ -1,0 +1,250 @@
+"""Declarative lint rules over CollectiveContracts.
+
+Mirrors the AggregatorSpec / AttackSpec idiom: a :class:`LintRule`
+declares WHAT must hold for a contract, never HOW the contract was
+obtained — the same rule checks a trace-time jaxpr contract and a
+lowered-HLO contract (``ir`` narrows a rule to the IRs that carry the
+facts it reads; axis names and shapes exist only on the jaxpr side).
+
+Adding a rule is one :func:`register` call with a ``check(contract,
+ctx) -> iterable[(message, op | None)]`` function; it is then applied
+by :func:`run_rules`, by the full-matrix driver (``analysis.matrix`` /
+``python -m repro.launch.lint``) and by the CI ``lint-contracts`` job.
+DESIGN.md §Analysis has the add-a-rule recipe.
+
+Shipped rules
+-------------
+no-worker-gather-in-blocked-bwd
+    The blocked/FSDP step never all_gathers an m×-sized worker matrix:
+    every gather payload is at most one m-padded bucket leaf (FSDP
+    param streaming or ``engine.unchunk`` re-assembly).  A gather-layout
+    fallback inside the barrier backward would exceed that immediately.
+one-gather-per-leaf
+    Transient-collective counts match ``engine.expected_collectives``
+    exactly: gather layout gathers each leaf ONCE (zero for the
+    stat-free mean), a2a moves one all_to_all + one unchunk all_gather
+    per leaf, local is collective-free.
+no-collective-over-auto-axis
+    The PR-5 XLA SPMD crash class, caught at trace time: gather-type
+    collectives (and axis_index) must live in FULL-manual regions —
+    a shard_map with leftover auto axes only supports reduce-type
+    collectives — and no op may name an axis outside the region's
+    manual set.
+psum-stats-dtype
+    [m]/[m,m] statistic partials (engine stats, attack knowledge
+    moments ride the same contract) are reduced in float32 — a bf16
+    stats psum silently halves the accumulator mantissa across workers.
+bytes-budget
+    Per-step collective payload bytes stay within ``budget_factor`` (2×
+    either way) of the envelope recorded in BENCH_contracts.json, so
+    communication regressions fail CI instead of shipping silently.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from .contract import CollectiveContract, CollectiveOp
+
+# collectives (+ axis_index) that XLA can only lower inside FULL-manual
+# shard_map regions — partial-manual subgroups support reduce-type
+# collectives only (DESIGN.md §Mesh)
+MANUAL_ONLY_KINDS = ("all_gather", "all_to_all", "ppermute", "axis_index")
+
+
+@dataclass(frozen=True)
+class RuleContext:
+    """Everything a rule may know about the case behind a contract."""
+    case: str = ""                  # display id, e.g. "brsgd/gather/flat"
+    aggregator: str = ""
+    layout: str = "local"           # local | gather | a2a | blocked
+    scope: str = "none"             # none | global | blocked
+    mesh_name: str = "none"         # none | flat | dm
+    m: int = 1                      # worker count of the case
+    n_leaves: int = 0               # gradient leaves the step aggregates
+    max_gather_numel: int = 0       # largest legal gather payload (numel)
+    spec: object = None             # engine.AggregatorSpec | None
+    attack_counts: Optional[dict] = None   # threat.inject_collectives(...)
+    fast_paths: bool = True
+    budget: Optional[dict] = None   # BENCH_contracts.json case entry
+    budget_factor: float = 2.0
+
+
+@dataclass(frozen=True)
+class Violation:
+    rule: str
+    case: str
+    message: str
+    op: Optional[CollectiveOp] = None
+
+    def format(self) -> str:
+        head = f"[{self.rule}] {self.case}: {self.message}"
+        return head + (f"\n    {self.op.describe()}" if self.op else "")
+
+
+@dataclass(frozen=True)
+class LintRule:
+    """One declarative check over a contract."""
+    name: str
+    doc: str
+    check: Callable                 # (contract, ctx) -> [(msg, op|None)]
+    ir: frozenset = frozenset({"jaxpr", "hlo"})
+    applies: Callable = field(default=lambda ctx: True)
+
+
+_REGISTRY: dict[str, LintRule] = {}
+
+
+def register(rule: LintRule) -> LintRule:
+    _REGISTRY[rule.name] = rule
+    return rule
+
+
+def get_rule(name: str) -> LintRule:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown lint rule {name!r}; "
+                       f"registered: {sorted(_REGISTRY)}") from None
+
+
+def registered() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def run_rules(contract: CollectiveContract, ctx: RuleContext,
+              rules=None) -> list:
+    """Apply every applicable rule; returns a list of Violations."""
+    ir = contract.meta.get("ir") or next(
+        (op.ir for op in contract.ops), "jaxpr")
+    out = []
+    for name in (rules if rules is not None else registered()):
+        rule = get_rule(name) if isinstance(name, str) else name
+        if ir not in rule.ir or not rule.applies(ctx):
+            continue
+        for msg, op in rule.check(contract, ctx):
+            out.append(Violation(rule.name, ctx.case, msg, op))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# shipped rules
+# ---------------------------------------------------------------------------
+
+def _numel(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= int(s)
+    return n
+
+
+def _check_blocked_gathers(contract, ctx):
+    # HLO ops carry no shapes: bound their payload in bytes, assuming
+    # the widest wire dtype the barrier moves (f32)
+    max_bytes = ctx.max_gather_numel * 4
+    for op in contract.of_kind("all_gather"):
+        if op.ir == "jaxpr":
+            sz = _numel(op.shape)
+            if sz > ctx.max_gather_numel:
+                yield (f"all_gather payload {sz} elements exceeds one "
+                       f"m-padded bucket leaf ({ctx.max_gather_numel}): "
+                       f"an m×-sized worker-matrix gather (gather-layout "
+                       f"fallback) leaked into the blocked step", op)
+        elif op.bytes > max_bytes:
+            yield (f"all_gather payload {op.bytes:.0f} B exceeds one "
+                   f"m-padded f32 bucket leaf ({max_bytes} B)", op)
+
+
+register(LintRule(
+    "no-worker-gather-in-blocked-bwd",
+    "blocked step gathers at most one m-padded bucket leaf at a time",
+    _check_blocked_gathers,
+    applies=lambda ctx: ctx.layout == "blocked" and ctx.max_gather_numel > 0,
+))
+
+
+def _check_gather_counts(contract, ctx):
+    from ..core.engine import expected_collectives
+    want = expected_collectives(ctx.spec, ctx.layout, ctx.n_leaves,
+                                ctx.fast_paths)
+    for kind, n in want.items():
+        got = contract.count(kind)
+        if got != n:
+            ops = contract.of_kind(kind)
+            yield (f"expected {n} {kind} per step "
+                   f"({ctx.n_leaves} leaves, {ctx.layout} layout), "
+                   f"traced {got:g}", ops[0] if ops else None)
+
+
+register(LintRule(
+    "one-gather-per-leaf",
+    "transient collective counts match engine.expected_collectives",
+    _check_gather_counts,
+    ir=frozenset({"jaxpr"}),
+    applies=lambda ctx: (ctx.layout in ("local", "gather", "a2a")
+                         and ctx.spec is not None),
+))
+
+
+def _check_auto_axis(contract, ctx):
+    for op in contract.ops:
+        if not op.in_shard_map:
+            continue
+        if op.kind in MANUAL_ONLY_KINDS and op.auto_axes:
+            yield (f"{op.kind} inside a PARTIAL-manual region (auto axes "
+                   f"{list(op.auto_axes)}): XLA SPMD only lowers "
+                   f"reduce-type collectives in manual subgroups — run "
+                   f"this region full-manual (DESIGN.md §Mesh)", op)
+        bad = set(op.axes) - set(op.manual_axes)
+        if bad:
+            yield (f"{op.kind} over non-manual axes {sorted(bad)} "
+                   f"(manual set: {list(op.manual_axes)})", op)
+
+
+register(LintRule(
+    "no-collective-over-auto-axis",
+    "gather-type collectives only in full-manual regions, over manual axes",
+    _check_auto_axis,
+    ir=frozenset({"jaxpr"}),
+))
+
+
+def _check_stats_dtype(contract, ctx):
+    stat_shapes = {(ctx.m,), (ctx.m, ctx.m)}
+    for op in contract.of_kind("all_reduce"):
+        if (tuple(op.shape) in stat_shapes and op.dtype.startswith(
+                ("float", "bfloat")) and op.dtype != "float32"):
+            yield (f"[m]-statistic partials reduced in {op.dtype}; "
+                   f"cross-worker stat psums must accumulate in float32",
+                   op)
+
+
+register(LintRule(
+    "psum-stats-dtype",
+    "[m]/[m,m] statistic partials psum in float32",
+    _check_stats_dtype,
+    ir=frozenset({"jaxpr"}),
+    applies=lambda ctx: (ctx.spec is None or bool(ctx.spec.stats)
+                         or bool((ctx.attack_counts or {}).get("all_reduce"))),
+))
+
+
+def _check_bytes_budget(contract, ctx):
+    total = contract.total_bytes()
+    env = float(ctx.budget.get("collective_bytes", 0.0))
+    f = ctx.budget_factor
+    hi, lo = max(total, env), min(total, env)
+    if hi > lo * f and hi > 0:
+        yield (f"per-step collective payload {total:.0f} B drifted "
+               f">{f:g}× from the recorded envelope {env:.0f} B "
+               f"(BENCH_contracts.json) — regenerate with "
+               f"`python -m repro.launch.lint --record` if intended",
+               None)
+
+
+register(LintRule(
+    "bytes-budget",
+    "per-step collective bytes within the recorded envelope",
+    _check_bytes_budget,
+    applies=lambda ctx: ctx.budget is not None,
+))

@@ -225,6 +225,37 @@ def key_carrier(key):
     return jax.lax.bitcast_convert_type(key, jnp.float32)
 
 
+def barrier_bwd_fn(specs, bcfg: ByzantineConfig, axes, name: str = "lint"):
+    """Traceable stand-in for ONE barrier round trip: ``run(p_bucket,
+    key) -> (agg bucket, selection histogram)``.
+
+    The returned callable drives :func:`make_fsdp_agg_barrier` through
+    ``jax.grad``, so tracing it (inside a shard_map over ``axes``)
+    yields a jaxpr containing exactly the barrier's forward gathers AND
+    its backward path (attack injection + bucket aggregation) — what
+    ``analysis.jaxpr.extract`` and the barrier pin test
+    (tests/test_blocked.py) walk for the ``no-worker-gather-in-
+    blocked-bwd`` rule, without hand-rolling a vjp at every call site.
+    ``p_bucket`` leaves are this device's LOCAL shards (matching
+    ``specs``)."""
+    axes = tuple(axes)
+    barrier = make_fsdp_agg_barrier(specs, bcfg, axes, name)
+
+    def run(p, key):
+        m = axis_size(axes)
+        keyf = key_carrier(key)
+
+        def loss(p, tok):
+            out = barrier(p, tok, jnp.float32(0), keyf)
+            return sum(jnp.sum(x.astype(jnp.float32))
+                       for x in jax.tree.leaves(out))
+
+        agg, hist = jax.grad(loss, argnums=(0, 1))(p, selection_token(m))
+        return agg, hist
+
+    return run
+
+
 def make_fsdp_agg_barrier(specs, bcfg: ByzantineConfig, axes, name: str):
     """Returns hook(p_bucket, tok, layer_idx, keyf) -> gathered bucket
     with aggregating VJP.

@@ -316,6 +316,34 @@ def spec_with(name: str, **select_kwargs) -> AggregatorSpec:
     return replace(spec, select=partial(spec.select, **select_kwargs))
 
 
+def expected_collectives(spec: AggregatorSpec, layout: str, n_leaves: int,
+                         fast_paths: bool = True) -> dict:
+    """Expected per-step counts of the TRANSIENT data-moving collectives
+    (all_gather / all_to_all) :func:`aggregate_sharded` emits — the
+    engine's half of the ``one-gather-per-leaf`` lint contract
+    (``analysis/rules.py`` checks traced steps against this, so a
+    double-gather regression in either place fails loudly):
+
+      gather  each leaf is gathered exactly ONCE (phase-1 fused stats,
+              or the column rule's view); the weighted combine is
+              gather-free.  Stat-free selects (mean) gather nothing.
+      a2a     one all_to_all (chunk) + one tiled all_gather (unchunk)
+              per leaf; the mean fast path (pmean) skips both.
+      local   no collectives at all.
+    """
+    if layout == "local":
+        return {"all_gather": 0, "all_to_all": 0}
+    mean_fast = spec.name == "mean" and fast_paths
+    if layout == "a2a":
+        n = 0 if mean_fast else n_leaves
+        return {"all_gather": n, "all_to_all": n}
+    if layout == "gather":
+        needs_view = spec.column is not None or bool(spec.stats)
+        return {"all_gather": n_leaves if needs_view else 0,
+                "all_to_all": 0}
+    raise ValueError(f"unknown layout {layout!r}")
+
+
 # ---------------------------------------------------------------------------
 # local executor — single-host G [m, d]
 # ---------------------------------------------------------------------------

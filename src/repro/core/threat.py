@@ -270,6 +270,21 @@ def is_gradient_attack(cfg: ByzantineConfig) -> bool:
     return get_spec(cfg.attack).scope == "gradient"
 
 
+def inject_collectives(cfg: ByzantineConfig, n_leaves: int,
+                       m: Optional[int] = None) -> dict:
+    """Expected per-call collective counts of :func:`inject` — the
+    threat layer's half of the lint contract (``analysis/rules.py``
+    adds these to the engine's own when a traced step injects an
+    attack).  Knowledge-free attacks are collective-free; omniscient
+    attacks psum one honest moment per declared knowledge entry PER
+    LEAF (``_sharded_knowledge``)."""
+    if not is_gradient_attack(cfg) or (m is not None
+                                       and n_byzantine(cfg, m) == 0):
+        return {"all_reduce": 0, "axis_index": 0}
+    knows = len(get_spec(cfg.attack).knows)
+    return {"all_reduce": knows * n_leaves, "axis_index": 1}
+
+
 # ---------------------------------------------------------------------------
 # knowledge — the omniscient-adversary statistics, computed per scope
 # ---------------------------------------------------------------------------

@@ -125,6 +125,21 @@ def run_case(arch: str, shape_name: str, mesh_kind: str,
         # when time allows; --lower-only exists for giant configs whose
         # CPU compile exceeds CI budgets.
         rec["hlo_lines"] = lowered.as_text().count("\n")
+        if hlo_dir is not None:
+            # persist the UNOPTIMIZED pre-SPMD HLO (".lowered" suffix —
+            # distinct from the compiled "<cid>.txt.gz" the full run
+            # saves, so --rescore keeps its post-SPMD semantics) for
+            # `python -m repro.launch.lint --hlo` / hlo_stats re-analysis
+            # without re-lowering
+            import gzip
+
+            from ..analysis.hlo import lower_to_hlo_text
+            hlo_dir.mkdir(parents=True, exist_ok=True)
+            path = hlo_dir / f"{hlo_name}.lowered.txt.gz"
+            with gzip.open(path, "wt") as f:
+                f.write(lower_to_hlo_text(lowered))
+            rec["hlo_path"] = str(path)
+            rec["hlo_format"] = "hlo-unoptimized"
         rec["ok"] = True
         rec["lower_only"] = True
         return rec
@@ -357,7 +372,7 @@ def main():
     if args.lower_only:
         print(json.dumps({k: rec[k] for k in
                           ("arch", "shape", "mesh", "chips", "lower_s",
-                           "hlo_lines")}, indent=1))
+                           "hlo_lines", "hlo_path") if k in rec}, indent=1))
         return 0
     rl = rec["roofline"]
     print(json.dumps({k: rec[k] for k in

@@ -47,6 +47,9 @@ _OP_RE = re.compile(
     r"([\w\-]+?)(?:-start)?\(")
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
 _COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+# unoptimized (pre-SPMD) HLO — what ``Lowered.compiler_ir('hlo')``
+# emits — writes bare headers with no signature: "shmap_body.38 {"
+_COMP_BARE_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\{\s*$")
 _CALLS_RE = re.compile(r"(?:to_apply|calls|body)=%?([\w.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _BODY_RE = re.compile(r"body=%?([\w.\-]+)")
@@ -115,11 +118,11 @@ def _split_computations(text: str) -> dict:
     cur, name = [], None
     for line in text.splitlines():
         stripped = line.strip()
-        m = (_COMP_RE.match(stripped)
-             if ("{" in line and "->" in line
-                 and not stripped.startswith("HloModule")
-                 and "=" not in stripped.split("(", 1)[0])
-             else None)
+        m = None
+        if ("{" in line and not stripped.startswith("HloModule")
+                and "=" not in stripped.split("(", 1)[0]):
+            m = (_COMP_RE.match(stripped) if "->" in line
+                 else _COMP_BARE_RE.match(stripped))
         if m:
             name = m.group(1)
             cur = [line]
@@ -278,18 +281,25 @@ def _fusion_write_bytes(fused_lines, full_rbytes: float) -> float:
 
 
 class _Stats:
-    __slots__ = ("flops", "bytes", "coll")
+    __slots__ = ("flops", "bytes", "coll", "ops")
 
     def __init__(self):
         self.flops = 0.0
         self.bytes = 0.0
         self.coll = defaultdict(float)
+        # one record per collective INSTRUCTION (repro.analysis reads
+        # these into a CollectiveContract): op name, payload bytes (NOT
+        # ring volume), result type, replica-group size, and the number
+        # of executions per step (while-trip multiplication)
+        self.ops = []
 
     def add(self, other: "_Stats", scale: float = 1.0):
         self.flops += other.flops * scale
         self.bytes += other.bytes * scale
         for k, v in other.coll.items():
             self.coll[k] += v * scale
+        for rec in other.ops:
+            self.ops.append({**rec, "count": rec["count"] * scale})
 
 
 def module_stats(hlo_text: str) -> dict:
@@ -380,12 +390,15 @@ def module_stats(hlo_text: str) -> dict:
             # ---- collectives ----
             if op in _COLLECTIVES:
                 G = _group_size(line)
+                payload = float(rbytes)
+                if op == "reduce-scatter":
+                    operands = [tab.get(o) for o in
+                                _OPERAND_RE.findall(rest)]
+                    obytes = sum(_type_bytes(t) for t in operands if t)
+                    payload = float(obytes or rbytes * G)
                 if G > 1:
                     if op == "reduce-scatter":
-                        operands = [tab.get(o) for o in
-                                    _OPERAND_RE.findall(rest)]
-                        obytes = sum(_type_bytes(t) for t in operands if t)
-                        vol = (obytes or rbytes * G) * (G - 1) / G
+                        vol = payload * (G - 1) / G
                     elif op == "all-gather":
                         vol = rbytes * (G - 1) / G
                     elif op == "all-reduce":
@@ -395,6 +408,9 @@ def module_stats(hlo_text: str) -> dict:
                     else:   # collective-permute
                         vol = float(rbytes)
                     st.coll[op] += vol
+                st.ops.append({"op": op, "bytes": payload,
+                               "type": rtype.strip(), "group": G,
+                               "count": 1.0})
                 st.bytes += rbytes
                 continue
 
@@ -473,7 +489,8 @@ def module_stats(hlo_text: str) -> dict:
     coll = dict(total.coll)
     coll["total"] = sum(total.coll.values())
     return {"flops": total.flops, "bytes": total.bytes,
-            "collectives": coll, **notes}
+            "collectives": coll, "collective_ops": list(total.ops),
+            **notes}
 
 
 def collective_bytes(hlo_text: str) -> dict:

@@ -1,0 +1,190 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Collective-contract lint CLI: trace the (aggregator × layout × mesh)
+matrix, check every contract against the rule registry, and keep the
+BENCH_contracts.json bytes envelope honest.
+
+The XLA_FLAGS line above MUST run before any jax import — the lint
+meshes (analysis.matrix.LINT_MESHES) need 8 host devices and jax locks
+the device count on first init.  Everything is make_jaxpr tracing; no
+compile, no execution, cheap on CPU.
+
+Usage:
+  python -m repro.launch.lint --all               # full matrix, lint only
+  python -m repro.launch.lint --all --record      # + write BENCH_contracts.json
+  python -m repro.launch.lint --case brsgd gather flat
+  python -m repro.launch.lint --selftest          # seeded violations fire?
+  python -m repro.launch.lint --hlo lowered.txt[.gz]   # lint an HLO dump
+
+Mesh families default to both (flat, dm); REPRO_TEST_MESHES or
+--meshes restricts, so CI splits the matrix exactly like the tier-1
+jobs.  Exit code 1 on any violation.
+"""
+import argparse
+import gzip
+import json
+import pathlib
+import subprocess
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[3]
+DEFAULT_CONTRACTS = REPO_ROOT / "BENCH_contracts.json"
+CONTRACTS_SCHEMA = 1
+
+
+def load_budgets(path) -> dict:
+    """BENCH_contracts.json -> {case_key: case record} (empty if the
+    file doesn't exist yet — bytes-budget checks then skip)."""
+    path = pathlib.Path(path)
+    if not path.exists():
+        return {}
+    data = json.loads(path.read_text())
+    from ..analysis.matrix import case_key
+    return {case_key(c["aggregator"], c["layout"], c["mesh"]): c
+            for c in data.get("cases", ())}
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10).stdout.strip() \
+            or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def write_contracts(path, records, meshes) -> None:
+    import datetime
+
+    import jax
+
+    from ..analysis.matrix import LINT_ARCH
+    out = {
+        "schema": CONTRACTS_SCHEMA,
+        "kind": "contracts",
+        "meta": {
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "git_rev": _git_rev(),
+            "date": datetime.date.today().isoformat(),
+            "arch": f"{LINT_ARCH} (reduced)",
+            "meshes": list(meshes),
+            "note": "per-step collective payload bytes per "
+                    "(aggregator x layout x mesh), traced by "
+                    "repro.analysis; regenerate with "
+                    "`python -m repro.launch.lint --all --record`",
+        },
+        "cases": records,
+    }
+    pathlib.Path(path).write_text(json.dumps(out, indent=1) + "\n")
+
+
+def _report(violations) -> None:
+    for v in violations:
+        print(v.format(), file=sys.stderr)
+    print(f"lint: {len(violations)} violation(s)", file=sys.stderr)
+
+
+def lint_hlo_file(path) -> int:
+    """Lint a persisted HLO dump (dryrun --lower-only / sweep output)
+    with the IR-agnostic rules — no case context, so count/axis rules
+    don't apply, but the contract summary is printed for inspection."""
+    from ..analysis import hlo as ahlo
+    from ..analysis.rules import RuleContext, run_rules
+    opener = gzip.open if str(path).endswith(".gz") else open
+    with opener(path, "rt") as f:
+        text = f.read()
+    contract = ahlo.extract(text, meta={"ir": "hlo", "path": str(path)})
+    print(json.dumps(contract.summary(), indent=1))
+    vs = run_rules(contract, RuleContext(case=str(path)))
+    if vs:
+        _report(vs)
+    return 1 if vs else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.lint",
+        description="static collective-contract lint over the "
+                    "(aggregator x layout x mesh) matrix")
+    ap.add_argument("--all", action="store_true",
+                    help="lint the full matrix (default when no mode given)")
+    ap.add_argument("--case", nargs=3,
+                    metavar=("AGG", "LAYOUT", "MESH"),
+                    help="one case, e.g. --case brsgd gather flat "
+                         "(MESH 'none' for the local layout)")
+    ap.add_argument("--meshes",
+                    help="comma list of mesh families (default: "
+                         "REPRO_TEST_MESHES or all)")
+    ap.add_argument("--record", action="store_true",
+                    help="write the traced contracts to --contracts")
+    ap.add_argument("--contracts", default=str(DEFAULT_CONTRACTS),
+                    help="bytes-envelope file (default: repo "
+                         "BENCH_contracts.json)")
+    ap.add_argument("--budget-factor", type=float, default=2.0,
+                    help="allowed drift vs the recorded envelope")
+    ap.add_argument("--selftest", action="store_true",
+                    help="verify every shipped rule fires on its seeded "
+                         "broken toy")
+    ap.add_argument("--hlo", metavar="FILE",
+                    help="lint a persisted HLO text dump instead")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.hlo:
+        return lint_hlo_file(args.hlo)
+
+    from ..analysis import matrix
+
+    if args.selftest:
+        failures = matrix.run_selftest(matrix.mesh_names())
+        for f in failures:
+            print(f"selftest: {f}", file=sys.stderr)
+        print("lint selftest: "
+              + ("FAIL" if failures else "every shipped rule fires OK"))
+        return 1 if failures else 0
+
+    meshes = ([m.strip() for m in args.meshes.split(",") if m.strip()]
+              if args.meshes else matrix.mesh_names())
+
+    if args.case:
+        agg, layout, mesh_name = args.case
+        budgets = load_budgets(args.contracts)
+        contract, ctx = matrix.trace_case(
+            agg, layout, mesh_name if layout != "local" else "none",
+            budgets=budgets, budget_factor=args.budget_factor)
+        print(f"{ctx.case}: {json.dumps(contract.summary())}")
+        from ..analysis.rules import run_rules
+        vs = run_rules(contract, ctx)
+        if vs:
+            _report(vs)
+        return 1 if vs else 0
+
+    # full matrix (--all, and the default mode)
+    budgets = {} if args.record else load_budgets(args.contracts)
+
+    def progress(case, contract, vs):
+        if not args.quiet:
+            s = contract.summary()
+            mark = "FAIL" if vs else "ok"
+            print(f"  {case:<28} {mark:<4} "
+                  f"collective_bytes={s['collective_bytes']:.0f}",
+                  flush=True)
+
+    records, violations = matrix.run_matrix(
+        meshes, budgets=budgets, budget_factor=args.budget_factor,
+        progress=progress)
+    if args.record:
+        write_contracts(args.contracts, records, meshes)
+        print(f"recorded {len(records)} contracts -> {args.contracts}")
+    if violations:
+        _report(violations)
+        return 1
+    print(f"lint: {len(records)} cases clean over meshes {meshes}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -275,10 +275,14 @@ def _build_global_step(tcfg, mesh, opt, layout):
     return step, pspecs, ospecs, bspecs
 
 
-def build_train_step(tcfg: TrainConfig, mesh) -> StepBundle:
+def build_train_step(tcfg: TrainConfig, mesh, jit: bool = True) -> StepBundle:
+    """``jit=False`` returns the raw (unjitted) step callable — the
+    static-analysis driver (``repro.launch.lint``) traces it with
+    ``jax.make_jaxpr`` without a pjit wrapper around the whole step."""
     opt = get_optimizer(tcfg)
     scope, layout = resolve_strategy(tcfg)
     build = _build_blocked_step if scope == "blocked" else _build_global_step
     step, pspecs, ospecs, bspecs = build(tcfg, mesh, opt, layout)
-    return StepBundle(jax.jit(step, donate_argnums=(0, 1)),
-                      pspecs, ospecs, bspecs, scope, layout)
+    if jit:
+        step = jax.jit(step, donate_argnums=(0, 1))
+    return StepBundle(step, pspecs, ospecs, bspecs, scope, layout)

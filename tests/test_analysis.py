@@ -1,0 +1,228 @@
+"""Static-analysis layer: contract extraction, rule firing, jaxpr↔HLO
+agreement, and the BENCH_contracts.json schema guard.
+
+The contract/rule machinery is pure tracing, but collectives only exist
+inside shard_map over a real mesh, so the extraction tests run in
+``run_multidevice`` subprocesses (8 host devices — the lint meshes),
+like every other distributed suite.  The legacy ad-hoc jaxpr-walker
+pins (tests/test_engine.py gather-count, tests/test_blocked.py
+barrier-gather) are migrated ONTO this API — ``repro.analysis.jaxpr``
+is the single jaxpr-walking implementation in the repo.
+"""
+import importlib.util
+import json
+import pathlib
+import textwrap
+
+import pytest
+
+from conftest import run_multidevice
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+# ---------------------------------------------------------------------------
+# contract extraction (known counts / bytes / context)
+# ---------------------------------------------------------------------------
+
+def test_extract_counts_bytes_and_manual_context():
+    """One all_gather + a scanned psum + one all_to_all, hand-built:
+    the walker must report exact counts, payload bytes, the scan trip
+    multiplier, manual-axis context and a file:line source."""
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp
+        from functools import partial
+        from repro.compat import P, shard_map
+        from repro.launch.mesh import make_mesh
+        from repro.analysis import trace
+
+        m = 8
+        mesh = make_mesh((m,), ("data",))
+
+        @partial(shard_map, mesh=mesh, in_specs=(P("data"),), out_specs=P())
+        def f(g):
+            g = g.reshape(g.shape[1:])                  # [24] f32
+            G = jax.lax.all_gather(g, ("data",))        # [8, 24]
+            Gc = jax.lax.all_to_all(g.reshape(m, 3), ("data",),
+                                    split_axis=0, concat_axis=0)
+            def body(c, _):
+                return c + jax.lax.psum(jnp.sum(G), ("data",)), None
+            c, _ = jax.lax.scan(body, jnp.float32(0), None, length=5)
+            return c + jnp.sum(Gc)
+
+        x = jax.ShapeDtypeStruct((m, 24), jnp.float32)
+        c = trace(f, x)
+        assert c.count("all_gather") == 1, c.summary()
+        assert c.count("all_to_all") == 1, c.summary()
+        assert c.count("all_reduce") == 5, c.summary()   # scan ×5
+        assert c.total_bytes("all_gather") == 8 * 24 * 4
+        assert c.total_bytes("all_reduce") == 5 * 4
+        (ag,) = c.of_kind("all_gather")
+        assert ag.axes == ("data",) and ag.manual_axes == ("data",)
+        assert ag.in_shard_map and not ag.auto_axes
+        assert ag.source, "source_info missing"
+        assert ag.dtype == "float32" and ag.shape == (8, 24)
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code, n_devices=8)
+
+
+def test_extract_recurses_custom_vjp_and_pjit():
+    """Collectives inside a custom_vjp backward (the blocked barrier
+    mechanism) and under an inner jit are still found."""
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp
+        from functools import partial
+        from repro.compat import P, shard_map
+        from repro.launch.mesh import make_mesh
+        from repro.analysis import trace
+
+        mesh = make_mesh((8,), ("data",))
+
+        @jax.custom_vjp
+        def bar(x):
+            return x
+        def fwd(x):
+            return x, None
+        def bwd(res, ct):
+            return (jax.lax.psum(ct, ("data",)),)
+        bar.defvjp(fwd, bwd)
+
+        @partial(shard_map, mesh=mesh, in_specs=(P("data"),), out_specs=P())
+        def f(g):
+            g = g.reshape(g.shape[1:])
+            inner = jax.jit(lambda v: jax.lax.all_gather(v, ("data",)))
+            loss = lambda v: jnp.sum(bar(v)) + jnp.sum(inner(v))
+            return jax.grad(loss)(g)[0]
+
+        c = trace(f, jax.ShapeDtypeStruct((8, 6), jnp.float32))
+        assert c.count("all_gather") >= 1, c.summary()
+        assert c.count("all_reduce") >= 1, c.summary()
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code, n_devices=8)
+
+
+# ---------------------------------------------------------------------------
+# every shipped rule fires on its seeded broken toy
+# ---------------------------------------------------------------------------
+
+def test_seeded_violations_fire_with_detail():
+    """matrix.run_selftest: each deliberately-broken toy (double
+    gather, bf16 stats psum, partial-manual gather, worker-matrix
+    gather, 1-byte budget) trips exactly its rule; violations carry
+    rule/file/collective detail."""
+    code = textwrap.dedent("""
+        from repro.analysis import matrix
+        from repro.analysis.rules import run_rules
+
+        failures = matrix.run_selftest(("flat", "dm"))
+        assert not failures, failures
+
+        rule, contract, ctx = matrix.seeded_cases(("flat",))[0]
+        (v, *_) = run_rules(contract, ctx, rules=[rule])
+        txt = v.format()
+        assert "one-gather-per-leaf" in txt
+        assert "all_gather" in txt
+        assert ".py:" in txt, txt          # file:line of the bad gather
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code, n_devices=8)
+
+
+def test_clean_real_case_and_rule_registry():
+    """A real traced case (brsgd/gather/flat) passes every rule; the
+    registry surface mirrors the AggregatorSpec idiom."""
+    code = textwrap.dedent("""
+        from repro.analysis import matrix, rules
+
+        assert set(rules.registered()) >= {
+            "no-worker-gather-in-blocked-bwd", "one-gather-per-leaf",
+            "no-collective-over-auto-axis", "psum-stats-dtype",
+            "bytes-budget"}
+        contract, ctx = matrix.trace_case("brsgd", "gather", "flat")
+        vs = rules.run_rules(contract, ctx)
+        assert not vs, [v.format() for v in vs]
+        assert contract.count("all_gather") == ctx.n_leaves
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code, n_devices=8)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr ↔ HLO contract agreement on one real step
+# ---------------------------------------------------------------------------
+
+def test_jaxpr_hlo_agreement_brsgd_gather_flat():
+    """The trace-time contract and the lowered (unoptimized, pre-SPMD)
+    HLO contract of the SAME (brsgd, gather, flat) train step must
+    agree: identical per-kind collective counts, payload bytes within
+    2%.  Pre-SPMD HLO is the honest comparison point — GSPMD has not
+    yet added auto-region collectives and no combiner pass has merged
+    manual-region ones."""
+    code = textwrap.dedent("""
+        import jax
+        from repro.analysis import hlo as ahlo
+        from repro.analysis import matrix
+        from repro.training.step import build_train_step
+
+        cj, ctx = matrix.trace_case("brsgd", "gather", "flat")
+
+        tcfg = matrix.lint_train_config("brsgd", "gather")
+        mesh = matrix.make_lint_mesh("flat")
+        bundle = build_train_step(tcfg, mesh)
+        structs = matrix._step_structs(tcfg, bundle, mesh)
+        lowered = bundle.step_fn.lower(*structs)
+        ch = ahlo.extract(ahlo.lower_to_hlo_text(lowered))
+
+        for kind in ("all_gather", "all_to_all", "all_reduce"):
+            assert cj.count(kind) == ch.count(kind), (
+                kind, cj.summary(), ch.summary())
+        for kind in ("all_gather", "all_reduce"):
+            j, h = cj.total_bytes(kind), ch.total_bytes(kind)
+            assert abs(j - h) <= 0.02 * max(j, h), (kind, j, h)
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code, n_devices=8)
+
+
+# ---------------------------------------------------------------------------
+# BENCH_contracts.json schema guard (in-process, no devices)
+# ---------------------------------------------------------------------------
+
+def _load_check_bench():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench", REPO / "benchmarks" / "check_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_committed_contracts_file_is_valid():
+    cb = _load_check_bench()
+    errors = cb.check_contracts(str(REPO / "BENCH_contracts.json"))
+    assert not errors, errors
+
+
+def test_contracts_checker_rejects_unknown_names(tmp_path):
+    cb = _load_check_bench()
+    data = json.loads((REPO / "BENCH_contracts.json").read_text())
+    data["cases"][0]["aggregator"] = "definitely-not-registered"
+    data["cases"][1]["layout"] = "teleport"
+    bad = tmp_path / "BENCH_contracts.json"
+    bad.write_text(json.dumps(data))
+    errors = cb.check_contracts(str(bad))
+    assert any("unknown aggregator" in e for e in errors), errors
+    assert any("unknown layout" in e for e in errors), errors
+
+
+def test_contracts_checker_requires_full_coverage(tmp_path):
+    cb = _load_check_bench()
+    data = json.loads((REPO / "BENCH_contracts.json").read_text())
+    data["cases"] = [c for c in data["cases"]
+                     if not (c["aggregator"] == "brsgd"
+                             and c["layout"] == "blocked")]
+    bad = tmp_path / "BENCH_contracts.json"
+    bad.write_text(json.dumps(data))
+    errors = cb.check_contracts(str(bad))
+    assert any("coverage" in e for e in errors), errors

@@ -182,8 +182,10 @@ def test_blocked_backward_never_gathers_worker_matrix(mesh_name):
     path — the only all_gathers it may contain are the re-assembly of
     already-aggregated flat chunks (``engine.unchunk``), whose output is
     one leaf, never m× one leaf.  A gather-layout fallback would emit an
-    all_gather whose output is m·numel(leaf) — we assert no all_gather
-    output exceeds the largest padded leaf, on BOTH mesh shapes."""
+    all_gather whose output is m·numel(leaf) — the
+    ``no-worker-gather-in-blocked-bwd`` rule from ``repro.analysis``
+    (the repo's single jaxpr walker) asserts no all_gather payload
+    exceeds the largest padded leaf, on BOTH mesh shapes."""
     code = _common(mesh_name) + textwrap.dedent("""
         import math
         bcfg = ByzantineConfig(aggregator="brsgd", alpha=0.25)
@@ -204,31 +206,19 @@ def test_blocked_backward_never_gathers_worker_matrix(mesh_name):
             out = bwd_only(p, ct)
             return sum(jnp.sum(x) for x in jax.tree.leaves(out))
 
-        jaxpr = jax.make_jaxpr(traced)(jnp.float32(0))
+        from repro.analysis import extract
+        from repro.analysis.rules import RuleContext, run_rules
 
-        def walk(jx, out):
-            for eqn in jx.eqns:
-                if eqn.primitive.name == "all_gather":
-                    out.append(eqn)
-                for v in eqn.params.values():
-                    if hasattr(v, "jaxpr"):       # ClosedJaxpr
-                        walk(v.jaxpr, out)
-                    elif hasattr(v, "eqns"):      # raw Jaxpr
-                        walk(v, out)
-            return out
-
-        gathers = walk(jaxpr.jaxpr, [])
+        contract = extract(jax.make_jaxpr(traced)(jnp.float32(0)))
+        gathers = contract.of_kind("all_gather")
         assert gathers, "expected unchunk all_gathers in the backward"
         # largest leaf (the FSDP "w") padded to a multiple of m
         leaf_max = max(2 * m * 6, m * math.ceil(7 / m), m)
-        for eqn in gathers:
-            out_sz = int(np.prod(eqn.outvars[0].aval.shape))
-            in_sz = int(np.prod(eqn.invars[0].aval.shape))
-            assert out_sz <= leaf_max, (
-                f"all_gather output {out_sz} exceeds one padded leaf "
-                f"({leaf_max}): an m x-sized worker-matrix gather "
-                f"(gather-layout fallback) leaked into the backward")
-            assert out_sz == in_sz * m, (out_sz, in_sz)
+        ctx = RuleContext(case="barrier-bwd", layout="blocked", m=m,
+                          max_gather_numel=leaf_max)
+        vs = run_rules(contract, ctx,
+                       rules=["no-worker-gather-in-blocked-bwd"])
+        assert not vs, [v.format() for v in vs]
         print("OK", len(gathers))
     """)
     assert "OK" in run_multidevice(code, n_devices=_devices(mesh_name))

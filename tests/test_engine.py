@@ -283,41 +283,48 @@ def test_mean_fast_path_matches_generic_engine():
 
 
 def test_gather_layout_select_rules_gather_each_leaf_at_most_once():
-    """Jaxpr regression for the gather-free weighted combine: in the
+    """Contract regression for the gather-free weighted combine: in the
     gather layout a select-rule aggregator emits exactly ONE all_gather
     per leaf (phase 1, fused stats) and ZERO in phase 2 — the combine
     is a weighted psum of each worker's own gradient, so no gathered
     copy crosses the phase boundary.  The seed kept every gathered leaf
-    live across both phases (m× transient memory for the whole tree)."""
+    live across both phases (m× transient memory for the whole tree).
+    Checked through ``repro.analysis`` (one-gather-per-leaf rule) —
+    the repo's single jaxpr-walking implementation."""
     code = PARITY + textwrap.dedent("""
-        import jax
-        for name in ("brsgd", "krum", "multi_krum", "geomedian"):
-            cfg = ByzantineConfig(aggregator=name, alpha=0.25)
+        from repro.analysis import trace
+        from repro.analysis.rules import RuleContext, run_rules
+        from repro.core.engine import get_spec
+
+        def contract_for(cfg, fast):
             @partial(shard_map, mesh=mesh,
                      in_specs=({k: P(("pod", "data")) for k in gs},),
                      out_specs={k: P() for k in gs})
             def agg(tree):
                 local = {k: v.reshape(v.shape[1:]) for k, v in tree.items()}
                 return engine.aggregate_sharded(local, cfg, axes,
-                                                layout="gather")[0]
-            jx = str(jax.make_jaxpr(agg)(
-                {k: jnp.asarray(v) for k, v in gs.items()}))
-            n_ag = jx.count("all_gather[")
-            assert n_ag == len(gs), (name, n_ag, len(gs))
-            assert "psum" in jx, name
+                                                layout="gather",
+                                                allow_fast_paths=fast)[0]
+            return trace(agg, {k: jnp.asarray(v) for k, v in gs.items()})
+
+        for name in ("brsgd", "krum", "multi_krum", "geomedian"):
+            cfg = ByzantineConfig(aggregator=name, alpha=0.25)
+            c = contract_for(cfg, True)
+            ctx = RuleContext(case=name + "/gather", aggregator=name,
+                              layout="gather", scope="global", m=4,
+                              n_leaves=len(gs), spec=get_spec(name))
+            vs = run_rules(c, ctx, rules=["one-gather-per-leaf"])
+            assert not vs, [v.format() for v in vs]
+            assert c.count("all_gather") == len(gs), (name, c.summary())
+            assert c.count("all_reduce") >= 1, name   # weighted-psum combine
         # the stat-free select (mean, fast paths off) needs NO gather
-        cfg = ByzantineConfig(aggregator="mean")
-        @partial(shard_map, mesh=mesh,
-                 in_specs=({k: P(("pod", "data")) for k in gs},),
-                 out_specs={k: P() for k in gs})
-        def agg_mean(tree):
-            local = {k: v.reshape(v.shape[1:]) for k, v in tree.items()}
-            return engine.aggregate_sharded(local, cfg, axes,
-                                            layout="gather",
-                                            allow_fast_paths=False)[0]
-        jx = str(jax.make_jaxpr(agg_mean)(
-            {k: jnp.asarray(v) for k, v in gs.items()}))
-        assert jx.count("all_gather[") == 0, jx.count("all_gather[")
+        c = contract_for(ByzantineConfig(aggregator="mean"), False)
+        ctx = RuleContext(case="mean/gather", aggregator="mean",
+                          layout="gather", scope="global", m=4,
+                          n_leaves=len(gs), spec=get_spec("mean"),
+                          fast_paths=False)
+        assert not run_rules(c, ctx, rules=["one-gather-per-leaf"])
+        assert c.count("all_gather") == 0, c.summary()
         print("OK")
     """)
     assert "OK" in run_multidevice(code, n_devices=4)
