@@ -5,7 +5,11 @@ We time every registered aggregator over a grid of (m, d) in the
 ``local`` layout, plus every (aggregator × {gather, a2a, blocked}) pair
 under shard_map on an 8-device host mesh (subprocess — the main process
 keeps the real device); ``blocked`` is the FSDP in-backward bucket path
-(core.blocked) timed on one FSDP-sharded bucket.  Raw wall-times are printed as CSV, the
+(core.blocked) timed on one FSDP-sharded bucket.  The ``elastic``
+layout rows time the masked quorum-round path
+(``engine.aggregate_local(..., valid=act)`` at 75% active workers) on
+the same (m, d) grid, so the elastic-vs-bulk overhead of the validity
+masking is a committed, trackable number.  Raw wall-times are printed as CSV, the
 scaling exponents are fitted (brsgd ~ m^a d^b with a ~ 1, b ~ 1; krum
 grows ~ m² at fixed d), and every row is emitted to ``BENCH_agg.json``
 at the repo root — stamped with backend/jax-version/git-rev metadata
@@ -30,7 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ByzantineConfig
-from repro.core import aggregators as A
+from repro.core import aggregators as A, engine
 
 from .common import time_fn
 
@@ -181,22 +185,34 @@ def main():
     baseline = json.load(open(args.compare[0])) if args.compare else None
 
     rng = np.random.default_rng(0)
-    rows, times = [], {}
-    fns = {}
+    rows, times, times_e = [], {}, {}
+    fns, efns = {}, {}
     for name in sorted(A.AGGREGATORS):
         cfg = ByzantineConfig(aggregator=name, alpha=0.25)
         fns[name] = jax.jit(lambda G, c=cfg: A.aggregate(G, c))
+        # elastic rows: the masked quorum-round path at 75% active
+        # (quorum must satisfy the static q > 2*floor(alpha*q) bound)
+        efns[name] = jax.jit(lambda G, act, c=cfg, n=name: engine
+                             .aggregate_local(G, c, valid=act,
+                                              spec=engine.get_spec(n)))
 
     print("aggregator,layout,m,d,us_per_call")
     for m in MS:
         for d in DS:
             G = jnp.asarray(rng.normal(size=(m, d)).astype("f4"))
+            act = jnp.asarray(
+                (np.arange(m) < int(0.75 * m)).astype("f4"))
             for name, fn in fns.items():
                 us = time_fn(fn, G)
                 times[(name, m, d)] = us
                 rows.append({"aggregator": name, "layout": "local",
                              "m": m, "d": d, "us_per_call": us})
                 print(f"{name},local,{m},{d},{us:.1f}", flush=True)
+                ue = time_fn(efns[name], G, act)
+                times_e[(name, m, d)] = ue
+                rows.append({"aggregator": name, "layout": "elastic",
+                             "m": m, "d": d, "us_per_call": ue})
+                print(f"{name},elastic,{m},{d},{ue:.1f}", flush=True)
 
     for r in _distributed_rows():
         rows.append(r)
@@ -215,6 +231,15 @@ def main():
         fits[name] = {"m_exp": float(coef[0]), "d_exp": float(coef[1])}
         print(f"# {name} scaling: time ~ m^{coef[0]:.2f} * d^{coef[1]:.2f}")
 
+    # elastic-vs-bulk overhead: the masked path divided by the bulk
+    # local path, geometric mean over the (m, d) grid per aggregator
+    overhead = {}
+    for name in sorted(A.AGGREGATORS):
+        ratios = [times_e[k] / times[k] for k in times
+                  if k[0] == name and k in times_e]
+        overhead[name] = float(np.exp(np.mean(np.log(ratios))))
+        print(f"# {name} elastic/local overhead: x{overhead[name]:.2f}")
+
     # krum m-scaling at fixed d (expect ~quadratic at large m)
     d = DS[-1]
     r64_16 = times[("krum", 64, d)] / times[("krum", 16, d)]
@@ -225,7 +250,8 @@ def main():
     print(f"# CLAIM brsgd O(md): {'PASS' if ok else 'FAIL'}")
 
     out = {"schema": SCHEMA, "meta": bench_meta(), "rows": rows,
-           "fits": fits, "krum_ratio_16_to_64": float(r64_16),
+           "fits": fits, "elastic_overhead": overhead,
+           "krum_ratio_16_to_64": float(r64_16),
            "brsgd_ratio_16_to_64": float(rb), "claim_pass": bool(ok)}
     with open(args.out, "w") as f:
         json.dump(out, f, indent=1)

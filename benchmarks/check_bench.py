@@ -1,5 +1,5 @@
 """Validate the committed ``BENCH_agg.json`` + ``BENCH_contracts.json``
-schemas and metadata.
++ ``BENCH_robustness.csv`` schemas and metadata.
 
 Import-check tier: no timing, no devices — safe to run in CI on every
 PR (.github/workflows/ci.yml).  Guards the perf-trajectory contract:
@@ -7,12 +7,14 @@ every benchmark file must carry the provenance stamp (backend /
 jax-version / git-rev) that makes cross-PR ``agg_cost.py --compare``
 and ``lint`` bytes-envelope runs meaningful, and every registered
 aggregator must be covered (local timing rows; per-layout contract
-cases) so a registry addition without a regeneration fails loudly.
+cases; per-quorum robustness rows) so a registry addition without a
+regeneration fails loudly.
 
-Usage: ``PYTHONPATH=src python benchmarks/check_bench.py [JSON ...]``
-No arguments validates both committed files.  A contracts file is
-recognized by its ``"kind": "contracts"`` stamp.  Exit code 0 when
-every file is valid, 1 with a message per violation otherwise.
+Usage: ``PYTHONPATH=src python benchmarks/check_bench.py [FILE ...]``
+No arguments validates all committed files.  A ``.csv`` file is
+checked as the robustness matrix; a contracts JSON is recognized by
+its ``"kind": "contracts"`` stamp.  Exit code 0 when every file is
+valid, 1 with a message per violation otherwise.
 """
 from __future__ import annotations
 
@@ -21,7 +23,11 @@ import math
 import os
 import sys
 
-LAYOUTS = {"local", "gather", "a2a", "blocked"}
+# timing-row layouts (BENCH_agg.json): "elastic" is the masked
+# quorum-round aggregate_local — an execution mode of the local layout,
+# so the contract matrix does NOT owe it separate (agg × layout) cases
+LAYOUTS = {"local", "gather", "a2a", "blocked", "elastic"}
+CONTRACT_LAYOUTS = {"local", "gather", "a2a", "blocked"}
 CONTRACT_MESHES = {"flat", "dm", "none"}
 META_KEYS = ("backend", "jax_version", "git_rev", "date")
 ROW_KEYS = ("aggregator", "layout", "m", "d", "us_per_call")
@@ -74,12 +80,14 @@ def check(path: str) -> list:
     except ImportError:
         engine = None
     if engine is not None:
-        local = {r["aggregator"] for r in rows
-                 if isinstance(r, dict) and r.get("layout") == "local"}
-        missing = set(engine.registered()) - local
-        if missing:
-            errors.append(f"registered aggregators without local rows: "
-                          f"{sorted(missing)} — re-run benchmarks/agg_cost.py")
+        for layout in ("local", "elastic"):
+            have = {r["aggregator"] for r in rows
+                    if isinstance(r, dict) and r.get("layout") == layout}
+            missing = set(engine.registered()) - have
+            if missing:
+                errors.append(
+                    f"registered aggregators without {layout} rows: "
+                    f"{sorted(missing)} — re-run benchmarks/agg_cost.py")
     return errors
 
 
@@ -132,7 +140,7 @@ def check_contracts(path: str) -> list:
         if known is not None and c["aggregator"] not in known:
             errors.append(f"{ctx}: unknown aggregator — registry has "
                           f"{sorted(known)}")
-        if c["layout"] not in LAYOUTS:
+        if c["layout"] not in CONTRACT_LAYOUTS:
             errors.append(f"{ctx}: unknown layout {c['layout']!r}")
         if c["mesh"] not in CONTRACT_MESHES:
             errors.append(f"{ctx}: unknown mesh {c['mesh']!r}")
@@ -149,7 +157,7 @@ def check_contracts(path: str) -> list:
                           f"non-negative")
         seen.add((c["aggregator"], c["layout"]))
     if known is not None:
-        missing = {(a, l) for a in known for l in LAYOUTS} - seen
+        missing = {(a, l) for a in known for l in CONTRACT_LAYOUTS} - seen
         if missing:
             errors.append(
                 f"missing (aggregator × layout) contract coverage: "
@@ -158,8 +166,77 @@ def check_contracts(path: str) -> list:
     return errors
 
 
+def check_robustness(path: str) -> list:
+    """Validate a BENCH_robustness.csv (written by
+    ``benchmarks/robustness.py``): quorum column first, every
+    registered aggregator covered at every quorum, the fixed-m quorum
+    plus at least one elastic (q < m) quorum present, finite-or-``inf``
+    error cells, and the recorded claim line saying PASS."""
+    errors = []
+    try:
+        with open(path) as f:
+            raw = f.read().splitlines()
+    except OSError as e:
+        return [f"{path}: unreadable ({e})"]
+    comments = [l for l in raw if l.startswith("#")]
+    body = [l for l in raw if l.strip() and not l.startswith("#")]
+    if not body or not body[0].startswith("quorum,aggregator,"):
+        return errors + ["header must be 'quorum,aggregator,<attacks>' "
+                         "— re-run benchmarks/robustness.py"]
+    attacks = body[0].split(",")[2:]
+    if not attacks:
+        errors.append("no attack columns in the header")
+    per_quorum: dict = {}
+    for i, line in enumerate(body[1:]):
+        ctx = f"row {i + 1} ({line.split(',')[0:2]})"
+        cells = line.split(",")
+        if len(cells) != 2 + len(attacks):
+            errors.append(f"{ctx}: expected {2 + len(attacks)} cells, "
+                          f"got {len(cells)}")
+            continue
+        try:
+            q = int(cells[0])
+        except ValueError:
+            errors.append(f"{ctx}: quorum must be an int, got {cells[0]!r}")
+            continue
+        if q <= 0:
+            errors.append(f"{ctx}: quorum must be positive")
+        per_quorum.setdefault(q, set()).add(cells[1])
+        for a, v in zip(attacks, cells[2:]):
+            try:
+                x = float(v)
+            except ValueError:
+                errors.append(f"{ctx}: {a} cell {v!r} is not a float")
+                continue
+            if math.isnan(x) or x < 0:
+                errors.append(f"{ctx}: {a} error must be >= 0 and not NaN")
+    if not per_quorum:
+        return errors + ["no data rows"]
+    qmax = max(per_quorum)
+    if not any(q < qmax for q in per_quorum):
+        errors.append(f"only the fixed-m quorum {qmax} is present — the "
+                      f"matrix must include at least one elastic q < m "
+                      f"sweep (re-run benchmarks/robustness.py)")
+    known = _registered_aggregators()
+    if known is not None:
+        for q, aggs in sorted(per_quorum.items()):
+            missing = known - aggs
+            if missing:
+                errors.append(f"quorum {q}: registered aggregators "
+                              f"without rows: {sorted(missing)}")
+    claim = [l for l in comments if "CLAIM" in l]
+    if not claim:
+        errors.append("missing '# CLAIM ...' line")
+    elif "PASS" not in claim[-1]:
+        errors.append(f"recorded claim is not PASS: {claim[-1]!r}")
+    return errors
+
+
 def _check_any(path: str) -> list:
-    """Dispatch on the file's ``kind`` stamp."""
+    """Dispatch: ``.csv`` is the robustness matrix; JSON files on the
+    ``kind`` stamp."""
+    if path.endswith(".csv"):
+        return check_robustness(path)
     try:
         with open(path) as f:
             kind = json.load(f).get("kind")
@@ -171,7 +248,8 @@ def _check_any(path: str) -> list:
 def main(argv) -> int:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     paths = argv[1:] or [os.path.join(root, "BENCH_agg.json"),
-                         os.path.join(root, "BENCH_contracts.json")]
+                         os.path.join(root, "BENCH_contracts.json"),
+                         os.path.join(root, "BENCH_robustness.csv")]
     errors = []
     for path in paths:
         errs = _check_any(path)

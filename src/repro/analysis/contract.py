@@ -82,6 +82,8 @@ class CollectiveOp:
     in_shard_map: bool = False
     source: str = ""              # "file:line (fn)" when known
     ir: str = "jaxpr"             # "jaxpr" | "hlo"
+    group: int = -1               # eqn id: operands of ONE collective eqn
+                                  # share a group (jaxpr walker; -1 = n/a)
 
     @property
     def total_bytes(self) -> float:

@@ -77,6 +77,7 @@ class _Walk:
     def __init__(self):
         self.ops = []
         self.notes = {}
+        self.n_eqns = 0     # global collective-eqn counter -> op.group
 
     def walk(self, jaxpr, mult=1.0, manual=(), auto=(), in_sm=False):
         for eqn in jaxpr.eqns:
@@ -96,7 +97,11 @@ class _Walk:
                 axes = _axis_names(eqn.params)
                 # one record per payload operand: a psum of a stats dict
                 # binds several arrays in one eqn, and rules reason
-                # per-array (shape/dtype)
+                # per-array (shape/dtype).  ``group`` ties the operands
+                # of ONE eqn back together — the masked-psum-validity
+                # rule reasons about a whole stats psum at once.
+                gid = self.n_eqns
+                self.n_eqns += 1
                 outs = eqn.outvars if kind != "reduce_scatter" \
                     else eqn.invars
                 for v in (outs or eqn.outvars):
@@ -105,7 +110,7 @@ class _Walk:
                         kind=kind, axes=axes, shape=shape, dtype=dt,
                         bytes=nbytes, count=mult, manual_axes=manual,
                         auto_axes=auto, in_shard_map=in_sm,
-                        source=_source(eqn), ir="jaxpr"))
+                        source=_source(eqn), ir="jaxpr", group=gid))
                 continue
 
             sub_mult = mult

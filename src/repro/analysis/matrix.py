@@ -11,8 +11,9 @@ imports); CI runs it per mesh family via ``REPRO_TEST_MESHES``.
 
 :func:`seeded_cases` builds the deliberately-broken toys (double
 gather, bf16 stats psum, partial-manual gather, worker-matrix gather,
-tiny budget) that prove each shipped rule actually fires —
-``lint --selftest`` and tests/test_analysis.py run them.
+tiny budget, unmasked elastic stats psum) that prove each shipped rule
+actually fires — ``lint --selftest`` and tests/test_analysis.py run
+them.
 """
 from __future__ import annotations
 
@@ -177,13 +178,16 @@ def trace_case(aggregator: str, layout: str, mesh_name: str, mesh=None,
     n_leaves = len(jax.tree.leaves(structs[0]))
     ceiling = (_blocked_gather_ceiling(tcfg.model, m)
                if layout == "blocked" else 0)
+    from ..launch.mesh import worker_axes as mesh_worker_axes
     ctx = RuleContext(
         case=case_key(aggregator, layout, mesh_name),
         aggregator=aggregator, layout=layout, scope=bundle.scope,
         mesh_name=mesh_name, m=m, n_leaves=n_leaves,
         max_gather_numel=ceiling, spec=spec,
         attack_counts=threat.inject_collectives(tcfg.byzantine, n_leaves, m),
-        budget=budget, budget_factor=budget_factor)
+        budget=budget, budget_factor=budget_factor,
+        elastic=tcfg.byzantine.elastic,
+        worker_axes=tuple(mesh_worker_axes(mesh, bundle.scope)))
     return contract, ctx
 
 
@@ -298,6 +302,28 @@ def seeded_cases(meshes=("flat",)):
     # 5. a 1-byte envelope — bytes-budget must fire on any real traffic
     cases.append(("bytes-budget", cases[0][1],
                   toy_ctx("gather", budget={"collective_bytes": 1.0})))
+
+    # 6. an elastic round whose worker stats psum drops the validity
+    #    slot: masked partials close over the workers WITHOUT
+    #    stats["valid"] riding the eqn — masked-psum-validity must fire
+    @partial(shard_map, mesh=flat, in_specs=(P("data"), P()), out_specs=P())
+    def unmasked_elastic_psum(g, vf):
+        g = g.reshape(g.shape[1:])
+        Gv, _ = engine.a2a_chunk(g, ("data",), m)
+        stats = engine.leaf_stats(Gv, ("scores", "l1"), m,
+                                  use_pallas=False, valid=vf)
+        stats = jax.lax.psum(stats, ("data",))      # BUG: no "valid" slot
+        w, _, denom = engine.resolve_select(
+            spec, {**stats, "valid": vf}, bcfg, m)
+        wi = w[jax.lax.axis_index(("data",))]
+        return jax.lax.psum(wi * jnp.sum(Gv), ("data",)) / denom
+
+    g6 = jax.ShapeDtypeStruct((m, 24), jnp.float32)
+    vf6 = jax.ShapeDtypeStruct((m,), jnp.float32)
+    cases.append(("masked-psum-validity",
+                  ajaxpr.trace(unmasked_elastic_psum, g6, vf6,
+                               meta={"ir": "jaxpr"}),
+                  toy_ctx("a2a", elastic=True, worker_axes=("data",))))
 
     return cases
 

@@ -38,6 +38,11 @@ bytes-budget
     Per-step collective payload bytes stay within ``budget_factor`` (2×
     either way) of the envelope recorded in BENCH_contracts.json, so
     communication regressions fail CI instead of shipping silently.
+masked-psum-validity
+    Elastic rounds only (DESIGN.md §Elastic): every worker-axis stats
+    psum must carry the [m] validity-mask slot the engine rides on the
+    same eqn (``stats["valid"]``) — a stats psum without it means some
+    path folded dropped workers' garbage into the selection.
 """
 from __future__ import annotations
 
@@ -68,6 +73,8 @@ class RuleContext:
     fast_paths: bool = True
     budget: Optional[dict] = None   # BENCH_contracts.json case entry
     budget_factor: float = 2.0
+    elastic: bool = False           # elastic quorum round (§Elastic)
+    worker_axes: tuple = ()         # mesh axes indexing the workers
 
 
 @dataclass(frozen=True)
@@ -247,4 +254,40 @@ register(LintRule(
     "per-step collective bytes within the recorded envelope",
     _check_bytes_budget,
     applies=lambda ctx: ctx.budget is not None,
+))
+
+
+def _check_masked_psum(contract, ctx):
+    stat_shapes = {(ctx.m,), (ctx.m, ctx.m)}
+    groups: dict = {}
+    for op in contract.of_kind("all_reduce"):
+        if op.group < 0 or not (set(op.axes) & set(ctx.worker_axes)):
+            continue
+        groups.setdefault(op.group, []).append(op)
+    n_stats = len(ctx.spec.stats) if ctx.spec is not None else 0
+    for gid in sorted(groups):
+        ops = groups[gid]
+        if not all(tuple(op.shape) in stat_shapes for op in ops):
+            continue        # leaf/combine traffic, not a stats psum
+        # a stats psum binds ≥2 stat-shaped arrays in one eqn (stats +
+        # validity slot); a lone [m,m] Gram psum is also a stats psum
+        # (krum-family single-stat specs)
+        is_stats = (len(ops) >= 2
+                    or all(tuple(op.shape) == (ctx.m, ctx.m) for op in ops))
+        if not is_stats:
+            continue
+        if len(ops) <= n_stats:
+            yield (f"worker-axis stats psum binds {len(ops)} operand(s) "
+                   f"for a {n_stats}-statistic spec: the [m] validity "
+                   f"mask (stats['valid']) must ride the same psum in an "
+                   f"elastic round, or dropped workers' partials poison "
+                   f"the selection (DESIGN.md §Elastic)", ops[0])
+
+
+register(LintRule(
+    "masked-psum-validity",
+    "elastic-round worker stats psums carry the [m] validity-mask slot",
+    _check_masked_psum,
+    ir=frozenset({"jaxpr"}),
+    applies=lambda ctx: ctx.elastic and bool(ctx.worker_axes),
 ))

@@ -209,6 +209,45 @@ class ByzantineConfig:
     negation_factor: float = 1e10  # negation: c in -c * Σ honest
     alie_z: float = 1.5           # alie: z std-devs from honest mean
     ipm_eps: float = 0.5          # ipm: ε in -ε * mean(honest)
+    # ------------------------------------------------------------------
+    # elastic worker set (quorum aggregation).  0/0 = the classic fixed-m
+    # bulk-synchronous round over every worker.  max_m is the padded
+    # worker-slot count (the mesh's worker extent in distributed scopes);
+    # quorum is the arrival count selection fires at — workers that
+    # haven't reported by then are dropped from the round via the
+    # validity mask, with truthful n_selected accounting.
+    max_m: int = 0
+    quorum: int = 0
+
+    def __post_init__(self):
+        if self.max_m < 0 or self.quorum < 0:
+            raise ValueError(
+                f"max_m/quorum must be >= 0, got max_m={self.max_m} "
+                f"quorum={self.quorum}")
+        if self.max_m and self.quorum > self.max_m:
+            raise ValueError(
+                f"quorum={self.quorum} exceeds max_m={self.max_m} worker "
+                f"slots")
+        if self.quorum:
+            # the adversary controls floor(alpha * n_active) of whichever
+            # workers make the round, so the smallest round the config
+            # permits must still hold an honest majority
+            n_byz = int(self.alpha * self.quorum)
+            if self.quorum <= 2 * n_byz:
+                raise ValueError(
+                    f"quorum={self.quorum} violates the honest-majority "
+                    f"bound quorum > 2*n_byzantine: with alpha="
+                    f"{self.alpha}, a {self.quorum}-worker round has "
+                    f"n_byzantine = floor(alpha*quorum) = {n_byz} and "
+                    f"2*{n_byz} >= {self.quorum} — robust selection over "
+                    f"a possibly-byzantine-majority quorum is unsound; "
+                    f"raise quorum or lower alpha")
+
+    @property
+    def elastic(self) -> bool:
+        """True when this config opts into the elastic worker set
+        (pad-to-max-m + validity mask + quorum select)."""
+        return bool(self.max_m or self.quorum)
 
 
 @dataclass(frozen=True)

@@ -116,7 +116,8 @@ def _shard_view(g, spec: P, k: int, m: int, axes):
     return Gw.astype(jnp.float32)
 
 
-def _bucket_aggregate(g_full, specs, bcfg: ByzantineConfig, axes):
+def _bucket_aggregate(g_full, specs, bcfg: ByzantineConfig, axes,
+                      valid=None):
     """Aggregate one bucket of per-worker gradients via the engine
     registry — any registered rule, not just brsgd/mean.
 
@@ -125,12 +126,24 @@ def _bucket_aggregate(g_full, specs, bcfg: ByzantineConfig, axes):
     FSDP dim come back as the local shard, the rest replicated; the
     state carries the bucket-local selection so the training loop's
     n_selected metric is truthful.
+
+    ``valid`` ([m] 0/1, replicated) runs the bucket elastically:
+    dropped workers' gradients are zeroed on entry (exact zeros),
+    statistics and the selection cover the active set, and the validity
+    mask rides the bucket's stats psum as a one-hot slot — the
+    ``masked-psum-validity`` lint contract (DESIGN.md §Elastic).
     """
     m = axis_size(axes)
     spec = engine.get_spec(bcfg.aggregator)
     leaves, tdef = jax.tree.flatten(g_full)
     spec_leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
     assert len(leaves) == len(spec_leaves)
+    elastic = valid is not None
+    if elastic:
+        vf = jnp.asarray(valid).astype(jnp.float32)
+        act_i = vf[jax.lax.axis_index(axes)]
+        leaves = [jnp.where(act_i > 0, g, jnp.zeros_like(g))
+                  for g in leaves]
 
     # -- phase 0: per-leaf worker views, all on the 1×-memory a2a path.
     # ("shard", Gw, k): FSDP leaf transposed in place, worker axis k.
@@ -148,6 +161,7 @@ def _bucket_aggregate(g_full, specs, bcfg: ByzantineConfig, axes):
 
     # -- per-dimension rules: no stats / replicated phase at all --------
     if spec.column is not None:
+        colkw = {"valid": vf, "use_pallas": False} if elastic else {}
         out = []
         for (kind, Gv, k), g in zip(views, leaves):
             if kind == "shard":
@@ -158,22 +172,36 @@ def _bucket_aggregate(g_full, specs, bcfg: ByzantineConfig, axes):
                 # the Pallas kernels are 2-D only, so N-D views pin
                 # use_pallas=False (plain XLA, still compiled).
                 Gm = jnp.moveaxis(Gv, k, 0)
-                kw = {"use_pallas": False} if Gm.ndim > 2 else {}
+                kw = dict(colkw) if elastic else (
+                    {"use_pallas": False} if Gm.ndim > 2 else {})
                 out.append(spec.column(Gm, bcfg, m, **kw).astype(g.dtype))
             else:
-                out.append(engine.unchunk(spec.column(Gv, bcfg, m), g, axes))
-        st = engine.SelectionState(jnp.ones((m,), bool),
-                                   jnp.ones((m,), jnp.float32))
+                out.append(engine.unchunk(spec.column(Gv, bcfg, m, **colkw),
+                                          g, axes))
+        st = engine.SelectionState(
+            (vf > 0) if elastic else jnp.ones((m,), bool),
+            vf if elastic else jnp.ones((m,), jnp.float32))
         return jax.tree.unflatten(tdef, out), st
 
     # -- phase 1: per-leaf stats partials, one psum ---------------------
     stats = engine.zero_stats(spec.stats, m)
     if stats:
         for kind, Gv, k in views:
-            part = engine.leaf_stats(Gv, spec.stats, m, axis=k)
+            part = engine.leaf_stats(Gv, spec.stats, m, axis=k,
+                                     valid=vf if elastic else None)
             stats = {s: stats[s] + part[s] for s in stats}
+        if elastic:
+            # the validity mask rides the bucket's stats psum (one-hot
+            # slot per active worker) — the masked-psum-validity lint
+            # rule's required operand
+            stats["valid"] = jax.nn.one_hot(
+                jax.lax.axis_index(axes), m, dtype=jnp.float32) * act_i
         stats = jax.lax.psum(stats, axes)
-        stats = engine.pad_correction(stats, total_pad)
+        stats = engine.pad_correction(stats, total_pad,
+                                      valid=vf if elastic else None)
+    if elastic:
+        stats = dict(stats)
+        stats.setdefault("valid", vf)
 
     # -- phase 2: replicated selection + weighted combine ---------------
     w, st, denom = engine.resolve_select(spec, stats, bcfg, m)
@@ -225,9 +253,10 @@ def key_carrier(key):
     return jax.lax.bitcast_convert_type(key, jnp.float32)
 
 
-def barrier_bwd_fn(specs, bcfg: ByzantineConfig, axes, name: str = "lint"):
+def barrier_bwd_fn(specs, bcfg: ByzantineConfig, axes, name: str = "lint",
+                   elastic: bool = False):
     """Traceable stand-in for ONE barrier round trip: ``run(p_bucket,
-    key) -> (agg bucket, selection histogram)``.
+    key, active=None) -> (agg bucket, selection histogram)``.
 
     The returned callable drives :func:`make_fsdp_agg_barrier` through
     ``jax.grad``, so tracing it (inside a shard_map over ``axes``)
@@ -237,16 +266,23 @@ def barrier_bwd_fn(specs, bcfg: ByzantineConfig, axes, name: str = "lint"):
     (tests/test_blocked.py) walk for the ``no-worker-gather-in-
     blocked-bwd`` rule, without hand-rolling a vjp at every call site.
     ``p_bucket`` leaves are this device's LOCAL shards (matching
-    ``specs``)."""
+    ``specs``).  ``elastic`` builds the 5-primal elastic barrier;
+    ``active`` then defaults to the all-ones mask."""
     axes = tuple(axes)
-    barrier = make_fsdp_agg_barrier(specs, bcfg, axes, name)
+    barrier = make_fsdp_agg_barrier(specs, bcfg, axes, name,
+                                    elastic=elastic)
 
-    def run(p, key):
+    def run(p, key, active=None):
         m = axis_size(axes)
         keyf = key_carrier(key)
 
         def loss(p, tok):
-            out = barrier(p, tok, jnp.float32(0), keyf)
+            if elastic:
+                act = (jnp.ones((m,), jnp.float32) if active is None
+                       else jnp.asarray(active, jnp.float32))
+                out = barrier(p, tok, jnp.float32(0), keyf, act)
+            else:
+                out = barrier(p, tok, jnp.float32(0), keyf)
             return sum(jnp.sum(x.astype(jnp.float32))
                        for x in jax.tree.leaves(out))
 
@@ -256,7 +292,8 @@ def barrier_bwd_fn(specs, bcfg: ByzantineConfig, axes, name: str = "lint"):
     return run
 
 
-def make_fsdp_agg_barrier(specs, bcfg: ByzantineConfig, axes, name: str):
+def make_fsdp_agg_barrier(specs, bcfg: ByzantineConfig, axes, name: str,
+                          elastic: bool = False):
     """Returns hook(p_bucket, tok, layer_idx, keyf) -> gathered bucket
     with aggregating VJP.
 
@@ -273,8 +310,44 @@ def make_fsdp_agg_barrier(specs, bcfg: ByzantineConfig, axes, name: str):
     :func:`key_carrier`; the bucket/layer folds perturb only the noise,
     while byzantine MEMBERSHIP is drawn from the unfolded step key so
     every bucket corrupts one consistent worker set
-    (``threat.membership_mask``)."""
+    (``threat.membership_mask``).
+
+    ``elastic`` adds a fifth primal ``activef`` ([m] f32 validity mask,
+    replicated; cotangent plain zeros like ``keyf``): the bucket's
+    injection and aggregation then run over the active set only.  The
+    mask is a TRACED value, so one compiled step serves every active
+    set up to m — the flag is static (two barrier variants) but the
+    mask is not."""
     axes = tuple(axes)
+
+    if elastic:
+        @jax.custom_vjp
+        def barrier(p, tok, idx, keyf, activef):
+            del tok, idx, keyf, activef
+            return jax.tree.map(
+                lambda x, s: _gather_leaf(x, _fsdp_dim(s, axes), axes),
+                p, specs)
+
+        def fwd(p, tok, idx, keyf, activef):
+            return barrier(p, tok, idx, keyf, activef), (idx, keyf, activef)
+
+        def bwd(res, g_full):
+            idx, keyf, activef = res
+            key = jax.lax.bitcast_convert_type(keyf, jnp.uint32)
+            key_l = jax.random.fold_in(bucket_key(key, name),
+                                       idx.astype(jnp.int32))
+            g_full = threat.inject(g_full, key_l, bcfg, axes,
+                                   membership_key=key, active=activef)
+            agg, st = _bucket_aggregate(g_full, specs, bcfg, axes,
+                                        valid=activef)
+            m = axis_size(axes)
+            n_sel = jnp.sum(st.selected.astype(jnp.int32))
+            hist = jax.nn.one_hot(n_sel, m + 1, dtype=jnp.float32)
+            return (agg, hist, jnp.zeros((), jnp.float32),
+                    jnp.zeros_like(keyf), jnp.zeros_like(activef))
+
+        barrier.defvjp(fwd, bwd)
+        return barrier
 
     @jax.custom_vjp
     def barrier(p, tok, idx, keyf):

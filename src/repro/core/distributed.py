@@ -53,7 +53,7 @@ def worker_index(axes):
 
 def robust_aggregate(grads, cfg: ByzantineConfig, axes=("data",),
                      layout: str = "gather", flatten_columns: bool = False,
-                     model_axes=(), leaf_specs=None):
+                     model_axes=(), leaf_specs=None, valid=None):
     """Aggregate a gradient pytree across the worker axes.
 
     Returns the aggregated pytree (identical on every worker, model
@@ -65,9 +65,11 @@ def robust_aggregate(grads, cfg: ByzantineConfig, axes=("data",),
     non-robust baseline fast path).  Must run inside a FULL-manual
     shard_map; on meshes with tensor-parallel axes pass them as
     ``model_axes`` plus each leaf's PartitionSpec as ``leaf_specs`` (see
-    ``engine.aggregate_sharded``).
+    ``engine.aggregate_sharded``).  ``valid`` ([m] 0/1, replicated)
+    opts into the elastic quorum path (DESIGN.md §Elastic): inactive
+    workers contribute exact zeros and never enter selection.
     """
     return engine.aggregate_sharded(grads, cfg, axes=axes, layout=layout,
                                     flatten_columns=flatten_columns,
                                     model_axes=model_axes,
-                                    leaf_specs=leaf_specs)
+                                    leaf_specs=leaf_specs, valid=valid)

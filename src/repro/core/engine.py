@@ -128,7 +128,8 @@ def brsgd_select(scores, l1, beta: float, threshold: float) -> BrSGDState:
 # ---------------------------------------------------------------------------
 
 def leaf_stats(G, needs, m: int, axis: int = 0,
-               use_pallas: bool | None = None) -> dict:
+               use_pallas: bool | None = None, valid=None, rows=None,
+               refs=None) -> dict:
     """Partial statistics of one worker view of G (f32), whose ``axis``
     indexes the m workers (worker-major [m, cols] by default).
 
@@ -143,10 +144,18 @@ def leaf_stats(G, needs, m: int, axis: int = 0,
     bitonic sorted-rows pass on the reference path (the seed's version
     re-derived the coordinate-wise median per statistic through XLA's
     scalarized CPU sort).  DESIGN.md §Perf has the contract.
+
+    ``valid`` ([m] 0/1) switches to the elastic masked pass: statistics
+    of the active workers only, dropped slots as exact zeros (DESIGN.md
+    §Elastic).  ``rows``/``refs`` scope the output to one arrival
+    bucket against shared active-set invariants — the streaming-
+    accumulator hooks (:func:`stream_leaf_stats`).
     """
     if not needs:
         return {}
     kw = {} if use_pallas is None else {"use_pallas": use_pallas}
+    if valid is not None:
+        kw.update(valid=valid, rows=rows, refs=refs)
     return ops.fused_stats(G, tuple(sorted(needs)), axis=axis, **kw)
 
 
@@ -161,25 +170,156 @@ def resolve_select(spec, stats: dict, cfg, m: int):
     denominator: ``(weights [m], state, denom)`` with the empty-selection
     guard (Σw == 0 -> divide by 1) and a synthesized SelectionState when
     the rule has no richer state.  Shared by every layout that emits the
-    weighted row combine (sharded gather/a2a and the blocked scope)."""
+    weighted row combine (sharded gather/a2a and the blocked scope).
+
+    In an elastic round the validity mask rides the stats dict under the
+    ``"valid"`` key: every shipped select rule masks its own quantiles
+    and candidates, and this resolver re-masks the weights as defense in
+    depth — no rule may keep combine weight on a dropped worker."""
     w, st = spec.select(stats, cfg, m)
+    valid = stats.get("valid") if isinstance(stats, dict) else None
+    if valid is not None:
+        w = w * (valid > 0).astype(jnp.float32)
+        if st is not None and hasattr(st, "_replace"):
+            st = st._replace(selected=st.selected & (valid > 0))
     if st is None:
         st = SelectionState(w > 0, w)
     sw = jnp.sum(w)
     return w, st, jnp.where(sw > 0, sw, 1.0)
 
 
-def pad_correction(stats: dict, pad) -> dict:
+def pad_correction(stats: dict, pad, valid=None) -> dict:
     """Remove the zero-pad columns' contribution (a2a layout).
 
     A zero column means every worker ties at the column mean, so the
-    whole column is "majority": +1 score per worker per pad column.
-    Median/l1/d2med/gram of zero columns are exactly zero.
+    whole column is "majority": +1 score per worker per pad column — per
+    ACTIVE worker in an elastic round (dropped slots carry exact-zero
+    scores, so their correction is masked too).  Median/l1/d2med/gram of
+    zero columns are exactly zero.
     """
     if "scores" in stats and pad:
         stats = dict(stats)
-        stats["scores"] = stats["scores"] - pad
+        corr = pad if valid is None else pad * valid.astype(jnp.float32)
+        stats["scores"] = stats["scores"] - corr
     return stats
+
+
+# ---------------------------------------------------------------------------
+# streaming (elastic) accumulator — arrival-order-invariant by construction
+# ---------------------------------------------------------------------------
+# Workers report in arbitrary order; their stat partials fold into a
+# running state as they land.  Bit-exactness with the bulk masked
+# :func:`leaf_stats` pass is by CONSTRUCTION, not by tolerance: each
+# worker's output slots are non-zero in exactly one bucket's partial and
+# exact zeros everywhere else (the masked zero-pad contract), the
+# [d]-space invariants (column mean / majority / median) are computed
+# once from the full active set and shared by every bucket, and IEEE
+# ``x + 0.0 == x`` makes dict addition over disjoint slots the identity
+# on each slot.  Any permutation or partition of the arrivals therefore
+# folds to the same bits.  DESIGN.md §Elastic.
+
+class StreamState(NamedTuple):
+    """Running state of the streaming accumulator."""
+    stats: dict             # per-worker stat partials folded so far
+    valid: jax.Array        # [m] f32 — 1.0 once a worker's partial landed
+
+
+def init_stream(needs, m: int) -> StreamState:
+    return StreamState(zero_stats(needs, m), jnp.zeros((m,), jnp.float32))
+
+
+def fold_stats(state: StreamState, partial: dict, valid) -> StreamState:
+    """Fold one arrival bucket's per-worker stat partials (plus its
+    [m] 0/1 arrival mask) into the running state."""
+    return StreamState(
+        {k: state.stats[k] + partial[k] for k in state.stats},
+        state.valid + valid.astype(jnp.float32))
+
+
+def fold_arrivals(buffer, valid, rows, mask):
+    """G-space half of the accumulator: write one arrival bucket's
+    gradient rows into the padded [max_m, ...] buffer.  Disjoint slots —
+    bit-exact under any arrival order.  Returns (buffer', valid')."""
+    mb = mask.astype(jnp.float32).reshape(
+        (buffer.shape[0],) + (1,) * (buffer.ndim - 1))
+    return jnp.where(mb > 0, rows, buffer), valid + mask.astype(jnp.float32)
+
+
+def stream_leaf_stats(G, needs, m: int, arrival, axis: int = 0) -> StreamState:
+    """Fold per-worker stat partials over a ``lax.scan`` of arrival
+    buckets.
+
+    ``arrival`` [n_buckets, m]: disjoint 0/1 masks — bucket b holds the
+    workers whose gradients landed in arrival slot b (Σ over buckets is
+    the round's validity mask).  The active-set invariants are computed
+    ONCE (``ops.masked_stat_refs``); each scan step evaluates the
+    bucket's per-worker partials against those fixed references and
+    folds them via :func:`fold_stats`.  The returned state's stats are
+    bit-exact with ``leaf_stats(G, needs, m, valid=arrival.sum(0))``
+    however the workers were bucketed or ordered.
+    """
+    arrival = arrival.astype(jnp.float32)
+    valid = jnp.sum(arrival, axis=0)
+    needs_t = tuple(sorted(needs))
+    if not needs_t:
+        return StreamState({}, valid)
+    refs = ops.masked_stat_refs(G, needs_t, valid, axis=axis)
+
+    def body(st, bmask):
+        part = leaf_stats(G, needs_t, m, axis=axis, use_pallas=False,
+                          valid=valid, rows=bmask, refs=refs)
+        return fold_stats(st, part, bmask), None
+
+    state, _ = jax.lax.scan(body, init_stream(needs_t, m), arrival)
+    return state
+
+
+def quorum_met(valid, quorum: int):
+    """True once at least ``quorum`` workers' partials have folded in —
+    the point selection fires; arrivals past it are dropped."""
+    return jnp.sum((valid > 0).astype(jnp.int32)) >= jnp.int32(quorum)
+
+
+def arrival_active(arrival, quorum: int):
+    """[m] f32 quorum mask from [n_buckets, m] arrival buckets: the
+    first ``quorum`` workers in arrival order (bucket-major, ties within
+    a bucket broken by worker index), dropping everyone later.  0 =
+    no quorum (everyone who arrived at all is active)."""
+    arrival = arrival.astype(jnp.float32)
+    n_buckets, m = arrival.shape
+    arrived = jnp.sum(arrival, axis=0) > 0
+    if not quorum:
+        return arrived.astype(jnp.float32)
+    bucket_of = jnp.argmax(arrival, axis=0)            # first (only) bucket
+    key = jnp.where(arrived, bucket_of * m + jnp.arange(m),
+                    jnp.int32(n_buckets * m + 1) + jnp.arange(m))
+    rank = jnp.sum((key[None, :] < key[:, None]).astype(jnp.int32), axis=1)
+    return (arrived & (rank < quorum)).astype(jnp.float32)
+
+
+def stream_aggregate(G, cfg: ByzantineConfig, arrival,
+                     spec=None, return_state: bool = False):
+    """Local-executor quorum aggregation over a stream of arrival
+    buckets: selection fires on the quorum prefix (:func:`arrival_active`
+    — at most ``cfg.quorum`` workers), stats fold in bucket by bucket
+    (:func:`stream_leaf_stats`), and late arrivals are dropped with
+    truthful ``n_selected`` accounting (the returned state's
+    ``selected`` never exceeds the quorum)."""
+    spec = spec or get_spec(cfg.aggregator)
+    m = G.shape[0]
+    active = arrival_active(arrival, cfg.quorum)
+    if spec.column is not None:
+        out = spec.column(G, cfg, m, valid=active, use_pallas=False)
+        st = SelectionState(active > 0, active)
+        return (out, st) if return_state else out
+    state = stream_leaf_stats(G.astype(jnp.float32), spec.stats, m,
+                              arrival * active[None, :])
+    stats = dict(state.stats)
+    stats["valid"] = active
+    w, st, _denom = resolve_select(spec, stats, cfg, m)
+    Gz = jnp.where(active[:, None] > 0, G.astype(jnp.float32), 0.0)
+    agg = ref.masked_mean_det(Gz, w)
+    return (agg, st) if return_state else agg
 
 
 # ---------------------------------------------------------------------------
@@ -224,13 +364,29 @@ def registered() -> tuple:
 
 
 # ---- selection rules -------------------------------------------------------
+# Every rule handles the elastic case by reading the optional "valid"
+# key of the stats dict: byzantine-tolerance counts (krum's f, brsgd's
+# top-β) become traced functions of the ACTIVE count, dropped workers'
+# rows/columns are pushed to ±inf sentinels so they can never win a
+# quantile or a nearest-neighbour window, and returned weights are zero
+# on dropped slots (resolve_select re-masks as defense in depth).
 
 def _ones_select(stats, cfg, m):
+    valid = stats.get("valid") if isinstance(stats, dict) else None
+    if valid is not None:
+        return valid.astype(jnp.float32), None
     return jnp.ones((m,), jnp.float32), None
 
 
 def _brsgd_select_rule(stats, cfg, m):
-    st = brsgd_select(stats["scores"], stats["l1"], cfg.beta, cfg.threshold)
+    valid = stats.get("valid")
+    if valid is None:
+        st = brsgd_select(stats["scores"], stats["l1"], cfg.beta,
+                          cfg.threshold)
+    else:
+        sel, c1, c2, T = ref.masked_brsgd_select(
+            stats["scores"], stats["l1"], cfg.beta, cfg.threshold, valid)
+        st = BrSGDState(sel, c1, c2, stats["scores"], stats["l1"], T)
     return st.selected.astype(jnp.float32), st
 
 
@@ -238,25 +394,56 @@ def _krum_f(cfg, m: int) -> int:
     return cfg.krum_f if cfg.krum_f > 0 else max(1, int(cfg.alpha * m))
 
 
-def _krum_scores(gram, cfg, m: int):
-    """Krum score_i = Σ of the m-f-2 smallest d²_ij, from the Gram matrix."""
-    n_close = max(1, m - _krum_f(cfg, m) - 2)
+def _krum_f_dyn(cfg, na):
+    """Traced-count twin of :func:`_krum_f` (same floor/clamp rules)."""
+    if cfg.krum_f > 0:
+        return jnp.int32(cfg.krum_f)
+    return jnp.maximum(1, (cfg.alpha * na.astype(jnp.float32))
+                       .astype(jnp.int32))
+
+
+def _krum_scores(gram, cfg, m: int, valid=None):
+    """Krum score_i = Σ of the n-f-2 smallest d²_ij, from the Gram
+    matrix (n = m, or the traced active count in an elastic round —
+    dropped workers' rows AND columns are +inf, so they neither score
+    nor appear in anyone's nearest-neighbour window)."""
     diag = jnp.diagonal(gram)
     d2 = diag[:, None] + diag[None, :] - 2.0 * gram
     d2 = d2 + jnp.diag(jnp.full((m,), jnp.inf))
-    return jnp.sum(jnp.sort(d2, axis=1)[:, :n_close], axis=1)
+    if valid is None:
+        n_close = max(1, m - _krum_f(cfg, m) - 2)
+        return jnp.sum(jnp.sort(d2, axis=1)[:, :n_close], axis=1)
+    v = valid > 0
+    na = jnp.sum(v.astype(jnp.int32))
+    n_close = jnp.maximum(na - _krum_f_dyn(cfg, na) - 2, 1)
+    d2 = jnp.where(v[None, :], d2, jnp.inf)
+    d2s = jnp.sort(d2, axis=1)
+    keep = jnp.arange(m)[None, :] < n_close
+    score = jnp.sum(jnp.where(keep, d2s, 0.0), axis=1)
+    return jnp.where(v, score, jnp.inf)
 
 
 def _krum_select(stats, cfg, m):
-    score = _krum_scores(stats["gram"], cfg, m)
+    score = _krum_scores(stats["gram"], cfg, m, stats.get("valid"))
     return jax.nn.one_hot(jnp.argmin(score), m, dtype=jnp.float32), None
 
 
 def _multi_krum_select(stats, cfg, m, n_select: int = 0):
-    score = _krum_scores(stats["gram"], cfg, m)
-    k = min(m, n_select or max(1, m - _krum_f(cfg, m)))
-    best = jnp.argsort(score)[:k]
-    return jnp.zeros((m,), jnp.float32).at[best].set(1.0), None
+    valid = stats.get("valid")
+    score = _krum_scores(stats["gram"], cfg, m, valid)
+    if valid is None:
+        k = min(m, n_select or max(1, m - _krum_f(cfg, m)))
+        best = jnp.argsort(score)[:k]
+        return jnp.zeros((m,), jnp.float32).at[best].set(1.0), None
+    v = valid > 0
+    na = jnp.sum(v.astype(jnp.int32))
+    k = jnp.clip(jnp.int32(n_select) if n_select
+                 else jnp.maximum(na - _krum_f_dyn(cfg, na), 1),
+                 1, jnp.maximum(na, 1))
+    order = jnp.argsort(score)                 # dropped (inf) rank last
+    w = jnp.zeros((m,), jnp.float32).at[order].set(
+        (jnp.arange(m) < k).astype(jnp.float32))
+    return w * v.astype(jnp.float32), None
 
 
 def _geomedian_select(stats, cfg, m, iters: int = GEOMEDIAN_ITERS,
@@ -269,16 +456,25 @@ def _geomedian_select(stats, cfg, m, iters: int = GEOMEDIAN_ITERS,
     Initialized at the coordinate-wise median (via the ``d2med`` stat) —
     starting from the MEAN under a scale-1e10 attack leaves Weiszfeld in
     the flat far-field where all distances (hence weights) are equal.
+
+    Elastic rounds re-mask the weights EVERY iteration: a dropped slot's
+    d2med partial is an exact zero, which would otherwise give it the
+    1/eps ceiling weight and let garbage dominate the fixed point.
     """
+    valid = stats.get("valid")
+    vf = None if valid is None else (valid > 0).astype(jnp.float32)
     S = stats["gram"]
     diag = jnp.diagonal(S)
     w = 1.0 / jnp.maximum(jnp.sqrt(stats["d2med"]), eps)
+    if vf is not None:
+        w = w * vf
 
     def step(w, _):
         W = jnp.sum(w)
         Sw = S @ w
         d2 = diag - 2.0 * Sw / W + (w @ Sw) / (W * W)
-        return 1.0 / jnp.maximum(jnp.sqrt(jnp.maximum(d2, 0.0)), eps), None
+        w2 = 1.0 / jnp.maximum(jnp.sqrt(jnp.maximum(d2, 0.0)), eps)
+        return (w2 if vf is None else w2 * vf), None
 
     w, _ = jax.lax.scan(step, w, None, length=max(iters - 1, 0))
     return w, None
@@ -286,11 +482,15 @@ def _geomedian_select(stats, cfg, m, iters: int = GEOMEDIAN_ITERS,
 
 # ---- per-dimension (column) rules ------------------------------------------
 
-def _median_column(G, cfg, m, **kw):
+def _median_column(G, cfg, m, valid=None, **kw):
+    if valid is not None:
+        return ops.cwise_median(G, valid=valid, **kw)
     return ops.cwise_median(G, **kw)
 
 
-def _trimmed_mean_column(G, cfg, m, **kw):
+def _trimmed_mean_column(G, cfg, m, valid=None, **kw):
+    if valid is not None:
+        return ops.trimmed_mean(G, trim_frac=cfg.trim_frac, valid=valid, **kw)
     return ops.trimmed_mean(G, trim_frac=cfg.trim_frac, **kw)
 
 
@@ -360,10 +560,31 @@ def _combine_rows(G, w, use_pallas: bool, d_blk: int):
 
 def aggregate_local(G, cfg: ByzantineConfig, use_pallas: bool | None = None,
                     return_state: bool = False,
-                    spec: AggregatorSpec | None = None, d_blk: int = 2048):
-    """Run one aggregator on the worker-gradient matrix G [m, d] -> [d]."""
+                    spec: AggregatorSpec | None = None, d_blk: int = 2048,
+                    valid=None):
+    """Run one aggregator on the worker-gradient matrix G [m, d] -> [d].
+
+    ``valid`` ([m] 0/1) runs the elastic masked variant: statistics,
+    quantiles and the combine cover the active rows only, dropped rows
+    contribute exact zeros (DESIGN.md §Elastic).  Masked calls take the
+    jnp reference path — the Pallas fast paths assume a full worker set.
+    """
     spec = spec or get_spec(cfg.aggregator)
     m = G.shape[0]
+    if valid is not None:
+        vf = jnp.asarray(valid).astype(jnp.float32)
+        if spec.column is not None:
+            out = spec.column(G, cfg, m, valid=vf, use_pallas=False)
+            st = SelectionState(vf > 0, vf)
+            return (out, st) if return_state else out
+        stats = dict(leaf_stats(G.astype(jnp.float32), spec.stats, m,
+                                use_pallas=False, valid=vf))
+        stats["valid"] = vf
+        w, st, _denom = resolve_select(spec, stats, cfg, m)
+        Gz = jnp.where(vf[:, None] > 0, G.astype(jnp.float32), 0.0)
+        agg = ref.masked_mean_det(Gz, w)
+        return (agg, st) if return_state else agg
+
     kw = {} if use_pallas is None else {"use_pallas": use_pallas}
     if spec.column is not None:
         out = spec.column(G, cfg, m, d_blk=d_blk, **kw)
@@ -458,7 +679,7 @@ def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
                       spec: AggregatorSpec | None = None,
                       allow_fast_paths: bool = True,
                       flatten_columns: bool = False,
-                      model_axes=(), leaf_specs=None):
+                      model_axes=(), leaf_specs=None, valid=None):
     """Aggregate a gradient pytree across the worker mesh axes.
 
     Must be called inside a FULL-manual shard_map (every mesh axis
@@ -483,6 +704,13 @@ def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
     eligible.  Under full-manual the reshape is purely local, so this
     is always safe; it is an opt-in only to keep the N-D jnp path
     testable.
+
+    ``valid`` ([m] 0/1, replicated) runs the elastic round: dropped
+    workers' gradients are zeroed on entry (exact zeros — the masking
+    contract), statistics/selection cover the active set only, and in
+    the a2a layout the validity mask itself RIDES the stats psum as a
+    one-hot slot per active worker — the trace-level signal the
+    ``masked-psum-validity`` lint rule checks for (DESIGN.md §Elastic).
     """
     if layout not in ("gather", "a2a"):
         raise ValueError(f"unknown layout {layout!r}")
@@ -503,32 +731,42 @@ def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
         assert len(spec_leaves) == len(leaves), \
             (len(spec_leaves), len(leaves))
     origin = _model_origin(model_axes) if model_axes else None
+    elastic = valid is not None
+    if elastic:
+        vf = jnp.asarray(valid).astype(jnp.float32)
+        act_i = vf[jax.lax.axis_index(axes)]
+        leaves = [jnp.where(act_i > 0, g, jnp.zeros_like(g))
+                  for g in leaves]
 
-    if spec.name == "mean" and allow_fast_paths:
+    if spec.name == "mean" and allow_fast_paths and not elastic:
         # uniform weights == plain pmean: skip the gather/a2a machinery
         return jax.tree.unflatten(
             tdef, [jax.lax.pmean(g, axes) for g in leaves]), None
 
     # -- per-dimension rules: no replicated phase at all ----------------
     if spec.column is not None:
+        colkw = {"valid": vf, "use_pallas": False} if elastic else {}
         out = []
         for g in leaves:
             if layout == "a2a":
                 Gc, _pad = a2a_chunk(g, axes, m)
-                out.append(unchunk(spec.column(Gc, cfg, m), g, axes))
+                out.append(unchunk(spec.column(Gc, cfg, m, **colkw),
+                                   g, axes))
                 continue
             Gv = gather_leaf(g, axes, m)
             if Gv.ndim > 2 and flatten_columns:
                 # 2-D view keeps the Pallas column kernels eligible
                 # (purely local under full-manual)
-                col = spec.column(Gv.reshape(m, -1), cfg, m)
+                col = spec.column(Gv.reshape(m, -1), cfg, m, **colkw)
             elif Gv.ndim > 2:
                 # N-D jnp path (see the blocked-scope column path)
-                col = spec.column(Gv, cfg, m, use_pallas=False)
+                col = spec.column(Gv, cfg, m, use_pallas=False,
+                                  **({"valid": vf} if elastic else {}))
             else:
-                col = spec.column(Gv, cfg, m)
+                col = spec.column(Gv, cfg, m, **colkw)
             out.append(col.astype(g.dtype).reshape(g.shape))
-        return jax.tree.unflatten(tdef, out), None
+        st = (SelectionState(vf > 0, vf) if elastic else None)
+        return jax.tree.unflatten(tdef, out), st
 
     # -- phase 1: per-leaf stats partials -------------------------------
     # gather layout: each leaf is gathered EXACTLY once, consumed by the
@@ -551,7 +789,8 @@ def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
             continue        # stat-free select (mean): nothing to gather
         else:
             Gv = gather_leaf(g, axes, m)
-        part = leaf_stats(Gv, spec.stats, m)
+        part = leaf_stats(Gv, spec.stats, m,
+                          valid=vf if elastic else None)
         if origin is not None and n_split == 1:
             # model-replicated leaf: every model shard would add the
             # same partial — keep only the model-origin copy
@@ -561,8 +800,22 @@ def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
         # a2a partials close over the worker axes; model-sharded leaves'
         # partials close over the model axes in the same reduction
         psum_axes = (axes if layout == "a2a" else ()) + model_axes
+        if elastic and layout == "a2a":
+            # the validity mask rides the stats psum: each worker
+            # contributes its own one-hot slot (masked to the model
+            # origin so model shards don't double-count it).  This is
+            # the operand the masked-psum-validity lint rule requires —
+            # a stats psum without it means some path folded dropped
+            # workers' garbage into the selection.
+            vpart = jax.nn.one_hot(jax.lax.axis_index(axes), m,
+                                   dtype=jnp.float32) * act_i
+            stats["valid"] = vpart if origin is None else vpart * origin
         stats = jax.lax.psum(stats, psum_axes)
-        stats = pad_correction(stats, total_pad)
+        stats = pad_correction(stats, total_pad,
+                               valid=vf if elastic else None)
+    if elastic:
+        stats = dict(stats)
+        stats.setdefault("valid", vf)
 
     # -- phase 2: replicated selection + weighted combine ---------------
     w, st, denom = resolve_select(spec, stats, cfg, m)

@@ -101,19 +101,51 @@ _MEMBERSHIP_TAG = 0x6279_7A6D  # "byzm"
 # byzantine membership — a declared scenario knob
 # ---------------------------------------------------------------------------
 
-def n_byzantine(cfg: ByzantineConfig, m: int) -> int:
-    """⌊αm⌋ — every policy corrupts exactly this many workers."""
-    return int(cfg.alpha * m)
+def n_byzantine(cfg: ByzantineConfig, m: int, n_active=None):
+    """⌊αm⌋ — every policy corrupts exactly this many workers.
+
+    ``n_active`` (traced, elastic rounds) draws over the ACTIVE set
+    instead: the adversary controls a FRACTION of whichever workers
+    actually make the round, ⌊α·n_active⌋ — the bound
+    ``ByzantineConfig.__post_init__`` validates the quorum against."""
+    if n_active is None:
+        return int(cfg.alpha * m)
+    return (cfg.alpha * n_active.astype(jnp.float32)).astype(jnp.int32)
 
 
-def membership_mask(cfg: ByzantineConfig, m: int, key=None):
+def membership_mask(cfg: ByzantineConfig, m: int, key=None, active=None):
     """[m] bool — which workers are byzantine under ``cfg.membership``.
 
     ``key`` (the step key) is read only by the ``resample`` policy;
     ``random`` draws from ``cfg.byz_seed`` so the subset is fixed for a
     run, and ``prefix`` is key-free.  Identical on every worker for a
     given key, so all buckets/leaves of one step see ONE byzantine set.
+
+    ``active`` ([m] 0/1, elastic rounds) restricts the draw to the
+    active workers: ⌊α·n_active⌋ byzantines, all of them active —
+    "prefix" takes the first that many active slots, the keyed policies
+    rank active workers by random priority (dropped slots get +inf
+    priority, so they are never drawn).  All counts stay traced: one
+    compiled graph serves every active set.
     """
+    if active is not None:
+        v = active > 0
+        nb = n_byzantine(cfg, m, jnp.sum(v.astype(jnp.int32)))
+        if cfg.membership == "prefix":
+            return v & (jnp.cumsum(v.astype(jnp.int32)) <= nb)
+        if cfg.membership == "random":
+            mkey = jax.random.PRNGKey(cfg.byz_seed)
+        elif cfg.membership == "resample":
+            if key is None:
+                raise ValueError("membership='resample' needs the step key")
+            mkey = jax.random.fold_in(key, _MEMBERSHIP_TAG)
+        else:
+            raise ValueError(f"unknown membership policy {cfg.membership!r}; "
+                             f"choose from {MEMBERSHIP_POLICIES}")
+        prio = jnp.where(v, jax.random.uniform(mkey, (m,)), jnp.inf)
+        rank = jnp.sum((prio[None, :] < prio[:, None]).astype(jnp.int32),
+                       axis=1)
+        return v & (rank < nb)
     n_byz = n_byzantine(cfg, m)
     if cfg.membership == "prefix" or n_byz == 0:
         return jnp.arange(m) < n_byz
@@ -146,10 +178,17 @@ def data_membership(cfg: ByzantineConfig, m: int, step: int = 0) -> np.ndarray:
 class AttackSpec:
     """Scope-independent description of one Byzantine attack."""
     name: str
-    scope: str = "gradient"             # "gradient" | "data"
+    scope: str = "gradient"             # "gradient" | "data" | "timing"
     knows: frozenset = frozenset()      # honest stats the rule reads
     corrupt: Optional[Callable] = None  # (g, know, key, cfg) -> evil
     corrupt_labels: Optional[Callable] = None  # (y, n_classes) -> y'
+    # timing-scope rule: maps the per-worker arrival delays of one
+    # elastic round (numpy [m] float, +inf = never arrives) to the
+    # adversarially delayed ones — (delays, is_byz, cfg) -> delays'.
+    # Executed numpy-side by data.pipeline.ArrivalSchedule (arrival
+    # timing lives outside jit, like data-scope corruption); gradients
+    # stay untouched, the damage is WHO makes the quorum.
+    delay: Optional[Callable] = None
     # worker-independent rule: corrupt ignores (g, key), so every
     # byzantine worker emits the SAME evil values (negation/alie/ipm —
     # pure functions of the honest statistics).  The dense executor then
@@ -158,18 +197,22 @@ class AttackSpec:
     shared_row: bool = False
 
     def __post_init__(self):
-        if self.scope not in ("gradient", "data"):
+        if self.scope not in ("gradient", "data", "timing"):
             raise ValueError(f"{self.name}: unknown scope {self.scope!r}")
         if self.shared_row and self.scope != "gradient":
             raise ValueError(f"{self.name}: shared_row is a gradient-scope "
                              f"property")
         if (self.scope == "gradient") != (self.corrupt is not None):
             raise ValueError(
-                f"{self.name}: gradient specs set corrupt, data specs don't")
+                f"{self.name}: gradient specs set corrupt, other scopes "
+                f"don't")
         if (self.scope == "data") != (self.corrupt_labels is not None):
             raise ValueError(
-                f"{self.name}: data specs set corrupt_labels, gradient "
-                f"specs don't")
+                f"{self.name}: data specs set corrupt_labels, other scopes "
+                f"don't")
+        if (self.scope == "timing") != (self.delay is not None):
+            raise ValueError(
+                f"{self.name}: timing specs set delay, other scopes don't")
         unknown = set(self.knows) - set(KNOWLEDGE)
         if unknown:
             raise ValueError(f"{self.name}: unknown knowledge "
@@ -260,6 +303,12 @@ register(AttackSpec("ipm", knows=frozenset({"hsum"}), corrupt=_ipm,
 # Data corruption happens in data/pipeline.py; gradients stay untouched.
 register(AttackSpec("label_flip", scope="data",
                     corrupt_labels=lambda y, n_classes: n_classes - 1 - y))
+# byzantine workers stall the round (never arrive): in an elastic round
+# the quorum must fill from honest stragglers — or run short-handed when
+# it can't.  Measures the availability cost of quorum selection under a
+# denial-of-contribution adversary (no gradient is ever corrupted).
+register(AttackSpec("stall", scope="timing",
+                    delay=lambda d, is_byz, cfg: np.where(is_byz, np.inf, d)))
 
 
 def is_gradient_attack(cfg: ByzantineConfig) -> bool:
@@ -289,17 +338,22 @@ def inject_collectives(cfg: ByzantineConfig, n_leaves: int,
 # knowledge — the omniscient-adversary statistics, computed per scope
 # ---------------------------------------------------------------------------
 
-def _finish_knowledge(know: dict, knows, n_honest: int) -> dict:
+def _finish_knowledge(know: dict, knows, n_honest) -> dict:
     if knows:
-        know["n_honest"] = jnp.float32(n_honest)
+        # n_honest is a Python int in a fixed-m round and a traced count
+        # in an elastic one (honest = active minus byzantine)
+        know["n_honest"] = jnp.asarray(n_honest, jnp.float32)
     return know
 
 
-def _dense_knowledge(G, mask, knows, n_honest: int) -> dict:
-    """Honest per-coordinate moments from the full [m, d] matrix."""
+def _dense_knowledge(G, mask, knows, n_honest, active=None) -> dict:
+    """Honest per-coordinate moments from the full [m, d] matrix.  In an
+    elastic round ``active`` additionally excludes dropped workers: the
+    adversary can only read gradients that were actually produced."""
     know = {}
     if knows:
-        keep = jnp.where(mask[:, None], 0.0, G.astype(jnp.float32))
+        drop = mask if active is None else (mask | ~(active > 0))
+        keep = jnp.where(drop[:, None], 0.0, G.astype(jnp.float32))
         if "hsum" in knows:
             know["hsum"] = jnp.sum(keep, axis=0)
         if "hsqsum" in knows:
@@ -307,13 +361,15 @@ def _dense_knowledge(G, mask, knows, n_honest: int) -> dict:
     return _finish_knowledge(know, knows, n_honest)
 
 
-def _sharded_knowledge(g, is_byz, knows, axes, n_honest: int) -> dict:
+def _sharded_knowledge(g, is_byz, knows, axes, n_honest,
+                       is_active=None) -> dict:
     """Same moments inside shard_map: zero this worker's contribution if
-    byzantine, psum over the worker axes — additive exactly like
-    ``engine.leaf_stats`` partials."""
+    byzantine (or dropped, in an elastic round), psum over the worker
+    axes — additive exactly like ``engine.leaf_stats`` partials."""
     know = {}
     if knows:
-        keep = jnp.where(is_byz, 0.0, g.astype(jnp.float32))
+        drop = is_byz if is_active is None else (is_byz | ~is_active)
+        keep = jnp.where(drop, 0.0, g.astype(jnp.float32))
         if "hsum" in knows:
             know["hsum"] = jax.lax.psum(keep, axes)
         if "hsqsum" in knows:
@@ -331,19 +387,27 @@ def _leaf_key(key, worker, leaf: int):
 # executors
 # ---------------------------------------------------------------------------
 
-def apply_dense(G, key, cfg: ByzantineConfig):
+def apply_dense(G, key, cfg: ByzantineConfig, active=None):
     """Corrupt the byzantine rows of the dense worker-gradient matrix
-    G [m, d].  Data-scope attacks and alpha=0 are no-ops here (data
-    corruption happens in the pipeline)."""
+    G [m, d].  Data-scope and timing-scope attacks and alpha=0 are
+    no-ops here (data corruption happens in the pipeline; arrival timing
+    in the ArrivalSchedule).  ``active`` ([m] 0/1) scopes an elastic
+    round: membership and knowledge draw over the active set only."""
     if not is_gradient_attack(cfg):
         return G
     spec = get_spec(cfg.attack)
     m = G.shape[0]
-    n_byz = n_byzantine(cfg, m)
-    if n_byz == 0:
-        return G
-    mask = membership_mask(cfg, m, key)
-    know = _dense_knowledge(G, mask, spec.knows, m - n_byz)
+    if active is None:
+        n_byz = n_byzantine(cfg, m)
+        if n_byz == 0:
+            return G
+        mask = membership_mask(cfg, m, key)
+        n_honest = m - n_byz
+    else:
+        na = jnp.sum((active > 0).astype(jnp.int32))
+        mask = membership_mask(cfg, m, key, active)
+        n_honest = na - n_byzantine(cfg, m, na)
+    know = _dense_knowledge(G, mask, spec.knows, n_honest, active)
     if spec.shared_row:
         # worker-independent rule: ONE evil row, broadcast over the
         # byzantine set (g and key are ignored by the rule)
@@ -379,7 +443,7 @@ def _noise_view(g, pspec, model_axes):
 
 
 def inject(grads, key, cfg: ByzantineConfig, axes, membership_key=None,
-           leaf_specs=None, model_axes=()):
+           leaf_specs=None, model_axes=(), active=None):
     """Corrupt this worker's gradient pytree inside shard_map (global
     scope before aggregation, or one bucket inside the blocked backward
     scan).
@@ -395,18 +459,30 @@ def inject(grads, key, cfg: ByzantineConfig, axes, membership_key=None,
     shard.  Per-coordinate knowledge still psums over the worker axes
     only (the coordinates ARE the shard), but key-driven rules receive
     the global leaf shape + shard offsets through the knowledge dict so
-    their noise is sharding-invariant (see :func:`_gaussian`)."""
+    their noise is sharding-invariant (see :func:`_gaussian`).
+
+    ``active`` ([m] 0/1, replicated — elastic rounds): membership and
+    knowledge draw over the active workers only; dropped workers are
+    never corrupted (the engine zeroes them out anyway)."""
     if not is_gradient_attack(cfg):
         return grads
     spec = get_spec(cfg.attack)
     axes = (axes,) if isinstance(axes, str) else tuple(axes)
     m = axis_size(axes)
-    n_byz = n_byzantine(cfg, m)
-    if n_byz == 0:
-        return grads
     idx = jax.lax.axis_index(axes)
     mkey = key if membership_key is None else membership_key
-    is_byz = membership_mask(cfg, m, mkey)[idx]
+    if active is None:
+        n_byz = n_byzantine(cfg, m)
+        if n_byz == 0:
+            return grads
+        is_byz = membership_mask(cfg, m, mkey)[idx]
+        n_honest = m - n_byz
+        is_active = None
+    else:
+        na = jnp.sum((active > 0).astype(jnp.int32))
+        is_byz = membership_mask(cfg, m, mkey, active)[idx]
+        n_honest = na - n_byzantine(cfg, m, na)
+        is_active = (active > 0)[idx]
     leaves, tdef = jax.tree.flatten(grads)
     if leaf_specs is None:
         spec_leaves = [None] * len(leaves)
@@ -420,7 +496,8 @@ def inject(grads, key, cfg: ByzantineConfig, axes, membership_key=None,
             (len(spec_leaves), len(leaves))
     out = []
     for li, (g, ps) in enumerate(zip(leaves, spec_leaves)):
-        know = _sharded_knowledge(g, is_byz, spec.knows, axes, m - n_byz)
+        know = _sharded_knowledge(g, is_byz, spec.knows, axes, n_honest,
+                                  is_active)
         shape, start = _noise_view(g, ps, tuple(model_axes))
         if start is not None:
             know["noise_shape"], know["noise_start"] = shape, start

@@ -30,6 +30,70 @@ def data_attack_spec(byz: Optional[ByzantineConfig]):
     return spec if spec.scope == "data" else None
 
 
+def timing_attack_spec(byz: Optional[ByzantineConfig]):
+    """The active timing-scope AttackSpec, or None.  Timing attacks
+    (e.g. ``stall``) corrupt worker ARRIVAL, not data or gradients —
+    they act on the :class:`ArrivalSchedule`'s delay vector."""
+    if byz is None or byz.attack == "none" or byz.alpha <= 0:
+        return None
+    spec = threat.get_spec(byz.attack)
+    return spec if spec.scope == "timing" else None
+
+
+STRAGGLE_DISTS = ("none", "exp", "pareto")
+
+
+class ArrivalSchedule:
+    """Per-step worker arrival delays and the quorum-selected active
+    set (DESIGN.md §Elastic).
+
+    Drops the synchronous-round fiction host-side: each step draws an
+    arrival delay per worker from ``straggle`` (``none`` | ``exp`` |
+    ``pareto``, scaled by ``scale``), lets any timing-scope attack
+    rewrite the delays of the byzantine workers (``stall`` pins them to
+    +inf — they never arrive), and selects the first ``quorum`` workers
+    to arrive as this round's active set.  Draws are keyed on
+    ``(seed, step)`` so the schedule is reproducible and independent of
+    the data stream.  ``active(step)`` is the [m] 0/1 f32 mask the
+    elastic train step consumes; workers with non-finite delay are
+    never active even when fewer than ``quorum`` arrive (the round then
+    truthfully runs under-quorum rather than waiting forever)."""
+
+    def __init__(self, n_workers: int, quorum: int, straggle: str = "none",
+                 scale: float = 1.0, byz: Optional[ByzantineConfig] = None,
+                 seed: int = 0):
+        if straggle not in STRAGGLE_DISTS:
+            raise ValueError(f"straggle={straggle!r}: "
+                             f"choose from {', '.join(STRAGGLE_DISTS)}")
+        if not 0 < quorum <= n_workers:
+            raise ValueError(f"quorum={quorum} out of range for "
+                             f"{n_workers} workers")
+        self.m, self.quorum = n_workers, quorum
+        self.straggle, self.scale = straggle, scale
+        self.byz, self.seed = byz, seed
+
+    def delays(self, step: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, step))
+        if self.straggle == "exp":
+            d = rng.exponential(self.scale, self.m)
+        elif self.straggle == "pareto":
+            d = rng.pareto(2.0, self.m) * self.scale
+        else:
+            d = np.zeros(self.m)
+        spec = timing_attack_spec(self.byz)
+        if spec is not None:
+            is_byz = threat.data_membership(self.byz, self.m, step)
+            d = spec.delay(d, is_byz, self.byz)
+        return d
+
+    def active(self, step: int) -> np.ndarray:
+        d = self.delays(step)
+        order = np.argsort(d, kind="stable")
+        act = np.zeros(self.m, np.float32)
+        act[order[:self.quorum]] = 1.0
+        return act * np.isfinite(d)
+
+
 class LMWorkerPipeline:
     """Token batches [m, b, S] for LM training."""
 

@@ -43,7 +43,8 @@ def brsgd_stats(G, use_pallas: bool = _USE_PALLAS_DEFAULT, d_blk: int = 2048):
                                              "d_blk"))
 def fused_stats(G, needs: tuple, axis: int = 0,
                 use_pallas: bool = _USE_PALLAS_DEFAULT,
-                d_blk: int = 2048) -> dict:
+                d_blk: int = 2048, valid=None, rows=None,
+                refs=None) -> dict:
     """Fused statistics pass: any subset of ``ref.STAT_NAMES`` from one
     read of G (DESIGN.md §Perf).
 
@@ -53,14 +54,32 @@ def fused_stats(G, needs: tuple, axis: int = 0,
     reference shares ONE bitonic sorted-rows pass across the requested
     statistics.  ``needs`` must be hashable (tuple/frozenset); unknown
     names are rejected by the engine registry before reaching here.
+
+    ``valid`` ([m] 0/1) switches to the elastic masked pass (DESIGN.md
+    §Elastic): statistics of the active workers only, dropped slots as
+    exact zeros.  ``rows``/``refs`` are the streaming-accumulator hooks
+    (per-arrival-bucket output slots / shared active-set invariants) —
+    see ``engine.stream_leaf_stats``.  The Pallas kernels assume a full
+    worker set, so masked calls always take the jnp reference.
     """
     needs = tuple(n for n in ref.STAT_NAMES if n in needs)
     if not needs:
         return {}
+    if valid is not None:
+        return ref.masked_fused_stats_ref(G, needs, valid, axis=axis,
+                                          rows=rows, refs=refs)
     if use_pallas and axis == 0 and G.ndim == 2:
         return fused_stats_pallas(G, needs, d_blk=d_blk,
                                   interpret=_INTERPRET)
     return ref.fused_stats_ref(G, needs, axis=axis)
+
+
+def masked_stat_refs(G, needs: tuple, valid, axis: int = 0) -> dict:
+    """Shared active-set invariants for the streaming accumulator — see
+    ``ref.masked_stat_refs`` (computed once per leaf, reused by every
+    arrival bucket's ``fused_stats(..., rows=bucket, refs=...)``)."""
+    needs = tuple(n for n in ref.STAT_NAMES if n in needs)
+    return ref.masked_stat_refs(G, needs, valid, axis=axis)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "d_blk"))
@@ -97,7 +116,10 @@ def masked_mean(G, mask, use_pallas: bool = _USE_PALLAS_DEFAULT,
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "d_blk"))
-def cwise_median(G, use_pallas: bool = _USE_PALLAS_DEFAULT, d_blk: int = 2048):
+def cwise_median(G, use_pallas: bool = _USE_PALLAS_DEFAULT, d_blk: int = 2048,
+                 valid=None):
+    if valid is not None:
+        return ref.masked_cwise_median_ref(G, valid)
     if use_pallas:
         return cwise_median_pallas(G, d_blk=d_blk, interpret=_INTERPRET)
     return ref.cwise_median_ref(G)
@@ -106,8 +128,11 @@ def cwise_median(G, use_pallas: bool = _USE_PALLAS_DEFAULT, d_blk: int = 2048):
 @functools.partial(jax.jit, static_argnames=("trim_frac", "use_pallas",
                                              "d_blk"))
 def trimmed_mean(G, trim_frac: float, use_pallas: bool = _USE_PALLAS_DEFAULT,
-                 d_blk: int = 2048):
-    """Coordinate-wise trimmed mean (k = ⌊trim_frac·m⌋ per side)."""
+                 d_blk: int = 2048, valid=None):
+    """Coordinate-wise trimmed mean (k = ⌊trim_frac·m⌋ per side; with a
+    ``valid`` mask both counts are over the active rows, traced)."""
+    if valid is not None:
+        return ref.masked_trimmed_mean_ref(G, trim_frac, valid)
     if use_pallas:
         return trimmed_mean_pallas(G, trim_frac, d_blk=d_blk,
                                    interpret=_INTERPRET)

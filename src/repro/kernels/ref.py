@@ -340,3 +340,168 @@ def trimmed_mean_ref(G, trim_frac: float):
     for i in range(k + 1, m - k):
         acc = acc + rows[i]
     return acc / (m - 2 * k)
+
+
+# ---------------------------------------------------------------------------
+# elastic (masked) statistics: pad-to-max-m + validity mask
+# ---------------------------------------------------------------------------
+# Every function below takes ``valid`` ([m] 0/1) naming the ACTIVE
+# worker slots of a padded round.  The masking contract is EXACT ZEROS,
+# never NaN poison: dropped slots are zeroed with ``jnp.where`` (a
+# multiplicative 0 * inf would be NaN), cutoffs and counts are quantiles
+# over the active set only, and active counts are traced values — so ONE
+# compiled graph serves every active-set size up to max_m.
+
+def quantile_index_dyn(q: float, n):
+    """Traced-count twin of :func:`quantile_nearest_index` — same
+    virtual index and half-DOWN tie rule, for quorum-sized active sets
+    whose count is a runtime value."""
+    virt = q * (n.astype(jnp.float32) - 1.0)
+    low = jnp.floor(virt)
+    return jnp.where(virt - low <= 0.5, low, low + 1.0).astype(jnp.int32)
+
+
+def masked_sorted_stack(x, valid):
+    """:func:`sorted_worker_stack` with the invalid rows forced to +inf
+    so they sink past the active ones: rows [0, n_active) of the result
+    are the ascending sort of the ACTIVE values."""
+    vb = valid.astype(bool).reshape((x.shape[0],) + (1,) * (x.ndim - 1))
+    return sorted_worker_stack(jnp.where(vb, x, jnp.inf))
+
+
+def masked_median_from_stack(S, n_active):
+    """Coordinate-wise median over the first ``n_active`` sorted rows
+    (dynamic two-middle average; odd counts read the middle row twice,
+    and 0.5·(a+a) == a exactly).  +inf rows past the active prefix are
+    replaced by exact zeros when n_active == 0 so downstream masked
+    consumers never multiply 0 · inf."""
+    na = jnp.maximum(n_active, 1)
+    lo = jnp.take(S, (na - 1) // 2, axis=0)
+    hi = jnp.take(S, na // 2, axis=0)
+    med = 0.5 * (lo + hi)
+    return jnp.where(jnp.isfinite(med), med, 0.0)
+
+
+def masked_stat_refs(G, needs, valid, axis: int = 0) -> dict:
+    """The [d]-space invariants of the active set — column mean +
+    majority mask (``scores``), coordinate-wise median (``l1`` /
+    ``d2med``) — plus the zeroed worker view.
+
+    Computed ONCE per leaf and shared by every arrival bucket's partial
+    (``engine.stream_leaf_stats``): per-worker stat rows are functions
+    of the worker's own row and these fixed references only, which is
+    what makes the streaming fold bit-exact with the bulk masked pass
+    (disjoint output slots + IEEE ``x + 0.0 == x``)."""
+    x = jnp.moveaxis(G.astype(jnp.float32), axis, 0)          # [m, ...]
+    v = valid.astype(jnp.float32)
+    vb = v.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
+    x = jnp.where(vb > 0, x, 0.0)
+    na = jnp.sum(v)
+    refs = {"x": x, "v": v, "na": na}
+    if "scores" in needs:
+        mean_c = _exact_div(det_sum_rows(x), jnp.maximum(na, 1.0))
+        n_above, _ = jax.lax.scan(
+            lambda c, gv: (c + gv[1] * (gv[0] >= mean_c).astype(jnp.float32),
+                           None),
+            jnp.zeros(x.shape[1:], jnp.float32), (x, v))
+        refs["mean_c"] = mean_c
+        refs["majority_is_above"] = n_above * 2.0 >= na
+    if "l1" in needs or "d2med" in needs:
+        refs["med"] = masked_median_from_stack(
+            masked_sorted_stack(x, v), jnp.sum(v.astype(jnp.int32)))
+    return refs
+
+
+def masked_fused_stats_ref(G, needs, valid, axis: int = 0, rows=None,
+                           refs=None) -> dict:
+    """Masked variant of :func:`fused_stats_ref`: statistics of the
+    active workers only, with every dropped slot an EXACT zero.
+
+    ``rows`` ([m] 0/1, optional) restricts the OUTPUT slots: slots
+    outside ``rows`` are zero even when valid — this is the
+    per-arrival-bucket partial of the streaming accumulator.  ``refs``
+    reuses a :func:`masked_stat_refs` result so all buckets of one leaf
+    share identical active-set invariants.  Each output slot depends
+    only on that worker's row and the shared refs, so partials over any
+    partition of the active set fold (bit-exactly, by disjoint slots)
+    into the bulk ``rows=None`` pass."""
+    if refs is None:
+        refs = masked_stat_refs(G, needs, valid, axis=axis)
+    x, v = refs["x"], refs["v"]
+    r = v if rows is None else v * rows.astype(jnp.float32)
+    out = {}
+    if "scores" in needs:
+        mean_c = refs["mean_c"]
+        maj = refs["majority_is_above"]
+        out["scores"] = jax.lax.map(
+            lambda gr: gr[1] * jnp.sum(
+                jnp.where(maj, gr[0] >= mean_c, gr[0] < mean_c)
+                .astype(jnp.float32)), (x, r))
+    if "l1" in needs or "d2med" in needs:
+        med = refs["med"]
+
+        def dists(gr):
+            diff = gr[0] - med
+            return (gr[1] * jnp.sum(jnp.abs(diff)),
+                    gr[1] * jnp.sum(diff * diff))
+
+        l1, d2med = jax.lax.map(dists, (x, r))
+        if "l1" in needs:
+            out["l1"] = l1
+        if "d2med" in needs:
+            out["d2med"] = d2med
+    if "gram" in needs:
+        red = tuple(range(1, x.ndim))
+        xr = jnp.where(r.reshape((x.shape[0],) + (1,) * (x.ndim - 1)) > 0,
+                       x, 0.0)
+        out["gram"] = jnp.tensordot(xr, x, axes=(red, red))
+    return out
+
+
+def masked_cwise_median_ref(G, valid, axis: int = 0):
+    """Coordinate-wise median over the active rows."""
+    x = jnp.moveaxis(G.astype(jnp.float32), axis, 0)
+    return masked_median_from_stack(masked_sorted_stack(x, valid),
+                                    jnp.sum(valid.astype(jnp.int32)))
+
+
+def masked_trimmed_mean_ref(G, trim_frac: float, valid, axis: int = 0):
+    """Coordinate-wise trimmed mean over the active rows: per-side trim
+    k = ⌊trim_frac·n_active⌋ with the :func:`trim_k` degeneracy guard,
+    both counts traced."""
+    x = jnp.moveaxis(G.astype(jnp.float32), axis, 0)
+    m = x.shape[0]
+    S = masked_sorted_stack(x, valid)
+    na = jnp.sum(valid.astype(jnp.int32))
+    k = (trim_frac * na.astype(jnp.float32)).astype(jnp.int32)
+    k = jnp.where(2 * k >= na, jnp.maximum(na - 1, 0) // 2, k)
+    ranks = jnp.arange(m).reshape((m,) + (1,) * (x.ndim - 1))
+    kept = jnp.where((ranks >= k) & (ranks < na - k), S, 0.0)
+    return _exact_div(det_sum_rows(kept),
+                      jnp.maximum(na - 2 * k, 1).astype(jnp.float32))
+
+
+def masked_brsgd_select(scores, l1, beta: float, threshold, valid):
+    """Masked :func:`brsgd_select_mask`: both cutoffs are counting
+    quantiles over the ACTIVE workers (k = ⌈β·n_active⌉ clamped ≥ 1;
+    auto-𝔗 = lower quartile of the active l1 at the dynamic
+    :func:`quantile_index_dyn`), and no mask ever selects a dropped
+    worker.  With a full mask this reduces to the static selection (same
+    cutoff values, same tie rules)."""
+    m = scores.shape[0]
+    v = valid.astype(bool)
+    na = jnp.maximum(jnp.sum(v.astype(jnp.int32)), 1)
+    k = jnp.clip(jnp.ceil(beta * na.astype(jnp.float32)).astype(jnp.int32),
+                 1, na)
+    # dropped slots take -inf scores / +inf l1, so active order
+    # statistics sit in known rank windows of the full m-vector:
+    # the k-th-from-top active score is ascending rank m - k
+    kth = rank_select(jnp.where(v, scores, -jnp.inf), m - k)
+    T = jnp.where(threshold > 0, threshold,
+                  rank_select(jnp.where(v, l1, jnp.inf),
+                              quantile_index_dyn(0.25, na)))
+    c1 = v & (l1 <= 2.0 * T)
+    c2 = v & (scores >= kth)
+    sel = c1 & c2
+    sel = jnp.where(jnp.any(sel), sel, c2)
+    return sel, c1, c2, T

@@ -52,6 +52,14 @@ def main(argv=None):
     ap.add_argument("--membership", default="prefix",
                     choices=["prefix", "random", "resample"],
                     help="byzantine-membership policy (core.threat)")
+    ap.add_argument("--quorum", type=int, default=0,
+                    help="fire aggregation once this many workers have "
+                         "arrived (0 = synchronous full round); opts the "
+                         "step into the elastic path (DESIGN.md §Elastic)")
+    ap.add_argument("--straggle", default="none",
+                    help="arrival-delay distribution dist[:scale], dist in "
+                         "none|exp|pareto — e.g. 'exp:0.5' (data.pipeline."
+                         "ArrivalSchedule)")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--agg-layout", default="auto")
@@ -64,14 +72,17 @@ def main(argv=None):
     import jax
     import jax.numpy as jnp
 
+    import dataclasses
+
     from ..checkpoint import ckpt
     from ..configs import ByzantineConfig, TrainConfig, get_config
     from ..core import engine, threat
-    from ..data.pipeline import LMWorkerPipeline
+    from ..data.pipeline import (STRAGGLE_DISTS, ArrivalSchedule,
+                                 LMWorkerPipeline)
     from ..launch.mesh import n_workers
     from ..models import params as PM
     from ..models import transformer as TF
-    from ..training.step import build_train_step
+    from ..training.step import build_train_step, resolve_strategy
 
     if args.aggregator not in engine.registered():
         ap.error(f"--aggregator {args.aggregator!r}: "
@@ -79,6 +90,13 @@ def main(argv=None):
     if args.attack != "none" and args.attack not in threat.registered():
         ap.error(f"--attack {args.attack!r}: choose from none, "
                  f"{', '.join(threat.registered())}")
+    straggle, straggle_scale = args.straggle, 1.0
+    if ":" in straggle:
+        straggle, s = straggle.split(":", 1)
+        straggle_scale = float(s)
+    if straggle not in STRAGGLE_DISTS:
+        ap.error(f"--straggle {args.straggle!r}: dist must be one of "
+                 f"{', '.join(STRAGGLE_DISTS)}")
     mesh = build_mesh(args.mesh)
     cfg = get_config(args.arch)
     if args.reduced:
@@ -88,6 +106,23 @@ def main(argv=None):
     tcfg = TrainConfig(model=cfg, byzantine=bcfg, optimizer=args.optimizer,
                        lr=args.lr, agg_layout=args.agg_layout,
                        agg_scope=args.agg_scope, remat=args.remat)
+
+    # elastic rounds: any of --quorum, a straggle distribution, or a
+    # timing-scope attack drops the synchronous-round assumption.  The
+    # worker-slot count is scope-dependent (blocked folds 'model' into
+    # the worker set), so resolve the scope before sizing max_m.
+    timing = (args.attack != "none"
+              and threat.get_spec(args.attack).scope == "timing")
+    elastic = args.quorum > 0 or straggle != "none" or timing
+    sched = None
+    if elastic:
+        scope, _ = resolve_strategy(tcfg)
+        m = n_workers(mesh, scope)
+        quorum = args.quorum or m
+        bcfg = dataclasses.replace(bcfg, max_m=m, quorum=quorum)
+        tcfg = dataclasses.replace(tcfg, byzantine=bcfg)
+        sched = ArrivalSchedule(m, quorum, straggle, straggle_scale,
+                                byz=bcfg, seed=tcfg.seed)
 
     bundle = build_train_step(tcfg, mesh)
     # blocked scope folds every mesh axis (incl. 'model') into the
@@ -115,16 +150,25 @@ def main(argv=None):
         for step in range(args.steps):
             batch = {k: jax.device_put(jnp.asarray(v), bsh[k])
                      for k, v in pipe.batch(step).items()}
-            params, opt_state, met = bundle.step_fn(
-                params, opt_state, batch, jnp.int32(step),
-                jax.random.fold_in(key, step))
+            n_active = m
+            if sched is not None:
+                active = sched.active(step)
+                n_active = int(active.sum())
+                params, opt_state, met = bundle.step_fn(
+                    params, opt_state, batch, jnp.int32(step),
+                    jax.random.fold_in(key, step), jnp.asarray(active))
+            else:
+                params, opt_state, met = bundle.step_fn(
+                    params, opt_state, batch, jnp.int32(step),
+                    jax.random.fold_in(key, step))
             if step % args.log_every == 0 or step == args.steps - 1:
                 met = {k: float(v) for k, v in met.items()}
-                history.append({"step": step, **met})
+                history.append({"step": step, "n_active": n_active, **met})
+                act_s = f" active={n_active}/{m}" if sched is not None else ""
                 print(f"step {step:4d} loss={met['loss']:.4f} "
                       f"gnorm={met['gnorm']:.3f} "
                       f"selected={met['n_selected']:.1f}/{m} "
-                      f"(bucket min {met['n_selected_min']:.0f})",
+                      f"(bucket min {met['n_selected_min']:.0f})" + act_s,
                       flush=True)
 
     dt = time.time() - t_start

@@ -132,15 +132,21 @@ def _build_blocked_step(tcfg, mesh, opt, layout):
     bspecs = batch_specs_for(cfg, waxes)
     remat = tcfg.remat == "block"
     metric_spec = P()
+    elastic = bcfg.elastic
+    # the per-step active mask is a TRACED [m] f32 arg (replicated):
+    # one compiled step serves every active set up to m slots —
+    # changing who straggles never recompiles (DESIGN.md §Elastic)
+    extra = (P(),) if elastic else ()
 
     @partial(shard_map, mesh=mesh,
-             in_specs=(pspecs, ospecs, bspecs, P(), P()),
+             in_specs=(pspecs, ospecs, bspecs, P(), P(), *extra),
              out_specs=(pspecs, ospecs, {"loss": metric_spec, "ce": metric_spec,
                                          "gnorm": metric_spec,
                                          "n_selected": metric_spec,
                                          "n_selected_min": metric_spec}),
              axis_names=set(waxes), check_vma=False)
-    def step(params, opt_state, batch, step_idx, key):
+    def step(params, opt_state, batch, step_idx, key, *rest):
+        activef = rest[0] if elastic else None
         lbatch = _local_batch(batch)
         lspecs = {k: _layer_slice_specs(v) for k, v in pspecs.items()
                   if k.startswith("seg_")}
@@ -152,20 +158,28 @@ def _build_blocked_step(tcfg, mesh, opt, layout):
         # buckets and layers, while byzantine membership is drawn
         # from the unfolded key so all buckets corrupt ONE worker
         # set (threat.membership_mask, incl. the resample policy)
-        barriers = {k: make_fsdp_agg_barrier(v, bcfg, waxes, k)
+        barriers = {k: make_fsdp_agg_barrier(v, bcfg, waxes, k,
+                                             elastic=elastic)
                     for k, v in lspecs.items()}
-        top_barrier = make_fsdp_agg_barrier(top_specs, bcfg, waxes, "top")
+        top_barrier = make_fsdp_agg_barrier(top_specs, bcfg, waxes, "top",
+                                            elastic=elastic)
         keyf = key_carrier(key)
         toks = {k: selection_token(m) for k in (*barriers, "top")}
 
         def lfn(params, toks):
-            hooks = {k: (lambda p, i, b=b, t=toks[k]: b(p, t, i, keyf))
-                     for k, b in barriers.items()}
+            if elastic:
+                hooks = {k: (lambda p, i, b=b, t=toks[k]:
+                             b(p, t, i, keyf, activef))
+                         for k, b in barriers.items()}
+                top_hook = lambda p: top_barrier(
+                    p, toks["top"], jnp.float32(0), keyf, activef)
+            else:
+                hooks = {k: (lambda p, i, b=b, t=toks[k]: b(p, t, i, keyf))
+                         for k, b in barriers.items()}
+                top_hook = lambda p: top_barrier(
+                    p, toks["top"], jnp.float32(0), keyf)
             return TF.loss_fn(cfg, params, lbatch, remat=remat,
-                              seg_hooks=hooks,
-                              top_hook=lambda p: top_barrier(
-                                  p, toks["top"], jnp.float32(0),
-                                  keyf))
+                              seg_hooks=hooks, top_hook=top_hook)
 
         (loss, met), (agg, tgrads) = jax.value_and_grad(
             lfn, argnums=(0, 1), has_aux=True)(params, toks)
@@ -231,26 +245,35 @@ def _build_global_step(tcfg, mesh, opt, layout):
     bspecs = batch_specs_for(cfg, waxes)
     remat = tcfg.remat == "block"
     is_pspec = lambda x: isinstance(x, P)
+    elastic = bcfg.elastic
+    extra = (P(),) if elastic else ()
 
     # full-manual aggregation region: worker collectives in any engine
     # layout lower cleanly; leaves arrive as [1, *model-local shard]
     gb_in = jax.tree.map(lambda s: P(wspec, *s), pspecs, is_leaf=is_pspec)
 
-    @partial(shard_map, mesh=mesh, in_specs=(gb_in, P()),
+    @partial(shard_map, mesh=mesh, in_specs=(gb_in, P(), *extra),
              out_specs=(pspecs, P()),
              axis_names=set(mesh.axis_names), check_vma=False)
-    def agg_region(gstack, key):
+    def agg_region(gstack, key, *rest):
+        activef = rest[0] if elastic else None
         local = jax.tree.map(lambda g: g.reshape(g.shape[1:]), gstack)
         local = threat.inject(local, key, bcfg, waxes,
-                              leaf_specs=pspecs, model_axes=maxes)
+                              leaf_specs=pspecs, model_axes=maxes,
+                              active=activef)
         agg, st = robust_aggregate(local, bcfg, waxes, layout=layout,
                                    flatten_columns=True,
-                                   model_axes=maxes, leaf_specs=pspecs)
-        n_sel = (jnp.sum(st.selected.astype(jnp.float32))
-                 if st is not None else jnp.float32(m))
+                                   model_axes=maxes, leaf_specs=pspecs,
+                                   valid=activef)
+        if st is not None:
+            n_sel = jnp.sum(st.selected.astype(jnp.float32))
+        elif elastic:
+            n_sel = jnp.sum((activef > 0).astype(jnp.float32))
+        else:
+            n_sel = jnp.float32(m)
         return agg, n_sel
 
-    def step(params, opt_state, batch, step_idx, key):
+    def step(params, opt_state, batch, step_idx, key, *rest):
         def wloss(p, wbatch):
             return TF.loss_fn(cfg, p, wbatch, remat=remat)
 
@@ -263,7 +286,7 @@ def _build_global_step(tcfg, mesh, opt, layout):
             lambda g, s: jax.lax.with_sharding_constraint(
                 g, NamedSharding(mesh, P(wspec, *s))),
             grads, pspecs, is_leaf=is_pspec)
-        agg, n_sel = agg_region(grads, key)
+        agg, n_sel = agg_region(grads, key, *rest)
         new_params, new_opt = opt.update(agg, opt_state, params, step_idx)
         gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                              for g in jax.tree.leaves(agg)))
@@ -278,11 +301,43 @@ def _build_global_step(tcfg, mesh, opt, layout):
 def build_train_step(tcfg: TrainConfig, mesh, jit: bool = True) -> StepBundle:
     """``jit=False`` returns the raw (unjitted) step callable — the
     static-analysis driver (``repro.launch.lint``) traces it with
-    ``jax.make_jaxpr`` without a pjit wrapper around the whole step."""
+    ``jax.make_jaxpr`` without a pjit wrapper around the whole step.
+
+    When ``tcfg.byzantine`` is elastic (quorum/max_m set — DESIGN.md
+    §Elastic) the returned step takes a sixth argument ``active`` ([m]
+    0/1, who reached this round's quorum), defaulting to all-ones.  The
+    mask is traced, so steps at m, m−2, m+2 active workers share ONE
+    executable.  Passing ``active`` to a non-elastic step is an error —
+    the fixed-m graphs would silently ignore it."""
     opt = get_optimizer(tcfg)
     scope, layout = resolve_strategy(tcfg)
+    bcfg = tcfg.byzantine
+    m = n_workers(mesh, scope)
+    if bcfg.elastic:
+        if bcfg.max_m and bcfg.max_m != m:
+            raise ValueError(
+                f"ByzantineConfig.max_m={bcfg.max_m} does not match the "
+                f"mesh's {m} worker slots for scope={scope!r}")
+        if bcfg.quorum > m:
+            raise ValueError(
+                f"ByzantineConfig.quorum={bcfg.quorum} exceeds the mesh's "
+                f"{m} worker slots for scope={scope!r}")
     build = _build_blocked_step if scope == "blocked" else _build_global_step
-    step, pspecs, ospecs, bspecs = build(tcfg, mesh, opt, layout)
+    inner, pspecs, ospecs, bspecs = build(tcfg, mesh, opt, layout)
+
+    if bcfg.elastic:
+        def step(params, opt_state, batch, step_idx, key, active=None):
+            act = (jnp.ones((m,), jnp.float32) if active is None
+                   else jnp.asarray(active, jnp.float32))
+            return inner(params, opt_state, batch, step_idx, key, act)
+    else:
+        def step(params, opt_state, batch, step_idx, key, active=None):
+            if active is not None:
+                raise ValueError(
+                    "active mask passed to a non-elastic step; set "
+                    "ByzantineConfig.quorum (or max_m) to opt in")
+            return inner(params, opt_state, batch, step_idx, key)
+
     if jit:
         step = jax.jit(step, donate_argnums=(0, 1))
     return StepBundle(step, pspecs, ospecs, bspecs, scope, layout)

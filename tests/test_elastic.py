@@ -1,0 +1,440 @@
+"""Elastic quorum aggregation (DESIGN.md §Elastic): the fixed-m
+synchronous-round assumption is gone across engine, threat, blocked and
+step layers.
+
+Pins the four contracts the elastic path makes:
+
+  * streaming fold — folding any permutation/partition of worker
+    partials (``engine.stream_leaf_stats``) is BIT-exact with the bulk
+    masked ``leaf_stats`` pass, for every registered aggregator's
+    statistic set (arrival order must not change a single ulp).
+  * masking — dropped workers contribute exact zeros, are never
+    selected, and byzantine membership/counts draw over the ACTIVE set.
+  * zero recompiles — one compiled step serves every active set: the
+    per-step active mask is a traced argument, so running at m, m−2 and
+    m+2 active workers adds ZERO cache entries after warm-up, on both
+    mesh families and both scopes.
+  * truthful accounting — ``n_selected`` ≤ the round's active count
+    under every attack, from both scopes.
+
+Single-host (in-process) pieces run directly; everything needing a mesh
+runs via ``conftest.run_multidevice`` like the other distributed
+suites.
+"""
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import meshes
+from conftest import run_multidevice
+
+from repro.configs.base import ByzantineConfig
+from repro.core import engine, threat
+from repro.data.pipeline import ArrivalSchedule, timing_attack_spec
+from repro.kernels import ref
+
+
+# ---------------------------------------------------------------------------
+# config validation (quorum vs honest-majority bound)
+# ---------------------------------------------------------------------------
+
+def test_config_rejects_dishonest_quorum():
+    """quorum ≤ 2·n_byzantine must be rejected at construction, naming
+    the bound — a quorum the attacker can majority-control is not a
+    configuration, it is a defeat."""
+    with pytest.raises(ValueError, match="quorum > 2\\*n_byzantine"):
+        ByzantineConfig(alpha=0.5, quorum=10)
+    with pytest.raises(ValueError, match="quorum > 2\\*n_byzantine"):
+        ByzantineConfig(alpha=0.67, quorum=3)     # n_byz=2: 3 ≤ 4
+    # boundary cases that MUST pass: n_byz drawn over the active set
+    assert ByzantineConfig(alpha=0.25, quorum=10).elastic
+    assert ByzantineConfig(alpha=0.25, quorum=10, max_m=20).elastic
+    with pytest.raises(ValueError):
+        ByzantineConfig(quorum=12, max_m=8)       # quorum exceeds slots
+    with pytest.raises(ValueError):
+        ByzantineConfig(quorum=-1)
+    assert not ByzantineConfig(alpha=0.25).elastic
+
+
+def test_config_bound_is_over_active_set():
+    """The bound uses n_byzantine = floor(alpha·quorum) — the byzantine
+    count of the ACTIVE set, not of max_m — so a q = 0.5·m round at
+    alpha = 0.25 is legal while alpha ≥ 0.5 never is."""
+    cfg = ByzantineConfig(alpha=0.25, quorum=10, max_m=20)   # q = 0.5 m
+    assert cfg.quorum == 10 and cfg.elastic
+    for alpha in (0.5, 0.6):
+        with pytest.raises(ValueError, match="n_byzantine"):
+            ByzantineConfig(alpha=alpha, quorum=10, max_m=20)
+
+
+# ---------------------------------------------------------------------------
+# streaming fold == bulk, every registered aggregator
+# ---------------------------------------------------------------------------
+
+def test_streaming_fold_bitexact_every_aggregator(rng):
+    """For EVERY registered aggregator's statistic set: fold the
+    arrival buckets of a permuted, partitioned worker set (with
+    stragglers that never arrive) and compare against the bulk masked
+    pass — exact array equality, no tolerance."""
+    m, d = 10, 37
+    G = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32) * 10)
+    for agg in engine.registered():
+        spec = engine.get_spec(agg)
+        needs = tuple(spec.stats)
+        if not needs:
+            continue        # column rules / mean: no statistics pass
+        for trial in range(3):
+            perm = rng.permutation(m)
+            n_arrived = int(rng.integers(3, m + 1))
+            arrived = perm[:n_arrived]
+            n_buckets = int(rng.integers(1, n_arrived + 1))
+            bucket_of = rng.integers(0, n_buckets, size=n_arrived)
+            arrival = np.zeros((n_buckets, m), np.float32)
+            arrival[bucket_of, arrived] = 1.0
+            valid = arrival.sum(axis=0)
+
+            state = engine.stream_leaf_stats(G, needs, m,
+                                             jnp.asarray(arrival))
+            bulk = engine.leaf_stats(G, needs, m, use_pallas=False,
+                                     valid=jnp.asarray(valid))
+            for k in needs:
+                np.testing.assert_array_equal(
+                    np.asarray(state.stats[k]), np.asarray(bulk[k]),
+                    err_msg=f"{agg}/{k} trial {trial}")
+            np.testing.assert_array_equal(np.asarray(state.valid), valid)
+
+
+def test_fold_stats_is_pure_addition():
+    """fold_stats is dict addition over disjoint slots — associative and
+    commutative by IEEE x + 0.0 == x, the property the scan relies on."""
+    m = 6
+    s0 = engine.init_stream(("scores", "l1"), m)
+    p1 = {"scores": jnp.zeros(m).at[1].set(3.0),
+          "l1": jnp.zeros(m).at[1].set(2.0)}
+    p2 = {"scores": jnp.zeros(m).at[4].set(5.0),
+          "l1": jnp.zeros(m).at[4].set(7.0)}
+    v1 = jnp.zeros(m).at[1].set(1.0)
+    v2 = jnp.zeros(m).at[4].set(1.0)
+    a = engine.fold_stats(engine.fold_stats(s0, p1, v1), p2, v2)
+    b = engine.fold_stats(engine.fold_stats(s0, p2, v2), p1, v1)
+    for k in a.stats:
+        np.testing.assert_array_equal(np.asarray(a.stats[k]),
+                                      np.asarray(b.stats[k]))
+    np.testing.assert_array_equal(np.asarray(a.valid), np.asarray(b.valid))
+
+
+# ---------------------------------------------------------------------------
+# quorum selection + masked aggregation (local executor)
+# ---------------------------------------------------------------------------
+
+def test_stream_aggregate_takes_quorum_prefix(rng):
+    """Selection fires once quorum workers have arrived: later arrivals
+    are dropped, n_selected ≤ quorum, and the aggregate equals the
+    masked local pass over exactly the quorum prefix."""
+    m, d, q = 10, 29, 6
+    G = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    cfg = ByzantineConfig(aggregator="brsgd", alpha=0.25, quorum=q, max_m=m)
+    # arrival buckets: 4 workers, then 3, then 3 — quorum hits mid-stream
+    arrival = np.zeros((3, m), np.float32)
+    arrival[0, [2, 5, 7, 9]] = 1
+    arrival[1, [0, 1, 3]] = 1
+    arrival[2, [4, 6, 8]] = 1
+    agg, st = engine.stream_aggregate(G, cfg, jnp.asarray(arrival),
+                                      return_state=True)
+    active = np.asarray(engine.arrival_active(jnp.asarray(arrival), q))
+    assert active.sum() == q
+    # the prefix by arrival order: bucket 0 fully, then 2 of bucket 1
+    assert set(np.where(active > 0)[0]) == {2, 5, 7, 9, 0, 1}
+    sel = np.asarray(st.selected)
+    assert sel.sum() <= q
+    assert not (sel & (active == 0)).any()      # late workers never selected
+    want, _ = engine.aggregate_local(G, cfg, return_state=True,
+                                     valid=jnp.asarray(active))
+    np.testing.assert_array_equal(np.asarray(agg), np.asarray(want))
+
+
+def test_masked_selection_never_selects_inactive(rng):
+    """Every registered aggregator: dropped workers carry zero weight,
+    the aggregate is finite, and n_selected ≤ n_active."""
+    m, d = 9, 21
+    G = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    valid = jnp.asarray(np.array([1, 0, 1, 1, 0, 1, 1, 0, 1], np.float32))
+    na = int(np.asarray(valid).sum())
+    for agg in engine.registered():
+        cfg = ByzantineConfig(aggregator=agg, alpha=0.2)
+        out, st = engine.aggregate_local(G, cfg, return_state=True,
+                                         valid=valid)
+        assert np.isfinite(np.asarray(out)).all(), agg
+        sel = np.asarray(st.selected)
+        assert not (sel & (np.asarray(valid) == 0)).any(), agg
+        assert sel.sum() <= na, agg
+
+
+def test_masked_workers_are_exact_zeros_not_poison(rng):
+    """The masking contract: NaN/inf garbage in a dropped worker's row
+    must not reach any statistic or the aggregate (where-masking, never
+    multiplication — 0·inf = NaN)."""
+    m, d = 8, 13
+    G = rng.normal(size=(m, d)).astype(np.float32)
+    G[3] = np.nan
+    G[6] = np.inf
+    valid = jnp.asarray(np.array([1, 1, 1, 0, 1, 1, 0, 1], np.float32))
+    for agg in engine.registered():
+        cfg = ByzantineConfig(aggregator=agg, alpha=0.2)
+        out = engine.aggregate_local(jnp.asarray(G), cfg, valid=valid)
+        assert np.isfinite(np.asarray(out)).all(), agg
+
+
+# ---------------------------------------------------------------------------
+# threat layer over the active set
+# ---------------------------------------------------------------------------
+
+def test_membership_draws_over_active_set():
+    """n_byzantine = floor(alpha·n_active) and the mask never lands on a
+    dropped worker, for every membership policy."""
+    m = 12
+    active = jnp.asarray(
+        np.array([1, 1, 0, 1, 1, 1, 0, 1, 1, 0, 1, 1], np.float32))
+    na = int(np.asarray(active).sum())      # 9 active
+    for policy in ("prefix", "random", "resample"):
+        cfg = ByzantineConfig(attack="gaussian", alpha=0.25,
+                              membership=policy)
+        mask = np.asarray(threat.membership_mask(
+            cfg, m, key=jax.random.PRNGKey(3), active=active))
+        assert mask.sum() == int(0.25 * na), policy
+        assert not (mask & (np.asarray(active) == 0)).any(), policy
+
+
+def test_apply_dense_never_touches_inactive(rng):
+    """Gradient attacks only corrupt ACTIVE byzantine workers — a
+    stalled machine cannot also submit a poisoned gradient."""
+    m, d = 8, 17
+    G = jnp.asarray(rng.normal(size=(m, d)).astype(np.float32))
+    active = jnp.asarray(np.array([1, 1, 1, 1, 0, 0, 1, 1], np.float32))
+    cfg = ByzantineConfig(attack="scale", alpha=0.5, membership="prefix")
+    out = np.asarray(threat.apply_dense(G, jax.random.PRNGKey(0), cfg,
+                                        active=active))
+    changed = np.any(out != np.asarray(G), axis=1)
+    assert not changed[4] and not changed[5]
+    assert changed.sum() == int(0.5 * 6)    # floor(alpha · n_active)
+
+
+def test_stall_attack_and_arrival_schedule():
+    """The timing scope end-to-end host-side: 'stall' pins byzantine
+    delays to +inf, the schedule never activates them, and honest
+    stragglers fill the quorum instead."""
+    m, q = 8, 6
+    cfg = ByzantineConfig(attack="stall", alpha=0.25, membership="prefix",
+                          quorum=q, max_m=m)
+    spec = threat.get_spec("stall")
+    assert spec.scope == "timing" and spec.delay is not None
+    assert timing_attack_spec(cfg) is spec
+    # timing attacks do not touch gradients
+    assert not threat.is_gradient_attack(cfg)
+
+    sched = ArrivalSchedule(m, q, straggle="exp", scale=0.5, byz=cfg, seed=1)
+    for step in range(5):
+        d = sched.delays(step)
+        is_byz = threat.data_membership(cfg, m, step)
+        assert np.isinf(d[is_byz]).all(), step
+        act = sched.active(step)
+        assert act.sum() == q, step
+        assert not act[is_byz].any(), step
+    # schedules are reproducible and step-keyed
+    np.testing.assert_array_equal(sched.delays(3), sched.delays(3))
+    assert (sched.delays(3) != sched.delays(4)).any()
+
+
+def test_arrival_schedule_validation():
+    with pytest.raises(ValueError, match="straggle"):
+        ArrivalSchedule(8, 6, straggle="weibull")
+    with pytest.raises(ValueError, match="quorum"):
+        ArrivalSchedule(8, 9)
+    # no straggle + no timing attack: everyone arrives at t=0, the
+    # stable argsort keeps worker order for the quorum prefix
+    act = ArrivalSchedule(8, 6).active(0)
+    np.testing.assert_array_equal(act, [1, 1, 1, 1, 1, 1, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# compiled step: zero recompiles across active sets + truthful n_selected
+# ---------------------------------------------------------------------------
+
+@pytest.mark.mesh_matrix
+@pytest.mark.parametrize("mesh_name", meshes.mesh_names())
+@pytest.mark.parametrize("scope", ["global", "blocked"])
+def test_elastic_step_zero_recompiles_and_truthful_nsel(mesh_name, scope):
+    """ONE compiled step executes at m, m−2 and m+2 active workers with
+    zero recompiles: after warm-up the jit cache size must not grow as
+    the active mask varies (the mask is a traced argument).  Under a
+    scale attack at quorum q = 0.75·slots, n_selected stays ≤ the
+    round's active count (truthful accounting) and the loss stays
+    finite — from BOTH scopes on BOTH mesh families."""
+    gm = 4 if mesh_name == "dm" else 8
+    code = meshes.preamble(mesh_name, gm) + textwrap.dedent(f"""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import ARCHS, TrainConfig, ByzantineConfig
+        from repro.training.step import build_train_step
+        from repro.models import transformer as TF, params as PM
+        from repro.data.pipeline import LMWorkerPipeline
+        from repro.launch.mesh import n_workers
+
+        scope = {scope!r}
+        cfg = ARCHS["qwen3-0.6b"].reduced()
+        bcfg = ByzantineConfig(aggregator="brsgd", attack="scale",
+                               alpha=0.25, membership="prefix")
+        tcfg = TrainConfig(model=cfg, byzantine=bcfg, optimizer="sgd",
+                           lr=0.05, agg_scope=scope,
+                           agg_layout="a2a" if scope == "global" else "auto")
+        slots = n_workers(mesh, scope)
+        q = max(3, int(0.75 * slots))
+        bcfg = dataclasses.replace(bcfg, max_m=slots, quorum=q)
+        tcfg = dataclasses.replace(tcfg, byzantine=bcfg)
+        bundle = build_train_step(tcfg, mesh)
+        psh, osh, bsh = bundle.shardings(mesh)
+        key = jax.random.PRNGKey(0)
+        params = jax.device_put(PM.init_params(TF.param_defs(cfg), key), psh)
+        pipe = LMWorkerPipeline(cfg, slots, 2, 32, byz=bcfg)
+
+        def one(s, n_active, params):
+            act = np.zeros(slots, np.float32); act[:n_active] = 1
+            batch = {{k: jax.device_put(jnp.asarray(v), bsh[k])
+                      for k, v in pipe.batch(s).items()}}
+            params, _, met = bundle.step_fn(params, (), batch,
+                                            jnp.int32(s),
+                                            jax.random.fold_in(key, s),
+                                            jnp.asarray(act))
+            jax.block_until_ready(met["loss"])
+            return params, {{k: float(v) for k, v in met.items()}}
+
+        # nominal m = q active; the sweep runs m−2, m, m+2 (m+2 capped
+        # at the slot count for the small dm-global mesh)
+        counts = [q - 2, q, min(q + 2, slots)]
+        with mesh:
+            # warm-up to the steady-state cache (the first returned
+            # params carry a different layout than device_put's — one
+            # pre-existing extra entry, independent of elasticity)
+            for s in range(2):
+                params, met = one(s, q, params)
+            steady = bundle.step_fn._cache_size()
+            for s, na in enumerate(counts):
+                params, met = one(2 + s, na, params)
+                assert np.isfinite(met["loss"]), (na, met)
+                assert met["n_selected"] <= na + 1e-6, (na, met)
+                assert met["n_selected_min"] <= na + 1e-6, (na, met)
+                assert met["n_selected"] > 0, (na, met)
+                cs = bundle.step_fn._cache_size()
+                assert cs == steady, (na, cs, steady)
+        print("OK counts=" + str(counts) + " steady=" + str(steady))
+    """)
+    out = run_multidevice(code, n_devices=meshes.n_devices(mesh_name, gm),
+                          timeout=560)
+    assert "OK" in out
+
+
+def test_non_elastic_step_rejects_active_mask():
+    """Passing an active mask to a fixed-m step must be a loud error —
+    the non-elastic graphs would silently ignore it."""
+    code = textwrap.dedent("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import ARCHS, TrainConfig, ByzantineConfig
+        from repro.training.step import build_train_step
+        from repro.models import transformer as TF, params as PM
+        from repro.data.pipeline import LMWorkerPipeline
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((8,), ("data",))
+        cfg = ARCHS["qwen3-0.6b"].reduced()
+        tcfg = TrainConfig(model=cfg, byzantine=ByzantineConfig(),
+                           optimizer="sgd", agg_scope="global",
+                           agg_layout="a2a")
+        bundle = build_train_step(tcfg, mesh)
+        psh, osh, bsh = bundle.shardings(mesh)
+        key = jax.random.PRNGKey(0)
+        params = jax.device_put(PM.init_params(TF.param_defs(cfg), key), psh)
+        pipe = LMWorkerPipeline(cfg, 8, 2, 32)
+        batch = {k: jax.device_put(jnp.asarray(v), bsh[k])
+                 for k, v in pipe.batch(0).items()}
+        with mesh:
+            try:
+                bundle.step_fn(params, (), batch, jnp.int32(0), key,
+                               jnp.ones(8, jnp.float32))
+            except ValueError as e:
+                assert "non-elastic" in str(e), e
+                print("OK")
+            else:
+                raise AssertionError("active mask silently accepted")
+    """)
+    assert "OK" in run_multidevice(code, n_devices=8, timeout=560)
+
+
+def test_build_step_validates_quorum_against_mesh():
+    """max_m/quorum that disagree with the mesh's worker slots fail at
+    build time, naming both numbers."""
+    code = textwrap.dedent("""
+        from repro.configs import ARCHS, TrainConfig, ByzantineConfig
+        from repro.training.step import build_train_step
+        from repro.launch.mesh import make_mesh
+
+        mesh = make_mesh((8,), ("data",))
+        cfg = ARCHS["qwen3-0.6b"].reduced()
+        for bad in (ByzantineConfig(max_m=6, quorum=4),
+                    ByzantineConfig(quorum=12, max_m=16)):
+            tcfg = TrainConfig(model=cfg, byzantine=bad, optimizer="sgd",
+                               agg_scope="global", agg_layout="a2a")
+            try:
+                build_train_step(tcfg, mesh)
+            except ValueError as e:
+                assert "worker slots" in str(e), e
+            else:
+                raise AssertionError(f"accepted {bad}")
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code, n_devices=8, timeout=560)
+
+
+# ---------------------------------------------------------------------------
+# lint: real elastic traces are clean under masked-psum-validity
+# ---------------------------------------------------------------------------
+
+def test_elastic_traces_clean_under_masked_psum_rule():
+    """Both elastic scopes trace with zero masked-psum-validity
+    violations (the seeded-broken counterpart lives in
+    analysis.matrix.seeded_cases and is pinned by test_analysis /
+    ``lint --selftest``)."""
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax
+        from repro.analysis import jaxpr as ajaxpr, matrix
+        from repro.analysis.rules import RuleContext, run_rules
+        from repro.core import engine
+        from repro.launch.mesh import worker_axes
+        from repro.training.step import build_train_step
+
+        for layout in ("a2a", "gather", "blocked"):
+            tcfg = matrix.lint_train_config("brsgd", layout)
+            bcfg = dataclasses.replace(tcfg.byzantine, max_m=8, quorum=6,
+                                       alpha=0.25)
+            tcfg = dataclasses.replace(tcfg, byzantine=bcfg)
+            mesh = matrix.make_lint_mesh("flat")
+            bundle = build_train_step(tcfg, mesh, jit=False)
+            structs = matrix._step_structs(tcfg, bundle, mesh)
+            act = jax.ShapeDtypeStruct((8,), jax.numpy.float32)
+            contract = ajaxpr.extract(
+                jax.make_jaxpr(bundle.step_fn)(*structs, act),
+                meta={"ir": "jaxpr"})
+            ctx = RuleContext(case=f"elastic/{layout}", aggregator="brsgd",
+                              layout=layout, scope=bundle.scope,
+                              mesh_name="flat", m=8,
+                              spec=engine.get_spec("brsgd"), elastic=True,
+                              worker_axes=tuple(worker_axes(mesh,
+                                                            bundle.scope)))
+            vs = run_rules(contract, ctx, rules=["masked-psum-validity"])
+            assert not vs, [v.format() for v in vs]
+        print("OK")
+    """)
+    assert "OK" in run_multidevice(code, n_devices=8, timeout=560)

@@ -162,6 +162,41 @@ def test_fused_stats_additive_over_arbitrary_splits(G, cuts):
         np.asarray(whole["scores"]))
 
 
+@given(matrices(min_m=3, max_m=12, min_d=1, max_d=40), st.data())
+def test_streaming_fold_bitexact_with_bulk(G, data):
+    """The elastic streaming-accumulator contract (DESIGN.md §Elastic):
+    folding fused_stats partials over an ARBITRARY permutation and
+    partition of the worker axis — including workers that never arrive
+    (masked out) — is BIT-exact with the bulk masked leaf_stats pass,
+    for every subset of STAT_NAMES.  Arrival order must not change a
+    single ulp of any statistic, or quorum aggregation would depend on
+    who straggled."""
+    from repro.core import engine
+    m, d = G.shape
+    needs = tuple(sorted(data.draw(
+        st.sets(st.sampled_from(ref.STAT_NAMES), min_size=1))))
+    perm = data.draw(st.permutations(list(range(m))))
+    n_arrived = data.draw(st.integers(1, m))
+    arrived = perm[:n_arrived]
+    cuts = (sorted(data.draw(st.sets(st.integers(1, n_arrived - 1),
+                                     max_size=3)))
+            if n_arrived > 1 else [])
+    bounds = [0, *cuts, n_arrived]
+    arrival = np.zeros((len(bounds) - 1, m), np.float32)
+    for b, (a, e) in enumerate(zip(bounds, bounds[1:])):
+        arrival[b, arrived[a:e]] = 1.0
+    valid = arrival.sum(axis=0)
+
+    state = engine.stream_leaf_stats(jnp.asarray(G), needs, m,
+                                     jnp.asarray(arrival))
+    bulk = engine.leaf_stats(jnp.asarray(G), needs, m, use_pallas=False,
+                             valid=jnp.asarray(valid))
+    for k in needs:
+        np.testing.assert_array_equal(np.asarray(state.stats[k]),
+                                      np.asarray(bulk[k]), err_msg=k)
+    np.testing.assert_array_equal(np.asarray(state.valid), valid)
+
+
 @given(st.integers(2, 16), st.integers(1, 50))
 def test_identical_workers_all_selected(m, d):
     """If every worker reports the same gradient, nobody is filtered and
