@@ -1,5 +1,5 @@
 """Validate the committed ``BENCH_agg.json`` + ``BENCH_contracts.json``
-+ ``BENCH_robustness.csv`` schemas and metadata.
++ ``BENCH_robustness.csv`` + ``BENCH_serve.json`` schemas and metadata.
 
 Import-check tier: no timing, no devices — safe to run in CI on every
 PR (.github/workflows/ci.yml).  Guards the perf-trajectory contract:
@@ -12,9 +12,10 @@ regeneration fails loudly.
 
 Usage: ``PYTHONPATH=src python benchmarks/check_bench.py [FILE ...]``
 No arguments validates all committed files.  A ``.csv`` file is
-checked as the robustness matrix; a contracts JSON is recognized by
-its ``"kind": "contracts"`` stamp.  Exit code 0 when every file is
-valid, 1 with a message per violation otherwise.
+checked as the robustness matrix; JSON files dispatch on their
+``"kind"`` stamp (``"contracts"``, ``"serve"``, else the agg timing
+schema).  Exit code 0 when every file is valid, 1 with a message per
+violation otherwise.
 """
 from __future__ import annotations
 
@@ -35,6 +36,11 @@ CASE_KEYS = ("aggregator", "layout", "mesh", "scope", "counts", "bytes",
              "collective_bytes")
 SCHEMA = 2
 CONTRACTS_SCHEMA = 1
+SERVE_SCHEMA = 1
+SERVE_BATCHES = {1, 4, 16}
+SERVE_ROW_KEYS = ("batch", "requests", "steps", "p50_ms", "p99_ms",
+                  "tokens_per_s")
+SERVE_SWAP_KEYS = ("swaps", "stall_ms", "decode_compiles")
 
 
 def check(path: str) -> list:
@@ -232,6 +238,80 @@ def check_robustness(path: str) -> list:
     return errors
 
 
+def check_serve(path: str) -> list:
+    """Validate a BENCH_serve.json (written by ``benchmarks/
+    serve_bench.py``): provenance stamp, latency/throughput rows
+    covering batch sizes {1, 4, 16} with finite positive values and
+    p50 <= p99, and a swap section proving at least one hot swap
+    completed with a single decode compile."""
+    errors = []
+    try:
+        with open(path) as f:
+            bench = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+
+    if bench.get("schema") != SERVE_SCHEMA:
+        errors.append(f"serve schema must be {SERVE_SCHEMA}, "
+                      f"got {bench.get('schema')!r}")
+    if bench.get("kind") != "serve":
+        errors.append("missing 'kind': 'serve' stamp")
+    meta = bench.get("meta")
+    if not isinstance(meta, dict):
+        errors.append("missing 'meta' provenance stamp")
+    else:
+        for k in META_KEYS:
+            if not isinstance(meta.get(k), str) or not meta.get(k):
+                errors.append(f"meta.{k} must be a non-empty string")
+
+    rows = bench.get("rows")
+    if not isinstance(rows, list) or not rows:
+        return errors + ["'rows' must be a non-empty list"]
+    batches = set()
+    for i, r in enumerate(rows):
+        ctx = f"rows[{i}]"
+        if not isinstance(r, dict) or set(SERVE_ROW_KEYS) - set(r):
+            errors.append(f"{ctx}: needs keys {SERVE_ROW_KEYS}")
+            continue
+        ctx = f"rows[{i}] (batch={r['batch']})"
+        if not (isinstance(r["batch"], int) and r["batch"] > 0):
+            errors.append(f"{ctx}: batch must be a positive int")
+        else:
+            batches.add(r["batch"])
+        for k in ("requests", "steps"):
+            if not (isinstance(r[k], int) and r[k] > 0):
+                errors.append(f"{ctx}: {k} must be a positive int")
+        for k in ("p50_ms", "p99_ms", "tokens_per_s"):
+            v = r[k]
+            if not (isinstance(v, (int, float)) and math.isfinite(v)
+                    and v > 0):
+                errors.append(f"{ctx}: {k} must be positive finite")
+        if (isinstance(r["p50_ms"], (int, float))
+                and isinstance(r["p99_ms"], (int, float))
+                and r["p50_ms"] > r["p99_ms"]):
+            errors.append(f"{ctx}: p50_ms > p99_ms")
+    missing = SERVE_BATCHES - batches
+    if missing:
+        errors.append(f"missing batch sizes {sorted(missing)} — re-run "
+                      f"benchmarks/serve_bench.py")
+
+    swap = bench.get("swap")
+    if not isinstance(swap, dict) or set(SERVE_SWAP_KEYS) - set(swap):
+        return errors + [f"'swap' must be a dict with keys "
+                         f"{SERVE_SWAP_KEYS}"]
+    if not (isinstance(swap["swaps"], int) and swap["swaps"] >= 1):
+        errors.append("swap.swaps must be an int >= 1 — the bench must "
+                      "exercise a live hot swap")
+    st = swap["stall_ms"]
+    if not (isinstance(st, (int, float)) and math.isfinite(st)
+            and st >= 0):
+        errors.append("swap.stall_ms must be finite and non-negative")
+    if swap["decode_compiles"] != 1:
+        errors.append(f"swap.decode_compiles must be 1 (zero-recompile "
+                      f"hot swap), got {swap['decode_compiles']!r}")
+    return errors
+
+
 def _check_any(path: str) -> list:
     """Dispatch: ``.csv`` is the robustness matrix; JSON files on the
     ``kind`` stamp."""
@@ -242,14 +322,19 @@ def _check_any(path: str) -> list:
             kind = json.load(f).get("kind")
     except (OSError, json.JSONDecodeError) as e:
         return [f"{path}: unreadable ({e})"]
-    return check_contracts(path) if kind == "contracts" else check(path)
+    if kind == "contracts":
+        return check_contracts(path)
+    if kind == "serve":
+        return check_serve(path)
+    return check(path)
 
 
 def main(argv) -> int:
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     paths = argv[1:] or [os.path.join(root, "BENCH_agg.json"),
                          os.path.join(root, "BENCH_contracts.json"),
-                         os.path.join(root, "BENCH_robustness.csv")]
+                         os.path.join(root, "BENCH_robustness.csv"),
+                         os.path.join(root, "BENCH_serve.json")]
     errors = []
     for path in paths:
         errs = _check_any(path)

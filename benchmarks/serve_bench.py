@@ -1,0 +1,130 @@
+"""Serving benchmark: continuous-batching latency/throughput vs batch
+size, plus hot-swap stall time.
+
+For each slot count in ``BATCHES`` the scheduler serves a saturating
+synthetic request stream; p50/p99 per-token latency are percentiles over
+decode-step wall times (every live slot emits one token per step —
+serving/telemetry.py) after a warmup run absorbs the compiles.  The swap
+section times one forced checkpoint hot-swap under live decode and
+asserts the decode step never recompiled.
+
+Writes ``BENCH_serve.json`` at the repo root, stamped with the same
+backend/jax-version/git-rev provenance as BENCH_agg.json and validated
+by ``benchmarks/check_bench.py`` in CI:
+
+  PYTHONPATH=src python benchmarks/serve_bench.py [--arch qwen3-0.6b]
+"""
+from __future__ import annotations
+
+import argparse
+import datetime
+import json
+import os
+import subprocess
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.models import params as PM
+from repro.models import transformer as TF
+from repro.serving import HotSwapper, ServeLoop
+from repro.serving.telemetry import ServeMetrics, _percentile
+
+BATCHES = [1, 4, 16]
+PROMPT_LEN, GEN = 16, 32
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_PATH = os.path.join(REPO, "BENCH_serve.json")
+SERVE_SCHEMA = 1
+
+
+def bench_meta() -> dict:
+    try:
+        rev = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=REPO, capture_output=True, text=True,
+                             timeout=10).stdout.strip() or "unknown"
+    except (OSError, subprocess.SubprocessError):
+        rev = "unknown"
+    return {"backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "git_rev": rev,
+            "date": datetime.date.today().isoformat()}
+
+
+def _submit_stream(loop, rng, n, vocab):
+    for _ in range(n):
+        loop.submit(rng.randint(0, vocab, size=PROMPT_LEN), max_new=GEN)
+
+
+def bench_batch(cfg, params, max_batch: int, seed: int = 0) -> dict:
+    loop = ServeLoop(cfg, max_batch, PROMPT_LEN + GEN, params=params)
+    rng = np.random.RandomState(seed)
+    _submit_stream(loop, rng, max_batch, cfg.vocab)     # warmup: compiles
+    loop.run()
+    loop.metrics = ServeMetrics()                       # measured run
+    n_req = 2 * max_batch
+    _submit_stream(loop, rng, n_req, cfg.vocab)
+    loop.run()
+    snap = loop.metrics.snapshot()
+    lat = sorted(loop.metrics.step_lat_s)
+    return {"batch": max_batch,
+            "requests": n_req,
+            "steps": len(lat),
+            "p50_ms": _percentile(lat, 0.50) * 1e3,
+            "p99_ms": _percentile(lat, 0.99) * 1e3,
+            "tokens_per_s": snap["tokens_per_s"]}
+
+
+def bench_swap(cfg, params, seed: int = 0) -> dict:
+    """One forced hot swap under live decode; stall = restore+flip time."""
+    d = tempfile.mkdtemp(prefix="repro_swapbench_")
+    ckpt.save(d, params, step=1)
+    swapper = HotSwapper(d, like=params)
+    loop = ServeLoop(cfg, 4, PROMPT_LEN + GEN, swapper=swapper)
+    rng = np.random.RandomState(seed)
+    _submit_stream(loop, rng, 8, cfg.vocab)
+
+    def on_step(lp, s):
+        if s == 4:
+            ckpt.save(d, jax.tree.map(lambda x: x * 1.01, params), step=2)
+
+    done = loop.run(on_step=on_step)
+    assert len(done) == 8 and swapper.swap_count >= 1
+    compiles = loop.decode_compiles()
+    assert compiles == 1, f"decode recompiled across the swap: {compiles}"
+    return {"swaps": swapper.swap_count,
+            "stall_ms": swapper.swap_stall_s * 1e3,
+            "decode_compiles": compiles}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--out", default=BENCH_PATH)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch).reduced()
+    params = PM.init_params(TF.param_defs(cfg), jax.random.PRNGKey(0))
+    rows = []
+    for b in BATCHES:
+        row = bench_batch(cfg, params, b)
+        rows.append(row)
+        print(f"batch={b:3d} p50={row['p50_ms']:.2f}ms "
+              f"p99={row['p99_ms']:.2f}ms "
+              f"tokens/s={row['tokens_per_s']:.0f}")
+    swap = bench_swap(cfg, params)
+    print(f"swap: {swap['swaps']} swap(s), stall={swap['stall_ms']:.1f}ms, "
+          f"{swap['decode_compiles']} decode compile")
+    bench = {"schema": SERVE_SCHEMA, "kind": "serve", "meta": bench_meta(),
+             "arch": cfg.name, "prompt_len": PROMPT_LEN, "gen": GEN,
+             "rows": rows, "swap": swap}
+    with open(args.out, "w") as f:
+        json.dump(bench, f, indent=1)
+    print(f"wrote {args.out}")
+    return bench
+
+
+if __name__ == "__main__":
+    main()

@@ -4,6 +4,13 @@ Saves a pytree of arrays as one ``.npz`` per save plus a JSON treedef
 manifest.  Arrays are gathered to host (fine at example scale; the
 dry-run path never checkpoints).  Restore rebuilds the exact pytree and
 optionally re-places leaves onto provided shardings.
+
+Write protocol (the hot-swap watcher depends on it — DESIGN.md §Serve):
+every file lands via temp-name + ``os.rename`` (atomic on POSIX), and
+the JSON manifest is written LAST.  ``latest_step`` only reports steps
+whose manifest exists, so a reader polling the directory can never
+observe a torn checkpoint: either the step is invisible, or its ``.npz``
+is complete.
 """
 from __future__ import annotations
 
@@ -20,36 +27,99 @@ def _flatten_with_paths(tree):
     out = {}
     for path, leaf in flat:
         key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        out[key] = np.asarray(leaf)
+        a = np.asarray(leaf)
+        if a.dtype.kind == "V":
+            # ml_dtypes leaf (bfloat16/fp8): npz stores it as raw void
+            # and the identity is unrecoverable on load — widen to
+            # float32 (lossless) and let restore cast back to like's
+            # dtype
+            a = a.astype(np.float32)
+        out[key] = a
     return out
 
 
-def save(path: str, tree, step: int = 0, extra: Optional[dict] = None):
+def _atomic_write(path: str, write_fn):
+    """Write via a temp name in the same directory, then rename."""
+    tmp = path + ".tmp"
+    write_fn(tmp)
+    os.rename(tmp, path)
+
+
+def save(path: str, tree, step: int = 0, extra: Optional[dict] = None) -> str:
+    """Atomically save ``tree`` as step ``step``; returns the npz path.
+
+    The ``.npz`` renames into place first, the manifest last — a crash
+    between the two leaves an orphan ``.npz`` that ``latest_step``
+    skips (cleaned up by the next save of the same step)."""
     os.makedirs(path, exist_ok=True)
     arrays = _flatten_with_paths(tree)
-    np.savez(os.path.join(path, f"step_{step:08d}.npz"), **arrays)
+    npz = os.path.join(path, f"step_{step:08d}.npz")
+    _atomic_write(npz, lambda tmp: np.savez(tmp_npz(tmp), **arrays))
     manifest = {"step": step, "keys": sorted(arrays), "extra": extra or {}}
-    with open(os.path.join(path, f"step_{step:08d}.json"), "w") as f:
-        json.dump(manifest, f)
+    _atomic_write(os.path.join(path, f"step_{step:08d}.json"),
+                  lambda tmp: _dump_json(tmp, manifest))
+    return npz
+
+
+def tmp_npz(tmp: str):
+    """np.savez appends '.npz' unless the name already ends with it —
+    hand it an open file object so the temp name is used verbatim."""
+    return open(tmp, "wb")
+
+
+def _dump_json(tmp: str, obj):
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
 
 
 def latest_step(path: str) -> Optional[int]:
+    """Newest step with BOTH the ``.npz`` and its manifest present.
+
+    The manifest is written last, so a step visible here is complete —
+    a torn write (crash mid-save) is simply not reported."""
     if not os.path.isdir(path):
         return None
-    steps = [int(f[5:13]) for f in os.listdir(path)
-             if f.startswith("step_") and f.endswith(".npz")]
+    files = set(os.listdir(path))
+    steps = [int(f[5:13]) for f in files
+             if f.startswith("step_") and f.endswith(".npz")
+             and f[:-4] + ".json" in files]
     return max(steps) if steps else None
+
+
+def load_manifest(path: str, step: int) -> dict:
+    with open(os.path.join(path, f"step_{step:08d}.json")) as f:
+        return json.load(f)
 
 
 def restore(path: str, like, step: Optional[int] = None, shardings=None):
     """Restore into the structure of ``like``.  ``shardings``: optional
-    matching pytree of jax.sharding.Sharding for device placement."""
+    matching pytree of jax.sharding.Sharding for device placement.
+
+    The saved manifest's key set is validated against the target tree
+    before any array is touched — a checkpoint from a different model
+    (or a renamed layer) fails loudly with the missing/extra key names
+    instead of a KeyError deep in the load loop."""
     if step is None:
         step = latest_step(path)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {path}")
+    manifest = load_manifest(path, step)
+    want = _flatten_with_paths(like)
+    saved_keys = set(manifest["keys"])
+    want_keys = set(want)
+    if saved_keys != want_keys:
+        missing = sorted(want_keys - saved_keys)
+        extra = sorted(saved_keys - want_keys)
+        raise ValueError(
+            f"checkpoint step {step} under {path} does not match the "
+            f"target tree: missing={missing} extra={extra}")
     data = np.load(os.path.join(path, f"step_{step:08d}.npz"))
-    saved = _flatten_with_paths(like)  # for key order/shape check
+    npz_keys = set(data.files)
+    if npz_keys != saved_keys:
+        raise ValueError(
+            f"checkpoint step {step}: manifest/npz disagree "
+            f"(manifest-only={sorted(saved_keys - npz_keys)} "
+            f"npz-only={sorted(npz_keys - saved_keys)}) — torn write?")
     flat, tdef = jax.tree_util.tree_flatten_with_path(like)
     out = []
     sh_flat = (jax.tree.leaves(shardings) if shardings is not None

@@ -66,6 +66,11 @@ def main(argv=None):
     ap.add_argument("--agg-scope", default="auto")
     ap.add_argument("--remat", default="none")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="save an (atomic) checkpoint every N steps into "
+                         "--ckpt-dir; 0 = final step only.  A serving "
+                         "HotSwapper polling the same directory hot-swaps "
+                         "each one live (DESIGN.md §Serve)")
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args(argv)
 
@@ -82,6 +87,7 @@ def main(argv=None):
     from ..launch.mesh import n_workers
     from ..models import params as PM
     from ..models import transformer as TF
+    from ..serving import telemetry
     from ..training.step import build_train_step, resolve_strategy
 
     if args.aggregator not in engine.registered():
@@ -170,6 +176,21 @@ def main(argv=None):
                       f"selected={met['n_selected']:.1f}/{m} "
                       f"(bucket min {met['n_selected_min']:.0f})" + act_s,
                       flush=True)
+                if args.ckpt_dir:
+                    # robustness telemetry beside the checkpoints: the
+                    # server surfaces the aggregation stats the weights
+                    # it serves were trained under (serving/telemetry)
+                    telemetry.append_row(args.ckpt_dir, {
+                        "step": step,
+                        "gnorm": met["gnorm"],
+                        "n_selected": met["n_selected"],
+                        "n_selected_min": met["n_selected_min"],
+                        "n_active": met["n_active"],
+                        "quorum": bcfg.quorum or m,
+                    })
+            if (args.ckpt_dir and args.ckpt_every
+                    and (step + 1) % args.ckpt_every == 0):
+                ckpt.save(args.ckpt_dir, params, step=step + 1)
 
     dt = time.time() - t_start
     tok = args.steps * m * args.batch_per_worker * args.seq

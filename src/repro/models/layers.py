@@ -149,9 +149,20 @@ def gqa_attention(p, a: AttentionSpec, x, positions, mask=None):
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (k, v)
 
 
+def _decode_pos(pos, B: int):
+    """Broadcast a scalar or per-slot ``[B]`` position vector to [B].
+
+    Continuous batching gives every batch slot its own absolute position
+    (requests join mid-stream); single-request decode passes a scalar.
+    """
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1), (B,))
+
+
 def gqa_decode(p, a: AttentionSpec, x, cache_k, cache_v, pos):
     """Single-token decode.  x: [B,1,d]; cache_k/v: [B,T,Hkv,D] rolling or
-    absolute buffer; ``pos`` scalar absolute position of the new token.
+    absolute buffer; ``pos``: scalar absolute position of the new token,
+    or a per-slot ``[B]`` vector (continuous batching — every slot decodes
+    at its own position).
 
     With a sliding window the cache length T == window and entries are a
     ring buffer indexed pos % window; otherwise T is the max seq len.
@@ -164,21 +175,22 @@ def gqa_decode(p, a: AttentionSpec, x, cache_k, cache_v, pos):
     if a.qk_norm:
         q = rms_norm(q, p["q_norm"])
         k = rms_norm(k, p["k_norm"])
-    posv = jnp.full((B, 1), pos)
+    posb = _decode_pos(pos, B)
+    posv = posb[:, None]                             # [B,1]
     q = apply_rope(q, posv, a.rope_theta)
     k = apply_rope(k, posv, a.rope_theta)
-    slot = pos % T if a.window else pos
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
-    # validity: slots holding tokens <= pos and within window
+    slot = posb % T if a.window else posb            # [B]
+    cache_k = cache_k.at[jnp.arange(B), slot].set(k[:, 0])
+    cache_v = cache_v.at[jnp.arange(B), slot].set(v[:, 0])
+    # validity: slots holding tokens <= pos and within window, per batch
     idx = jnp.arange(T)
     if a.window:
         # slot j holds absolute position: the most recent write <= pos
-        age = (slot - idx) % T
-        valid = (age < jnp.minimum(pos + 1, T))
+        age = (slot[:, None] - idx[None, :]) % T
+        valid = age < jnp.minimum(posb + 1, T)[:, None]
     else:
-        valid = idx <= pos
-    mask = valid[None, None, None, None, :]          # [1,1,1,1,T] -> bhgst
+        valid = idx[None, :] <= posb[:, None]
+    mask = valid[:, None, None, None, :]             # [B,1,1,1,T] -> bhgst
     out = _sdpa(q, cache_k, cache_v, mask)
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), (cache_k, cache_v)
 
@@ -243,26 +255,28 @@ def mla_attention(p, a: AttentionSpec, x, positions, mask=None):
 def mla_decode(p, a: AttentionSpec, x, cache_c, cache_kr, pos):
     """Weight-absorbed single-token MLA decode.
 
-    cache_c: [B,T,R] latent; cache_kr: [B,T,Dr] rope key.
+    cache_c: [B,T,R] latent; cache_kr: [B,T,Dr] rope key; ``pos``:
+    scalar or per-slot ``[B]`` absolute positions (see gqa_decode).
     score_h(t) = q_nope_h · (c_t W_uk,h) + q_rope_h · k_rope_t
                = (W_uk,h^T q_nope_h) · c_t + q_rope_h · k_rope_t
     out_h = Σ_t w_t (c_t W_uv,h)  = (Σ_t w_t c_t) W_uv,h   (absorbed)
     """
     B = x.shape[0]
-    posv = jnp.full((B, 1), pos)
+    posb = _decode_pos(pos, B)
+    posv = posb[:, None]                                     # [B,1]
     q_nope, q_rope = _mla_q(p, a, x, posv)                   # [B,1,H,*]
     c_new = rms_norm(x @ p["w_dkv"], p["kv_norm"])           # [B,1,R]
     kr_new = apply_rope((x @ p["w_krope"])[:, :, None, :], posv,
                         a.rope_theta).squeeze(2)             # [B,1,Dr]
-    cache_c = jax.lax.dynamic_update_slice_in_dim(cache_c, c_new, pos, axis=1)
-    cache_kr = jax.lax.dynamic_update_slice_in_dim(cache_kr, kr_new, pos, axis=1)
+    cache_c = cache_c.at[jnp.arange(B), posb].set(c_new[:, 0])
+    cache_kr = cache_kr.at[jnp.arange(B), posb].set(kr_new[:, 0])
     q_abs = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])  # [B,1,H,R]
     scale = 1.0 / jnp.sqrt(a.qk_nope_dim + a.qk_rope_dim)
     logits = (jnp.einsum("bshr,btr->bhst", q_abs, cache_c) +
               jnp.einsum("bshk,btk->bhst", q_rope, cache_kr)).astype(jnp.float32)
     logits = logits * scale
-    valid = (jnp.arange(cache_c.shape[1]) <= pos)[None, None, None, :]
-    logits = jnp.where(valid, logits, NEG_INF)
+    valid = (jnp.arange(cache_c.shape[1])[None, :] <= posb[:, None])
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1).astype(cache_c.dtype)
     ctx = jnp.einsum("bhst,btr->bshr", w, cache_c)           # [B,1,H,R]
     out = jnp.einsum("bshr,rhk->bshk", ctx, p["w_uv"])

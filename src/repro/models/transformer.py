@@ -17,6 +17,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from ..configs.base import ModelConfig
@@ -109,40 +110,50 @@ def _attention(cfg, p, x, positions):
     return out, kv
 
 
+def _kv_entry(cfg, kv):
+    """Full-seq attention cache pieces, keyed like ``_attn_cache_defs``."""
+    if cfg.attention.kind == "mla":
+        return {"c": kv[0], "kr": kv[1]}
+    return {"k": kv[0], "v": kv[1]}
+
+
 def _dense_block(cfg, p, x, positions):
-    h, _ = _attention(cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.rms_eps), positions)
+    h, kv = _attention(cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.rms_eps), positions)
     x = x + h
     x = x + L.mlp(p["mlp"], L.rms_norm(x, p["ln2"], cfg.rms_eps), cfg.activation)
-    return x, jnp.zeros((), jnp.float32)
+    return x, jnp.zeros((), jnp.float32), _kv_entry(cfg, kv)
 
 
 def _moe_block(cfg, p, x, positions):
-    h, _ = _attention(cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.rms_eps), positions)
+    h, kv = _attention(cfg, p["attn"], L.rms_norm(x, p["ln1"], cfg.rms_eps), positions)
     x = x + h
     B, S, D = x.shape
     flat = L.rms_norm(x, p["ln2"], cfg.rms_eps).reshape(B * S, D)
     out, aux = MOE.moe_ffn(p["moe"], flat, cfg.moe, cfg.activation)
-    return x + out.reshape(B, S, D), aux
+    return x + out.reshape(B, S, D), aux, _kv_entry(cfg, kv)
 
 
 def _rwkv_block(cfg, p, x, positions):
-    h, _ = R6.rwkv6_timemix(p["tm"], cfg.rwkv, L.rms_norm(x, p["ln1"], cfg.rms_eps))
+    h, (tm_x, wkv) = R6.rwkv6_timemix(p["tm"], cfg.rwkv,
+                                      L.rms_norm(x, p["ln1"], cfg.rms_eps))
     x = x + h
-    h, _ = R6.rwkv6_channelmix(p["tm"], L.rms_norm(x, p["ln2"], cfg.rms_eps))
-    return x + h, jnp.zeros((), jnp.float32)
+    h, cm_x = R6.rwkv6_channelmix(p["tm"], L.rms_norm(x, p["ln2"], cfg.rms_eps))
+    return (x + h, jnp.zeros((), jnp.float32),
+            {"wkv": wkv, "tm_x": tm_x, "cm_x": cm_x})
 
 
 def _mamba_block(cfg, p, x):
-    h, _ = M2.mamba2_forward(p["m"], cfg.ssm, L.rms_norm(x, p["ln"], cfg.rms_eps))
-    return x + h
+    h, (conv, ssm) = M2.mamba2_forward(p["m"], cfg.ssm,
+                                       L.rms_norm(x, p["ln"], cfg.rms_eps))
+    return x + h, {"conv": conv, "ssm": ssm}
 
 
 _SP_SPEC = P(None, "model", None)  # sequence-parallel activation layout
 
 
 def _run_segment(cfg, seg: Segment, p_stack, shared, x, positions, remat=False,
-                 param_hook=None):
-    """Scan a stacked segment over x.  Returns (x, aux_sum).
+                 param_hook=None, collect_cache=False):
+    """Scan a stacked segment over x.  Returns (x, aux_sum, cache_ys).
 
     ``param_hook(p_layer, layer_idx)`` is applied to each scanned
     layer-slice of the parameter stack — identity by default.  The
@@ -153,6 +164,11 @@ def _run_segment(cfg, seg: Segment, p_stack, shared, x, positions, remat=False,
     barrier fold the layer position into its attack key so injected
     noise decorrelates across the scanned layers, not just across
     segments.
+
+    ``collect_cache=True`` (fused prefill, DESIGN.md §Serve) stacks
+    each layer's full-sequence cache pieces as scan ys — the stacked
+    leading axis matches the ``cache_defs`` layout.  Training keeps
+    ys=None so no cache memory rides along the backward pass.
     """
 
     def body(carry, idx_p):
@@ -162,25 +178,27 @@ def _run_segment(cfg, seg: Segment, p_stack, shared, x, positions, remat=False,
             p_l = param_hook(p_l, idx)
         x = shard_hint(x, _SP_SPEC)
         if seg.kind == "dense":
-            x, a = _dense_block(cfg, p_l, x, positions)
+            x, a, ent = _dense_block(cfg, p_l, x, positions)
         elif seg.kind == "moe":
-            x, a = _moe_block(cfg, p_l, x, positions)
+            x, a, ent = _moe_block(cfg, p_l, x, positions)
         elif seg.kind == "rwkv":
-            x, a = _rwkv_block(cfg, p_l, x, positions)
+            x, a, ent = _rwkv_block(cfg, p_l, x, positions)
         elif seg.kind == "hybrid":
             def sub(xc, p_m):
-                return _mamba_block(cfg, p_m, xc), None
-            x, _ = jax.lax.scan(sub, x, p_l)
-            x, a = _dense_block(cfg, shared, x, positions)
+                xc, st = _mamba_block(cfg, p_m, xc)
+                return xc, (st if collect_cache else None)
+            x, m_ent = jax.lax.scan(sub, x, p_l)
+            x, a, a_ent = _dense_block(cfg, shared, x, positions)
+            ent = {"mamba": m_ent, "attn": a_ent}
         else:
             raise ValueError(seg.kind)
-        return (x, aux + a), None
+        return (x, aux + a), (ent if collect_cache else None)
 
     if remat:
         body = jax.checkpoint(body, prevent_cse=False)
-    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
-                               (jnp.arange(seg.n, dtype=jnp.float32), p_stack))
-    return x, aux
+    (x, aux), ys = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                (jnp.arange(seg.n, dtype=jnp.float32), p_stack))
+    return x, aux, ys
 
 
 # ---------------------------------------------------------------------------
@@ -212,9 +230,9 @@ def forward(cfg: ModelConfig, params, tokens, prefix_embed=None, remat=False,
     aux = jnp.zeros((), jnp.float32)
     for i, seg in enumerate(segments(cfg)):
         hook = (seg_hooks or {}).get(f"seg_{i}")
-        x, a = _run_segment(cfg, seg, params[f"seg_{i}"],
-                            params.get("shared_attn"), x, positions, remat,
-                            hook)
+        x, a, _ = _run_segment(cfg, seg, params[f"seg_{i}"],
+                               params.get("shared_attn"), x, positions, remat,
+                               hook)
         aux = aux + a
     x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
@@ -309,7 +327,9 @@ def _attn_decode(cfg, p, x, cache, pos):
 
 
 def decode_step(cfg: ModelConfig, params, cache, token, pos):
-    """token [B,1] int32; pos scalar int32 (absolute position).
+    """token [B,1] int32; pos scalar int32 (absolute position) or a
+    per-slot ``[B]`` vector — continuous batching decodes every slot at
+    its own position (recurrent families ignore pos entirely).
 
     Returns (logits [B,1,V], new cache).  One new token, O(1) or O(T)
     work per layer depending on the block family.
@@ -374,6 +394,66 @@ def decode_step(cfg: ModelConfig, params, cache, token, pos):
             raise ValueError(seg.kind)
         new_cache[f"seg_{i}"] = c_new
 
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ head, new_cache
+
+
+# ---------------------------------------------------------------------------
+# fused prefill: one dispatch writes the whole prompt into the cache
+# ---------------------------------------------------------------------------
+
+def _seq_write(buf, ent, window: int):
+    """Write full-seq attention entries into a decode cache buffer.
+
+    buf: [stack..., B, T, ...] (seq at axis 2); ent: [stack..., B, S, ...].
+    Non-windowed buffers take positions 0..S-1 directly; windowed ring
+    buffers keep the last min(S, T) positions at slot = pos % T, exactly
+    where ``gqa_decode`` would have left them after S sequential steps.
+    """
+    T, S = buf.shape[2], ent.shape[2]
+    if not window and S > T:
+        raise ValueError(f"prompt length {S} exceeds cache length {T}")
+    keep = min(S, T)
+    slots = np.arange(S - keep, S) % T
+    return buf.at[:, :, slots].set(ent[:, :, S - keep:].astype(buf.dtype))
+
+
+def _write_entries(cfg, seg: Segment, bufs, ent, S: int):
+    w = cfg.attention.window
+    if seg.kind in ("dense", "moe"):
+        return {k: _seq_write(bufs[k], ent[k], w) for k in bufs}
+    if seg.kind == "rwkv":
+        return {k: ent[k].astype(bufs[k].dtype) for k in bufs}
+    if seg.kind == "hybrid":
+        return {"mamba": {k: ent["mamba"][k].astype(bufs["mamba"][k].dtype)
+                          for k in bufs["mamba"]},
+                "attn": {k: _seq_write(bufs["attn"][k], ent["attn"][k], w)
+                         for k in bufs["attn"]}}
+    raise ValueError(seg.kind)
+
+
+def prefill_cache(cfg: ModelConfig, params, tokens, cache, prefix_embed=None):
+    """Fused prefill: ONE dispatch computes the full-sequence logits AND
+    writes the whole prompt's KV/state into the decode cache — replaces
+    the O(prompt_len)-dispatch teacher-forced loop (ISSUE 8 satellite).
+
+    tokens: [B,S] with B matching the cache batch dim.  Returns
+    (logits [B,S,V], cache') positioned so ``decode_step`` continues at
+    pos = S.  Attention families write per-position K/V (windowed ring
+    buffers get the last ``window`` positions); recurrent families
+    (rwkv / mamba) replace their O(1) states with the final-position
+    state the full-sequence forward already computes.
+    """
+    x = embed_inputs(cfg, params, tokens, prefix_embed)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    new_cache: dict = {}
+    for i, seg in enumerate(segments(cfg)):
+        x, _, ent = _run_segment(cfg, seg, params[f"seg_{i}"],
+                                 params.get("shared_attn"), x, positions,
+                                 collect_cache=True)
+        new_cache[f"seg_{i}"] = _write_entries(cfg, seg, cache[f"seg_{i}"], ent, S)
     x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
     head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
     return x @ head, new_cache

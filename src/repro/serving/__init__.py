@@ -1,1 +1,5 @@
 from .engine import ServeBundle, build_serve_step, cache_specs
+from .cache import BlockTable, SlotCache, batch_axes
+from .scheduler import Request, ServeLoop
+from .swap import HotSwapper
+from .telemetry import ServeMetrics, append_row, latest_row, read_rows

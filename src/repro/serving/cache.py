@@ -1,0 +1,101 @@
+"""Slot-paged decode cache for continuous batching.
+
+The whole serve fleet shares ONE cache tree shaped ``[max_batch]`` on
+the batch axis (the pad-to-max idiom from the elastic trainer, DESIGN.md
+§Elastic / §Serve).  A request's "page" is its batch slot: the
+``BlockTable`` maps request-id → slot, and ``SlotCache.insert`` scatters
+a freshly-prefilled batch=1 cache slice into the big buffers with a
+TRACED slot index, so admissions and evictions never recompile anything.
+Attention/wkv6 kernels are untouched — paging is slot-granular, not
+token-granular; each slot owns a fixed ``max_len`` (or ``window``) strip
+of every cache leaf.
+
+The batch axis position varies per leaf (axis 1 for attention/rwkv
+stacks, axis 2 for the hybrid mamba sub-stacks) — ``batch_axes`` derives
+it from the logical axis names in ``TF.cache_defs`` rather than
+hard-coding layouts, so new cache families inherit slot paging for free.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models import transformer as TF
+
+_is_def = lambda x: isinstance(x, tuple) and isinstance(x[0], tuple)
+
+
+def batch_axes(cfg: ModelConfig, batch: int, seq_len: int):
+    """Tree of ints: index of the 'batch' axis in every cache leaf."""
+    defs = TF.cache_defs(cfg, batch, seq_len)
+    return jax.tree.map(lambda sd: sd[1].index("batch"), defs, is_leaf=_is_def)
+
+
+class BlockTable:
+    """request-id → slot map over ``max_batch`` pages; O(1) alloc/free."""
+
+    def __init__(self, max_batch: int):
+        self.max_batch = max_batch
+        self._free = list(range(max_batch - 1, -1, -1))
+        self._slot_of: dict = {}
+
+    def __len__(self):
+        return len(self._slot_of)
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    def alloc(self, rid) -> int:
+        if not self._free:
+            raise RuntimeError("no free slots")
+        slot = self._free.pop()
+        self._slot_of[rid] = slot
+        return slot
+
+    def slot(self, rid) -> int:
+        return self._slot_of[rid]
+
+    def free(self, rid) -> int:
+        slot = self._slot_of.pop(rid)
+        self._free.append(slot)
+        return slot
+
+
+class SlotCache:
+    """The shared ``[max_batch]`` cache buffers + the jitted slot insert.
+
+    ``shardings``: optional PartitionSpec tree (``engine.cache_specs``)
+    to place the buffers on a mesh; insertion shardings follow from the
+    donated output.
+    """
+
+    def __init__(self, cfg: ModelConfig, max_batch: int, max_len: int,
+                 dtype=jnp.bfloat16, mesh=None, shardings=None):
+        self.cfg, self.max_batch, self.max_len = cfg, max_batch, max_len
+        self.dtype = dtype
+        self.bufs = TF.init_cache(cfg, max_batch, max_len, dtype)
+        self.axes = batch_axes(cfg, max_batch, max_len)
+        if mesh is not None and shardings is not None:
+            from jax.sharding import NamedSharding
+            self.bufs = jax.tree.map(
+                lambda b, s: jax.device_put(b, NamedSharding(mesh, s)),
+                self.bufs, shardings)
+
+        def ins(big, small, i):
+            return jax.tree.map(
+                lambda b, s, ax: jax.lax.dynamic_update_slice_in_dim(
+                    b, s.astype(b.dtype), i, axis=ax),
+                big, small, self.axes)
+
+        self._insert = jax.jit(ins, donate_argnums=(0,))
+
+    def insert(self, small, slot: int):
+        """Scatter a batch=1 cache slice into ``slot`` (traced index)."""
+        self.bufs = self._insert(self.bufs, small, jnp.int32(slot))
+
+    def insert_compiles(self) -> int:
+        return self._insert._cache_size()

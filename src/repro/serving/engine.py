@@ -56,11 +56,14 @@ def cache_specs(cfg: ModelConfig, batch: int, seq_len: int, mesh,
 
 
 class ServeBundle(NamedTuple):
-    prefill_fn: object          # (params, tokens[, prefix]) -> logits
+    prefill_fn: object          # (params, batch) -> logits
     decode_fn: object           # (params, cache, token, pos) -> (logits, cache)
     param_specs: object
     cache_spec_tree: object
     batch_spec: P
+    # fused cache-writing prefill: (params, batch, cache) ->
+    # (logits, cache') — appended last so positional users keep working
+    prefill_cache_fn: object = None
 
 
 def build_serve_step(cfg: ModelConfig, shape: InputShape, mesh) -> ServeBundle:
@@ -80,8 +83,13 @@ def build_serve_step(cfg: ModelConfig, shape: InputShape, mesh) -> ServeBundle:
                                batch.get("prefix_embed"))
         return logits
 
+    def prefill_cache(params, batch, cache):
+        return TF.prefill_cache(cfg, params, batch["tokens"], cache,
+                                batch.get("prefix_embed"))
+
     def decode(params, cache, token, pos):
         return TF.decode_step(cfg, params, cache, token, pos)
 
     return ServeBundle(jax.jit(prefill), jax.jit(decode, donate_argnums=(1,)),
-                       pspecs, cspecs, bspec)
+                       pspecs, cspecs, bspec,
+                       jax.jit(prefill_cache, donate_argnums=(2,)))

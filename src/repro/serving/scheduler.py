@@ -1,0 +1,191 @@
+"""Continuous-batching scheduler: request queue → slot map → ONE jitted
+decode step over a fixed ``[max_batch]`` slot array.
+
+The same pad-to-max + traced-validity-mask idiom the elastic trainer
+uses for variable worker counts (DESIGN.md §Elastic) applied to serving:
+the decode step is compiled ONCE for ``[max_batch]`` slots; per-slot
+positions (``decode_step``'s ``[B]`` pos vector) and a traced live mask
+let requests join and finish at any step with ZERO recompiles.  Dead
+slots keep computing (they re-write their own last cache entry — a
+no-op) and their outputs are masked off on the host; admission scatters
+a freshly-prefilled batch=1 cache slice into a free slot with a traced
+slot index (serving/cache.py).
+
+Prefill policy: attention-only, non-windowed configs pad prompts to
+power-of-two buckets (one compile per bucket; right-pad garbage is
+overwritten-before-read under the ``idx <= pos`` validity mask).
+Recurrent (rwkv/mamba) or windowed configs prefill at EXACT length —
+padding would corrupt the carried O(1) state / ring buffer — costing one
+compile per distinct prompt length (DESIGN.md §Serve).
+
+MoE caveat: routing is cross-batch, so dead slots consume expert
+capacity in batched decode; at serve batch sizes this only perturbs
+capacity-dropped tokens (exact parity tests use dense configs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models import transformer as TF
+from .cache import BlockTable, SlotCache
+from .swap import HotSwapper
+from .telemetry import ServeMetrics
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # [S] int32
+    max_new: int
+    tokens: list = dataclasses.field(default_factory=list)
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
+class ServeLoop:
+    def __init__(self, cfg: ModelConfig, max_batch: int, max_len: int,
+                 params=None, swapper: Optional[HotSwapper] = None,
+                 dtype=None, metrics: Optional[ServeMetrics] = None,
+                 mesh=None, cache_shardings=None):
+        if (params is None) == (swapper is None):
+            raise ValueError("pass exactly one of params / swapper")
+        self.cfg, self.max_batch, self.max_len = cfg, max_batch, max_len
+        self.swapper = swapper
+        self._params = params
+        self.metrics = metrics or ServeMetrics()
+        dtype = dtype or (jnp.float32 if cfg.dtype == "float32"
+                          else jnp.bfloat16)
+        self.cache = SlotCache(cfg, max_batch, max_len, dtype, mesh,
+                               cache_shardings)
+        self.table = BlockTable(max_batch)
+        self.queue: deque = deque()
+        self.done: dict = {}
+        self.steps = 0
+        self._next_rid = 0
+        # host-side slot state (tiny [B] vectors, shipped every step)
+        self._tok = np.zeros((max_batch, 1), np.int32)
+        self._pos = np.zeros((max_batch,), np.int32)
+        self._remaining = np.zeros((max_batch,), np.int32)
+        self._req_of_slot: list = [None] * max_batch
+        seg_kinds = {s.kind for s in TF.segments(cfg)}
+        self._bucket_ok = (not cfg.attention.window
+                           and not (seg_kinds & {"rwkv", "hybrid"}))
+
+        def prefill(params, tokens, last):
+            small = TF.init_cache(cfg, 1, max_len, dtype)
+            logits, small = TF.prefill_cache(cfg, params, tokens, small)
+            first = jnp.argmax(logits[0, last], -1).astype(jnp.int32)
+            return small, first
+
+        def step(params, cache, tok, pos, live):
+            logits, cache = TF.decode_step(cfg, params, cache, tok, pos)
+            nxt = jnp.argmax(logits.reshape(max_batch, -1),
+                             axis=-1).astype(jnp.int32)
+            tok2 = jnp.where(live[:, None], nxt[:, None], tok)
+            pos2 = jnp.where(live, jnp.minimum(pos + 1, max_len - 1), pos)
+            return cache, tok2, pos2, nxt
+
+        self._prefill = jax.jit(prefill)
+        self._step = jax.jit(step, donate_argnums=(1,))
+
+    # -- compile counters (zero-recompile assertions ride on these) ----
+    def decode_compiles(self) -> int:
+        return self._step._cache_size()
+
+    def prefill_compiles(self) -> int:
+        return self._prefill._cache_size()
+
+    def params(self):
+        return self.swapper.params() if self.swapper else self._params
+
+    # -- request lifecycle ---------------------------------------------
+    def submit(self, prompt, max_new: int, rid=None) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        S = prompt.shape[0]
+        if S >= self.max_len:
+            raise ValueError(f"prompt length {S} >= max_len {self.max_len}")
+        if rid is None:
+            rid = self._next_rid
+        self._next_rid = max(self._next_rid, rid) + 1
+        self.queue.append(Request(rid, prompt,
+                                  min(max_new, self.max_len - S)))
+        return rid
+
+    def _admit(self):
+        params = self.params()
+        while self.queue and self.table.free_slots:
+            req = self.queue.popleft()
+            slot = self.table.alloc(req.rid)
+            S = req.prompt.shape[0]
+            Sb = min(_next_pow2(S), self.max_len - 1) if self._bucket_ok else S
+            toks = np.zeros((1, Sb), np.int32)
+            toks[0, :S] = req.prompt
+            small, first = self._prefill(params, jnp.asarray(toks),
+                                         jnp.int32(S - 1))
+            self.cache.insert(small, slot)
+            self.metrics.prefills += 1
+            first = int(first)
+            req.tokens.append(first)
+            self._req_of_slot[slot] = req
+            self._tok[slot, 0] = first
+            self._pos[slot] = S
+            self._remaining[slot] = req.max_new - 1
+            if req.max_new <= 1:
+                self._finish(slot)
+
+    def _finish(self, slot: int):
+        req = self._req_of_slot[slot]
+        self._req_of_slot[slot] = None
+        self._remaining[slot] = 0
+        self.table.free(req.rid)
+        self.done[req.rid] = np.asarray(req.tokens, np.int32)
+        self.metrics.completed += 1
+
+    # -- main loop ------------------------------------------------------
+    def run(self, on_step: Optional[Callable] = None) -> dict:
+        """Drain the queue; returns {rid: generated tokens [max_new]}.
+
+        ``on_step(loop, step_idx)`` fires after every decode step —
+        hooks for tests/demos (e.g. publish a checkpoint mid-stream to
+        force a hot swap under live decode).
+        """
+        while self.queue or len(self.table):
+            self._admit()
+            if self.swapper is not None and self.swapper.poll():
+                self.metrics.observe_swap(self.swapper.last_stall_s)
+            self.metrics.queue_depth = len(self.queue)
+            self.metrics.active_slots = len(self.table)
+            live_np = self._remaining > 0
+            if not live_np.any():
+                continue                       # everything finished at admit
+            t0 = time.perf_counter()
+            bufs, tok, pos, nxt = self._step(
+                self.params(), self.cache.bufs, jnp.asarray(self._tok),
+                jnp.asarray(self._pos), jnp.asarray(live_np))
+            nxt = np.asarray(nxt)
+            dt = time.perf_counter() - t0
+            self.cache.bufs = bufs
+            self._tok = np.array(tok)      # copy: host state stays writable
+            self._pos = np.array(pos)
+            self.steps += 1
+            n_live = int(live_np.sum())
+            self.metrics.observe_decode(dt, n_live)
+            for slot in np.nonzero(live_np)[0]:
+                req = self._req_of_slot[slot]
+                req.tokens.append(int(nxt[slot]))
+                self._remaining[slot] -= 1
+                if self._remaining[slot] <= 0:
+                    self._finish(slot)
+            if on_step is not None:
+                on_step(self, self.steps)
+        return self.done

@@ -1,0 +1,69 @@
+"""Hot-swap checkpoint watcher: double-buffered params, flip between
+decode steps.
+
+Two host-visible param trees alternate as active/standby.  ``poll()``
+(called by the serve loop between decode steps) checks
+``ckpt.latest_step`` — cheap directory listing, safe against torn writes
+because the trainer's manifest-last protocol (checkpoint/ckpt.py) makes
+half-written checkpoints invisible — and on a new step restores into the
+STANDBY slot, blocks until the transfer lands, then flips the active
+index.  The decode step never observes a partially-loaded tree, no
+request is dropped, and because both slots have identical
+shapes/dtypes/shardings the jitted decode function re-runs with zero
+recompiles (asserted in tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import ckpt
+
+
+class HotSwapper:
+    def __init__(self, ckpt_dir: str, like, shardings=None,
+                 require_initial: bool = True):
+        """``like``: param tree of the target shapes/dtypes (manifest
+        keys are validated against it on every restore).  ``shardings``:
+        optional matching Sharding tree for mesh placement."""
+        self.ckpt_dir = ckpt_dir
+        self._like = like
+        self._shardings = shardings
+        self._slots = [None, None]
+        self._active = 0
+        self.loaded_step: Optional[int] = None
+        self.swap_count = 0
+        self.swap_stall_s = 0.0
+        self.last_stall_s = 0.0
+        if not self.poll() and require_initial:
+            raise FileNotFoundError(
+                f"no complete checkpoint under {ckpt_dir}")
+
+    def params(self):
+        return self._slots[self._active]
+
+    def poll(self) -> bool:
+        """Load the newest complete checkpoint if it advanced.  Returns
+        True when the active params flipped."""
+        step = ckpt.latest_step(self.ckpt_dir)
+        if step is None or step == self.loaded_step:
+            return False
+        t0 = time.perf_counter()
+        tree, step = ckpt.restore(self.ckpt_dir, self._like, step=step,
+                                  shardings=self._shardings)
+        if self._shardings is None:
+            tree = jax.tree.map(jnp.asarray, tree)
+        jax.block_until_ready(tree)
+        standby = 1 - self._active
+        self._slots[standby] = tree
+        self._active = standby
+        stall = time.perf_counter() - t0
+        if self.loaded_step is not None:       # first load isn't a swap
+            self.swap_count += 1
+            self.swap_stall_s += stall
+        self.last_stall_s = stall
+        self.loaded_step = step
+        return True

@@ -325,18 +325,26 @@ def build_train_step(tcfg: TrainConfig, mesh, jit: bool = True) -> StepBundle:
     build = _build_blocked_step if scope == "blocked" else _build_global_step
     inner, pspecs, ospecs, bspecs = build(tcfg, mesh, opt, layout)
 
+    # n_active is attached HERE, outside the scope builders: the blocked
+    # shard_map enumerates its metric keys in out_specs, so new
+    # replicated metrics belong in this wrapper (DESIGN.md §Serve
+    # telemetry schema rides on it)
     if bcfg.elastic:
         def step(params, opt_state, batch, step_idx, key, active=None):
             act = (jnp.ones((m,), jnp.float32) if active is None
                    else jnp.asarray(active, jnp.float32))
-            return inner(params, opt_state, batch, step_idx, key, act)
+            params, opt_state, met = inner(params, opt_state, batch,
+                                           step_idx, key, act)
+            return params, opt_state, {**met, "n_active": jnp.sum(act)}
     else:
         def step(params, opt_state, batch, step_idx, key, active=None):
             if active is not None:
                 raise ValueError(
                     "active mask passed to a non-elastic step; set "
                     "ByzantineConfig.quorum (or max_m) to opt in")
-            return inner(params, opt_state, batch, step_idx, key)
+            params, opt_state, met = inner(params, opt_state, batch,
+                                           step_idx, key)
+            return params, opt_state, {**met, "n_active": jnp.float32(m)}
 
     if jit:
         step = jax.jit(step, donate_argnums=(0, 1))

@@ -1,0 +1,190 @@
+"""Serving subsystem tests: fused prefill parity against sequential
+decode for every cache family (incl. the windowed ring buffer),
+continuous-batching scheduler continuity against isolated
+single-request decodes, zero-recompile guarantees, the prefill
+bucketing policy, and the telemetry channel round-trip.
+"""
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import params as PM
+from repro.models import transformer as TF
+from repro.serving import BlockTable, ServeLoop
+from repro.serving.telemetry import (TRAIN_KEYS, ServeMetrics, append_row,
+                                     latest_row, read_rows)
+
+# one arch per cache family: gqa KV, rwkv recurrent state, hybrid
+# (mamba conv/ssm + shared-attention KV), mla latent cache
+PARITY_ARCHS = ["qwen3-0.6b", "rwkv6-7b", "zamba2-2.7b", "minicpm3-4b"]
+
+
+def _init(arch, seed=0):
+    cfg = get_config(arch).reduced()
+    params = PM.init_params(TF.param_defs(cfg), jax.random.PRNGKey(seed))
+    return cfg, params
+
+
+def _sequential_reference(cfg, params, tokens, T):
+    """Teacher-forced decode_step over the prompt: the cache state the
+    fused prefill must reproduce."""
+    B, S = tokens.shape
+    dtype = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+    cache = TF.init_cache(cfg, B, T, dtype)
+    logits = []
+    for t in range(S):
+        lg, cache = TF.decode_step(cfg, params, cache, tokens[:, t:t + 1],
+                                   jnp.int32(t))
+        logits.append(lg[:, 0])
+    return jnp.stack(logits, axis=1), cache
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_prefill_parity(arch, rng):
+    """prefill_cache (one dispatch) == S sequential decode steps: same
+    logits, same cache tree, for every cache family."""
+    cfg, params = _init(arch)
+    B, S, T = 2, 8, 12
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    dtype = jnp.float32 if cfg.dtype == "float32" else jnp.bfloat16
+    logits_f, cache_f = TF.prefill_cache(
+        cfg, params, tokens, TF.init_cache(cfg, B, T, dtype))
+    logits_s, cache_s = _sequential_reference(cfg, params, tokens, T)
+    np.testing.assert_allclose(np.asarray(logits_f, np.float32),
+                               np.asarray(logits_s, np.float32),
+                               atol=3e-2, rtol=3e-2)
+    for (path_f, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(cache_f)[0],
+            jax.tree_util.tree_flatten_with_path(cache_s)[0]):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=3e-2, rtol=3e-2,
+            err_msg=f"cache leaf {jax.tree_util.keystr(path_f)}")
+
+
+def test_prefill_parity_windowed_ring(rng):
+    """Sliding-window prefill with S > T must leave the ring buffer
+    exactly as sequential decode (same slots, same overwrites)."""
+    cfg, _ = _init("qwen3-0.6b")
+    cfg = dataclasses.replace(
+        cfg, attention=dataclasses.replace(cfg.attention, window=4))
+    params = PM.init_params(TF.param_defs(cfg), jax.random.PRNGKey(0))
+    B, S, T = 2, 8, 4                       # prompt twice the ring size
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+    logits_f, cache_f = TF.prefill_cache(
+        cfg, params, tokens, TF.init_cache(cfg, B, T, jnp.bfloat16))
+    logits_s, cache_s = _sequential_reference(cfg, params, tokens, T)
+    np.testing.assert_allclose(np.asarray(logits_f, np.float32),
+                               np.asarray(logits_s, np.float32),
+                               atol=3e-2, rtol=3e-2)
+    for a, b in zip(jax.tree.leaves(cache_f), jax.tree.leaves(cache_s)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=3e-2, rtol=3e-2)
+
+
+def test_scheduler_continuity(rng):
+    """Requests served through the shared [max_batch] slot array emit
+    exactly the tokens an isolated batch=1 greedy decode emits — dead
+    slots and slot reuse never leak into live requests."""
+    cfg, params = _init("qwen3-0.6b")
+    max_len = 24
+    prompts = [rng.integers(0, cfg.vocab, size=p) for p in (3, 5, 7, 4, 6, 5)]
+    gens = [6, 4, 8, 3, 5, 7]
+
+    loop = ServeLoop(cfg, max_batch=4, max_len=max_len, params=params)
+    rids = [loop.submit(p, g) for p, g in zip(prompts, gens)]
+    done = loop.run()
+    assert set(done) == set(rids)
+
+    for rid, prompt, g in zip(rids, prompts, gens):
+        solo = ServeLoop(cfg, max_batch=1, max_len=max_len, params=params)
+        srid = solo.submit(prompt, g)
+        ref = solo.run()[srid]
+        np.testing.assert_array_equal(
+            done[rid], ref, err_msg=f"request {rid} diverged from its "
+            f"isolated single-slot decode")
+        assert len(done[rid]) == g
+
+
+def test_zero_decode_recompiles(rng):
+    """ONE decode compile across arbitrary join/finish churn — the
+    acceptance criterion the continuous stream rides on."""
+    cfg, params = _init("qwen3-0.6b")
+    loop = ServeLoop(cfg, max_batch=4, max_len=32, params=params)
+    for p, g in [(4, 5), (6, 3), (3, 8), (5, 2), (7, 6)]:
+        loop.submit(rng.integers(0, cfg.vocab, size=p), g)
+    loop.run()
+    assert loop.decode_compiles() == 1
+    # a second wave re-uses the compiled step
+    for p, g in [(4, 3), (8, 4)]:
+        loop.submit(rng.integers(0, cfg.vocab, size=p), g)
+    loop.run()
+    assert loop.decode_compiles() == 1
+    assert loop.metrics.completed == 7
+
+
+def test_prefill_bucketing_policy(rng):
+    """Full-attention configs bucket prompts to power-of-two lengths
+    (one compile per bucket); recurrent configs must prefill at exact
+    length (padding would corrupt carried state)."""
+    cfg, params = _init("qwen3-0.6b")
+    loop = ServeLoop(cfg, max_batch=2, max_len=32, params=params)
+    for p in (5, 6, 7, 8):                  # all land in the 8-bucket
+        loop.submit(rng.integers(0, cfg.vocab, size=p), 2)
+    loop.run()
+    assert loop.prefill_compiles() == 1
+
+    cfg_r, params_r = _init("rwkv6-7b")
+    loop_r = ServeLoop(cfg_r, max_batch=2, max_len=32, params=params_r)
+    for p in (5, 6):                        # exact-length: one compile each
+        loop_r.submit(rng.integers(0, cfg_r.vocab, size=p), 2)
+    loop_r.run()
+    assert loop_r.prefill_compiles() == 2
+    assert loop_r.decode_compiles() == 1
+
+
+def test_block_table():
+    t = BlockTable(2)
+    s0, s1 = t.alloc(10), t.alloc(11)
+    assert {s0, s1} == {0, 1} and not t.free_slots and len(t) == 2
+    t.free(10)
+    assert t.alloc(12) == s0                # slot reuse
+    with pytest.raises(Exception):
+        t.alloc(13)                         # full
+
+
+def test_telemetry_roundtrip(tmp_path):
+    d = str(tmp_path)
+    rows = [{"step": i, "gnorm": 1.0 + i, "n_selected": 6.0,
+             "n_selected_min": 5.0, "n_active": 8.0, "quorum": 6}
+            for i in range(3)]
+    for r in rows:
+        append_row(d, r)
+    # torn trailing line (crash mid-append) must be skipped, not fatal
+    with open(os.path.join(d, "telemetry.jsonl"), "a") as f:
+        f.write('{"step": 3, "gnorm"')
+    got = read_rows(d)
+    assert [r["step"] for r in got] == [0, 1, 2]
+    assert latest_row(d)["step"] == 2
+    with pytest.raises(ValueError):
+        append_row(d, {"step": 9})          # missing TRAIN_KEYS
+
+    m = ServeMetrics()
+    for dt in (0.002, 0.004, 0.001):
+        m.observe_decode(dt, n_live=2)
+    m.observe_swap(0.05)
+    snap = m.snapshot(train_row=rows[-1])
+    assert snap["tokens_total"] == 6 and snap["swaps"] == 1
+    assert snap["latency_p50_ms"] <= snap["latency_p99_ms"]
+    text = m.render(rows[-1])
+    assert "repro_serve_latency_p50_ms" in text
+    assert "repro_train_gnorm" in text
+    for k in TRAIN_KEYS:
+        assert f"repro_train_{k}" in text
