@@ -1,0 +1,272 @@
+"""Chaos harness: randomized-but-seeded fault schedules over the full
+train → checkpoint → serve loop, under an ACTIVE byzantine attack.
+
+The faulted run drives the guarded elastic step through the recovery
+supervisor (faults/supervisor.py) while a :class:`ChaosPlan` injects
+host crashes, honest-worker NaN bursts, worker flapping and on-disk
+checkpoint corruption; a fault-free control run uses the SAME
+supervised config (so the comparison isolates the faults, not the
+guard).  The serve phase replays the serve-scope faults — a corrupt
+checkpoint publish (quarantined by the HotSwapper), a wedged decode
+slot (requeued by the scheduler watchdog), a frozen swap source —
+against the trained weights.
+
+Recorded in ``BENCH_faults.json`` (validated by check_bench.py in CI):
+per-fault MTTR (steps from onset to the next clean step), supervisor
+counters, final-loss ratio vs the control run, zero-recompile proof
+for both the train step and decode, and the serve completion /
+requeue / quarantine counts.
+
+  PYTHONPATH=src python benchmarks/chaos.py [--smoke] [--out PATH]
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import argparse
+import dataclasses
+import json
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import (ARCHS, ByzantineConfig, RecoveryConfig,
+                           TrainConfig)
+from repro.data.pipeline import LMWorkerPipeline
+from repro.faults import ChaosPlan, FaultEvent, Supervisor, Trigger, get_spec
+from repro.launch.mesh import make_mesh, n_workers
+from repro.models import params as PM
+from repro.models import transformer as TF
+from repro.serving import HotSwapper, ServeLoop
+from repro.training.step import build_train_step
+from serve_bench import bench_meta
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_PATH = os.path.join(REPO, "BENCH_faults.json")
+FAULTS_SCHEMA = 1
+
+CKPT_EVERY = 5
+
+
+def make_plan(m: int, n_steps: int, seed: int) -> ChaosPlan:
+    """The acceptance schedule: host crash + honest NaN burst + corrupt
+    checkpoint in one run (ISSUE: >= 3 fault kinds under attack), plus
+    a flapping worker and a torn checkpoint.  Targets sit OUTSIDE the
+    byzantine prefix (alpha=0.25, m=8 -> byz workers 0..1) so the
+    faults hit honest workers — breakage, not adversary."""
+    return ChaosPlan([
+        FaultEvent("host_crash", Trigger(at=6), workers=(6,)),
+        FaultEvent("corrupt_ckpt", Trigger(at=11)),
+        FaultEvent("nan_burst", Trigger(at=12, duration=2), workers=(5,)),
+        FaultEvent("flap", Trigger(at=16, duration=3), workers=(4,)),
+        FaultEvent("torn_ckpt", Trigger(at=21)),
+    ], m=m, n_steps=n_steps, seed=seed)
+
+
+def run_train(bundle, bsh, psh, tcfg, m, steps, seed, ckpt_dir, plan,
+              params, opt_state):
+    """One supervised run; ``plan=None`` is the fault-free control."""
+    sup = Supervisor(bundle.step_fn, tcfg.byzantine, tcfg.recovery, m,
+                     ckpt_dir=ckpt_dir, like=params, shardings=psh)
+    pipe = LMWorkerPipeline(tcfg.model, m, 2, 32, seed=seed,
+                            byz=tcfg.byzantine)
+    key = jax.random.PRNGKey(seed)
+    rng = np.random.default_rng(seed)
+    losses = []
+    for step in range(steps):
+        if plan is not None:
+            for ev, spec in plan.fired(step):
+                if spec.scope != "ckpt":
+                    continue
+                victims = ckpt.steps(ckpt_dir)
+                if victims:
+                    detail = spec.inject(ckpt_dir, victims[-1], rng)
+                    sup._event(step, ev.fault, detail)
+            active = plan.worker_mask(step)
+            faults = plan.grad_faults(step)
+        else:
+            active, faults = np.ones(m, np.float32), None
+        batch = {k: jax.device_put(jnp.asarray(v), bsh[k])
+                 for k, v in pipe.batch(step).items()}
+        params, opt_state, met = sup.run_step(
+            params, opt_state, batch, step, jax.random.fold_in(key, step),
+            sched_active=active, faults=faults)
+        if met.get("step_ok"):
+            losses.append(met["loss"])
+        if (step + 1) % CKPT_EVERY == 0:
+            sup.checkpoint(params, step + 1)
+    final = float(np.mean(losses[-3:])) if losses else float("nan")
+    finite = bool(all(np.isfinite(x).all()
+                      for x in jax.tree.leaves(params)))
+    return params, sup, final, finite
+
+
+def mttr_rows(plan: ChaosPlan, sup: Supervisor) -> list:
+    """Steps from each fault's onset to the next clean (ok) step."""
+    rows = []
+    for ev, at in plan.onsets():
+        rec = next((e["step"] - at for e in sup.log
+                    if e["step"] >= at and e["ok"]), None)
+        rows.append({"fault": ev.fault, "at": at,
+                     "steps_to_recover": rec})
+    return rows
+
+
+class ServeCtx:
+    """The harness context serve-scope fault injects act on."""
+
+    def __init__(self, loop, stall_ticks: int, stale_ticks: int):
+        self.loop = loop
+        self.stall_ticks = stall_ticks
+        self.stale_ticks = stale_ticks
+        self.frozen_until = -1
+
+    def freeze(self, ticks: int) -> None:
+        self.frozen_until = self.loop.ticks + ticks
+
+
+def run_serve(cfg, params, gen: int, seed: int) -> dict:
+    """Serve the trained weights under the serve-scope faults: one
+    corrupt publish (quarantined), one wedged slot (requeued), one
+    frozen swap window, then a good publish (swapped live)."""
+    d = tempfile.mkdtemp(prefix="repro_chaos_serve_")
+    ckpt.save(d, params, step=1)
+    ckpt.mark_good(d, 1, like=params)
+    swapper = HotSwapper(d, like=params)
+    loop = ServeLoop(cfg, 4, 8 + gen, swapper=swapper, request_timeout=8)
+    ctx = ServeCtx(loop, stall_ticks=16, stale_ticks=6)
+    rng = np.random.default_rng(seed)
+    n_req = 8
+    for _ in range(n_req):
+        loop.submit(rng.integers(0, cfg.vocab, size=8), max_new=gen)
+    state = {"published": False}
+
+    def on_step(lp, s):
+        if s == 2:
+            # a bad publish: lands complete, fails restore -> quarantine
+            ckpt.save(d, jax.tree.map(lambda x: x * 1.01, params), step=2)
+            get_spec("corrupt_ckpt").inject(d, 2, rng)
+        elif s == 4:
+            get_spec("slot_stall").inject(ctx, rng)
+        elif s == 6:
+            get_spec("stale_swap").inject(ctx, rng)
+        elif s >= 8 and not state["published"]:
+            if lp.ticks >= ctx.frozen_until:    # publisher unfroze
+                ckpt.save(d, jax.tree.map(lambda x: x * 0.99, params),
+                          step=3)
+                state["published"] = True
+
+    done = loop.run(on_step=on_step)
+    snap = loop.metrics.snapshot()
+    return {"requests": n_req,
+            "completed": int(snap["requests_completed"]),
+            "requeues": int(snap["requests_requeued"]),
+            "quarantined_ckpts": len(swapper.quarantined),
+            "swaps": swapper.swap_count,
+            "decode_compiles": loop.decode_compiles()}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run: fewer steps, shorter generations")
+    ap.add_argument("--out", default=BENCH_PATH)
+    args = ap.parse_args(argv)
+    steps = 24 if args.smoke else args.steps
+    gen = 8 if args.smoke else 16
+
+    mesh = make_mesh((8, 1), ("data", "model"))
+    cfg = ARCHS[args.arch].reduced()
+    m = n_workers(mesh, "global")
+    quorum = 6
+    bcfg = ByzantineConfig(aggregator="brsgd", attack="sign_flip",
+                           alpha=0.25, membership="prefix",
+                           max_m=m, quorum=quorum)
+    # rollback_after=1: the NaN burst both evicts its worker AND forces
+    # one rollback, whose last_good candidate is the checkpoint the
+    # corrupt_ckpt fault just mutilated -- exercising the
+    # skip-unrestorable path.  keep_ckpts=4 keeps an older good anchor.
+    rcfg = RecoveryConfig(guard=True, rollback_after=1, keep_ckpts=4)
+    tcfg = TrainConfig(model=cfg, byzantine=bcfg, optimizer="sgd",
+                       lr=0.01, agg_scope="global", agg_layout="a2a",
+                       recovery=rcfg)
+    plan = make_plan(m, steps, args.seed)
+
+    bundle = build_train_step(tcfg, mesh)
+    psh, _, bsh = bundle.shardings(mesh)
+    key = jax.random.PRNGKey(args.seed)
+    init = lambda: jax.device_put(
+        PM.init_params(TF.param_defs(cfg), key), psh)
+
+    with mesh:
+        # control first: it warms the jit cache the faulted run and the
+        # zero-recompile assertion then ride on
+        _, sup0, loss_clean, _ = run_train(
+            bundle, bsh, psh, tcfg, m, steps, args.seed,
+            tempfile.mkdtemp(prefix="repro_chaos_clean_"), None,
+            init(), ())
+        steady = bundle.step_fn._cache_size()
+        params, sup, loss_faulted, finite = run_train(
+            bundle, bsh, psh, tcfg, m, steps, args.seed,
+            tempfile.mkdtemp(prefix="repro_chaos_fault_"), plan,
+            init(), ())
+        zero_recompiles = bundle.step_fn._cache_size() == steady
+    print(f"train: clean={loss_clean:.4f} faulted={loss_faulted:.4f} "
+          f"finite={finite} recompiles={not zero_recompiles} "
+          f"{sup.summary() | {'events': '...'}}")
+
+    serve = run_serve(cfg, params, gen, args.seed)
+    print(f"serve: {serve}")
+
+    ratio = loss_faulted / loss_clean
+    checks = {
+        "params_finite": finite,
+        "zero_recompiles": zero_recompiles,
+        "loss_ratio_le_2": bool(np.isfinite(ratio) and ratio <= 2.0),
+        "evicted_and_recovered": sup.evictions >= 1,
+        "rolled_back": sup.rollbacks >= 1,
+        "all_requests_completed": serve["completed"] == serve["requests"],
+        "requeued_then_completed": serve["requeues"] >= 1,
+        "ckpt_quarantined": serve["quarantined_ckpts"] >= 1,
+        "one_decode_compile": serve["decode_compiles"] == 1,
+    }
+    bench = {
+        "schema": FAULTS_SCHEMA, "kind": "faults", "meta": bench_meta(),
+        "arch": cfg.name, "m": m, "quorum": quorum,
+        "aggregator": bcfg.aggregator, "attack": bcfg.attack,
+        "alpha": bcfg.alpha, "steps": steps, "seed": args.seed,
+        "plan": plan.describe(),
+        "train": {
+            "params_finite": finite,
+            "loss_clean": loss_clean,
+            "loss_faulted": loss_faulted,
+            "loss_ratio": float(ratio),
+            "zero_recompiles": zero_recompiles,
+            "steady_cache": steady,
+            "mttr": mttr_rows(plan, sup),
+            **{k: v for k, v in sup.summary().items() if k != "events"},
+        },
+        "serve": serve,
+        "checks": checks,
+        "claim": "PASS" if all(checks.values()) else "FAIL",
+    }
+    with open(args.out, "w") as f:
+        json.dump(bench, f, indent=1)
+    print(f"{bench['claim']}: wrote {args.out}")
+    if bench["claim"] != "PASS":
+        raise SystemExit(f"chaos run failed: "
+                         f"{[k for k, v in checks.items() if not v]}")
+    return bench
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,6 @@
 """Validate the committed ``BENCH_agg.json`` + ``BENCH_contracts.json``
-+ ``BENCH_robustness.csv`` + ``BENCH_serve.json`` schemas and metadata.
++ ``BENCH_robustness.csv`` + ``BENCH_serve.json`` + ``BENCH_faults.json``
+schemas and metadata.
 
 Import-check tier: no timing, no devices — safe to run in CI on every
 PR (.github/workflows/ci.yml).  Guards the perf-trajectory contract:
@@ -13,9 +14,9 @@ regeneration fails loudly.
 Usage: ``PYTHONPATH=src python benchmarks/check_bench.py [FILE ...]``
 No arguments validates all committed files.  A ``.csv`` file is
 checked as the robustness matrix; JSON files dispatch on their
-``"kind"`` stamp (``"contracts"``, ``"serve"``, else the agg timing
-schema).  Exit code 0 when every file is valid, 1 with a message per
-violation otherwise.
+``"kind"`` stamp (``"contracts"``, ``"serve"``, ``"faults"``, else the
+agg timing schema).  Exit code 0 when every file is valid, 1 with a
+message per violation otherwise.
 """
 from __future__ import annotations
 
@@ -41,6 +42,15 @@ SERVE_BATCHES = {1, 4, 16}
 SERVE_ROW_KEYS = ("batch", "requests", "steps", "p50_ms", "p99_ms",
                   "tokens_per_s")
 SERVE_SWAP_KEYS = ("swaps", "stall_ms", "decode_compiles")
+FAULTS_SCHEMA = 1
+# the acceptance schedule must exercise at least these fault kinds
+# concurrently with an active byzantine attack (ISSUE: host crash +
+# honest NaN burst + corrupt checkpoint)
+FAULTS_REQUIRED_KINDS = {"host_crash", "nan_burst", "corrupt_ckpt"}
+FAULTS_TRAIN_KEYS = ("params_finite", "loss_clean", "loss_faulted",
+                     "loss_ratio", "zero_recompiles", "mttr")
+FAULTS_SERVE_KEYS = ("requests", "completed", "requeues",
+                     "quarantined_ckpts", "swaps", "decode_compiles")
 
 
 def check(path: str) -> list:
@@ -312,6 +322,99 @@ def check_serve(path: str) -> list:
     return errors
 
 
+def check_faults(path: str) -> list:
+    """Validate a BENCH_faults.json (written by ``benchmarks/chaos.py``):
+    provenance stamp, the required fault kinds scheduled under a real
+    (non-``none``) byzantine attack, finite params with a final-loss
+    ratio <= 2x the fault-free control, zero train-step recompiles, a
+    serve phase where every request completed (requeues allowed — drops
+    are not) with at least one quarantined checkpoint and a single
+    decode compile, and a recorded PASS claim."""
+    errors = []
+    try:
+        with open(path) as f:
+            bench = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+
+    if bench.get("schema") != FAULTS_SCHEMA:
+        errors.append(f"faults schema must be {FAULTS_SCHEMA}, "
+                      f"got {bench.get('schema')!r}")
+    if bench.get("kind") != "faults":
+        errors.append("missing 'kind': 'faults' stamp")
+    meta = bench.get("meta")
+    if not isinstance(meta, dict):
+        errors.append("missing 'meta' provenance stamp")
+    else:
+        for k in META_KEYS:
+            if not isinstance(meta.get(k), str) or not meta.get(k):
+                errors.append(f"meta.{k} must be a non-empty string")
+    if not bench.get("attack") or bench.get("attack") == "none":
+        errors.append("the chaos run must hold under an ACTIVE attack — "
+                      "'attack' is missing or 'none'")
+
+    plan = bench.get("plan")
+    if not isinstance(plan, list) or not plan:
+        errors.append("'plan' must be a non-empty fault schedule")
+    else:
+        kinds = {r.get("fault") for r in plan if isinstance(r, dict)}
+        missing = FAULTS_REQUIRED_KINDS - kinds
+        if missing:
+            errors.append(f"plan missing required fault kinds "
+                          f"{sorted(missing)} — re-run benchmarks/chaos.py")
+
+    train = bench.get("train")
+    if not isinstance(train, dict) or set(FAULTS_TRAIN_KEYS) - set(train):
+        errors.append(f"'train' must be a dict with keys "
+                      f"{FAULTS_TRAIN_KEYS}")
+    else:
+        if train["params_finite"] is not True:
+            errors.append("train.params_finite must be true")
+        if train["zero_recompiles"] is not True:
+            errors.append("train.zero_recompiles must be true — fault "
+                          "churn must not retrace the step")
+        ratio = train["loss_ratio"]
+        if not (isinstance(ratio, (int, float)) and math.isfinite(ratio)
+                and 0 < ratio <= 2.0):
+            errors.append(f"train.loss_ratio must be finite and <= 2.0 "
+                          f"(faulted vs fault-free), got {ratio!r}")
+        mttr = train["mttr"]
+        if not isinstance(mttr, list) or not mttr:
+            errors.append("train.mttr must be a non-empty list")
+        else:
+            for r in mttr:
+                rec = r.get("steps_to_recover") if isinstance(r, dict) \
+                    else None
+                if not (isinstance(rec, int) and rec >= 0):
+                    errors.append(f"train.mttr: {r!r} never recovered "
+                                  f"(steps_to_recover must be an int >= 0)")
+
+    serve = bench.get("serve")
+    if not isinstance(serve, dict) or set(FAULTS_SERVE_KEYS) - set(serve):
+        errors.append(f"'serve' must be a dict with keys "
+                      f"{FAULTS_SERVE_KEYS}")
+    else:
+        if serve["completed"] != serve["requests"]:
+            errors.append(f"serve: {serve['completed']}/"
+                          f"{serve['requests']} requests completed — "
+                          f"faults must not drop requests")
+        if not (isinstance(serve["requeues"], int)
+                and serve["requeues"] >= 1):
+            errors.append("serve.requeues must be >= 1 — the wedged-slot "
+                          "fault must exercise the watchdog")
+        if not (isinstance(serve["quarantined_ckpts"], int)
+                and serve["quarantined_ckpts"] >= 1):
+            errors.append("serve.quarantined_ckpts must be >= 1 — the "
+                          "corrupt publish must be quarantined")
+        if serve["decode_compiles"] != 1:
+            errors.append(f"serve.decode_compiles must be 1, got "
+                          f"{serve['decode_compiles']!r}")
+
+    if bench.get("claim") != "PASS":
+        errors.append(f"recorded claim is not PASS: {bench.get('claim')!r}")
+    return errors
+
+
 def _check_any(path: str) -> list:
     """Dispatch: ``.csv`` is the robustness matrix; JSON files on the
     ``kind`` stamp."""
@@ -326,6 +429,8 @@ def _check_any(path: str) -> list:
         return check_contracts(path)
     if kind == "serve":
         return check_serve(path)
+    if kind == "faults":
+        return check_faults(path)
     return check(path)
 
 
@@ -334,7 +439,8 @@ def main(argv) -> int:
     paths = argv[1:] or [os.path.join(root, "BENCH_agg.json"),
                          os.path.join(root, "BENCH_contracts.json"),
                          os.path.join(root, "BENCH_robustness.csv"),
-                         os.path.join(root, "BENCH_serve.json")]
+                         os.path.join(root, "BENCH_serve.json"),
+                         os.path.join(root, "BENCH_faults.json")]
     errors = []
     for path in paths:
         errs = _check_any(path)

@@ -11,6 +11,15 @@ the JSON manifest is written LAST.  ``latest_step`` only reports steps
 whose manifest exists, so a reader polling the directory can never
 observe a torn checkpoint: either the step is invisible, or its ``.npz``
 is complete.
+
+Retention + last_good (DESIGN.md §Faults): ``save(..., keep=k)`` prunes
+all but the newest ``k`` complete steps — manifest removed FIRST (the
+inverse of the write protocol, so a step becomes invisible before its
+npz disappears) and the ``last_good`` step is never pruned.  The
+``last_good`` pointer (``mark_good``/``last_good_step``) only advances
+after :func:`validate` passes, so a supervisor rolling back — or a
+HotSwapper falling back — never lands on a checkpoint that merely
+*exists* but cannot be restored (torn npz, manifest–npz disagreement).
 """
 from __future__ import annotations
 
@@ -45,12 +54,18 @@ def _atomic_write(path: str, write_fn):
     os.rename(tmp, path)
 
 
-def save(path: str, tree, step: int = 0, extra: Optional[dict] = None) -> str:
+def save(path: str, tree, step: int = 0, extra: Optional[dict] = None,
+         keep: int = 0) -> str:
     """Atomically save ``tree`` as step ``step``; returns the npz path.
 
     The ``.npz`` renames into place first, the manifest last — a crash
     between the two leaves an orphan ``.npz`` that ``latest_step``
-    skips (cleaned up by the next save of the same step)."""
+    skips (cleaned up by the next save of the same step).
+
+    ``keep`` > 0 enables keep-last-k retention: after the save, all but
+    the newest ``keep`` complete steps are pruned — except the
+    ``last_good`` step, which survives regardless of age (it is the
+    rollback anchor)."""
     os.makedirs(path, exist_ok=True)
     arrays = _flatten_with_paths(tree)
     npz = os.path.join(path, f"step_{step:08d}.npz")
@@ -58,6 +73,8 @@ def save(path: str, tree, step: int = 0, extra: Optional[dict] = None) -> str:
     manifest = {"step": step, "keys": sorted(arrays), "extra": extra or {}}
     _atomic_write(os.path.join(path, f"step_{step:08d}.json"),
                   lambda tmp: _dump_json(tmp, manifest))
+    if keep > 0:
+        prune(path, keep)
     return npz
 
 
@@ -72,18 +89,89 @@ def _dump_json(tmp: str, obj):
         json.dump(obj, f)
 
 
+def steps(path: str) -> list:
+    """Sorted complete steps (both ``.npz`` and manifest present)."""
+    if not os.path.isdir(path):
+        return []
+    files = set(os.listdir(path))
+    return sorted(int(f[5:13]) for f in files
+                  if f.startswith("step_") and f.endswith(".npz")
+                  and f[:-4] + ".json" in files)
+
+
 def latest_step(path: str) -> Optional[int]:
     """Newest step with BOTH the ``.npz`` and its manifest present.
 
     The manifest is written last, so a step visible here is complete —
     a torn write (crash mid-save) is simply not reported."""
-    if not os.path.isdir(path):
+    all_steps = steps(path)
+    return all_steps[-1] if all_steps else None
+
+
+LAST_GOOD_FILE = "last_good.json"
+
+
+def prune(path: str, keep: int) -> list:
+    """Remove all but the newest ``keep`` complete steps, never
+    touching the ``last_good`` step.  The manifest goes FIRST (inverse
+    of the write protocol: the step turns invisible to pollers before
+    its npz disappears).  Returns the pruned step list."""
+    good = last_good_step(path)
+    victims = [s for s in steps(path)[:-keep] if s != good]
+    for s in victims:
+        for ext in (".json", ".npz"):
+            try:
+                os.remove(os.path.join(path, f"step_{s:08d}{ext}"))
+            except FileNotFoundError:
+                pass
+    return victims
+
+
+def validate(path: str, step: int, like=None) -> None:
+    """Raise unless checkpoint ``step`` would restore cleanly: the
+    manifest parses, the npz opens and every manifest key decompresses
+    (a truncated npz fails here), the key sets agree, and — with
+    ``like`` — they match the target tree.  Shares ``restore``'s
+    failure modes without materializing the full tree placement."""
+    manifest = load_manifest(path, step)
+    saved = set(manifest["keys"])
+    with np.load(os.path.join(path, f"step_{step:08d}.npz")) as data:
+        npz_keys = set(data.files)
+        if npz_keys != saved:
+            raise ValueError(
+                f"checkpoint step {step}: manifest/npz disagree "
+                f"(manifest-only={sorted(saved - npz_keys)} "
+                f"npz-only={sorted(npz_keys - saved)})")
+        for k in data.files:
+            data[k]          # force decompression: catches torn members
+    if like is not None:
+        want = set(_flatten_with_paths(like))
+        if saved != want:
+            raise ValueError(
+                f"checkpoint step {step} does not match the target tree: "
+                f"missing={sorted(want - saved)} "
+                f"extra={sorted(saved - want)}")
+
+
+def mark_good(path: str, step: int, like=None) -> None:
+    """Advance the ``last_good`` pointer to ``step`` — but only after
+    :func:`validate` passes; a torn/corrupt checkpoint raises and the
+    pointer stays where it was."""
+    validate(path, step, like=like)
+    _atomic_write(os.path.join(path, LAST_GOOD_FILE),
+                  lambda tmp: _dump_json(tmp, {"step": step}))
+
+
+def last_good_step(path: str) -> Optional[int]:
+    """The validated rollback anchor, or None (no pointer yet, or the
+    pointed-at step has since vanished)."""
+    p = os.path.join(path, LAST_GOOD_FILE)
+    try:
+        with open(p) as f:
+            step = json.load(f)["step"]
+    except (OSError, json.JSONDecodeError, KeyError, TypeError):
         return None
-    files = set(os.listdir(path))
-    steps = [int(f[5:13]) for f in files
-             if f.startswith("step_") and f.endswith(".npz")
-             and f[:-4] + ".json" in files]
-    return max(steps) if steps else None
+    return step if step in steps(path) else None
 
 
 def load_manifest(path: str, step: int) -> dict:

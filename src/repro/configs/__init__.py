@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from .base import (AttentionSpec, ByzantineConfig, InputShape, ModelConfig,
-                   MoESpec, RWKVSpec, SSMSpec, TrainConfig)
+                   MoESpec, RecoveryConfig, RWKVSpec, SSMSpec, TrainConfig)
 from .shapes import SHAPES, get_shape
 
 from . import (dbrx_132b, deepseek_v2_236b, minicpm3_4b, musicgen_large,

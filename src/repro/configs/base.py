@@ -251,6 +251,46 @@ class ByzantineConfig:
 
 
 @dataclass(frozen=True)
+class RecoveryConfig:
+    """Fault-detection and self-healing knobs (DESIGN.md §Faults).
+
+    ``guard`` compiles the finite-gradient / loss-spike guard INTO the
+    jitted train step: a non-finite gnorm/loss or a loss above
+    ``spike_mult``× the supervisor's EMA holds the update (params and
+    optimizer state pass through unchanged via ``where``), and a
+    per-worker finiteness vector (``worker_ok``) rides out as a metric
+    so the supervisor can evict the implicated workers from the traced
+    validity mask — zero recompiles, one extra scalar psum.  The guard
+    requires the elastic worker set (``ByzantineConfig.quorum/max_m``):
+    eviction is a validity-mask edit.  Everything else here is
+    host-side supervisor policy (faults/supervisor.py)."""
+
+    guard: bool = False
+    spike_mult: float = 10.0      # hold when loss > spike_mult * EMA
+    ema_decay: float = 0.9        # loss EMA decay (host-side)
+    evict_after: int = 1          # worker_ok strikes before eviction
+    readmit_after: int = 8        # probation steps before re-admission
+    rollback_after: int = 2       # consecutive held steps before rollback
+    max_rollbacks: int = 3        # retry budget; exceeding it raises
+    backoff_base: int = 2         # cooldown = base * 2^(rollbacks-1) steps
+    keep_ckpts: int = 3           # keep-last-k retention (checkpoint/ckpt)
+
+    def __post_init__(self):
+        if self.spike_mult <= 1.0:
+            raise ValueError(f"spike_mult must be > 1, got {self.spike_mult}")
+        if not 0.0 < self.ema_decay < 1.0:
+            raise ValueError(f"ema_decay must be in (0, 1), got "
+                             f"{self.ema_decay}")
+        for k in ("evict_after", "readmit_after", "rollback_after",
+                  "backoff_base", "keep_ckpts"):
+            if getattr(self, k) < 1:
+                raise ValueError(f"{k} must be >= 1, got {getattr(self, k)}")
+        if self.max_rollbacks < 0:
+            raise ValueError(f"max_rollbacks must be >= 0, got "
+                             f"{self.max_rollbacks}")
+
+
+@dataclass(frozen=True)
 class TrainConfig:
     model: ModelConfig
     byzantine: ByzantineConfig = field(default_factory=ByzantineConfig)
@@ -262,6 +302,9 @@ class TrainConfig:
     seed: int = 0
     microbatch: int = 0           # 0 = no grad accumulation
     remat: str = "none"           # none | block  (activation checkpointing)
+    # fault detection / self-healing (DESIGN.md §Faults): recovery.guard
+    # compiles the finite-gradient + loss-spike hold into the step
+    recovery: RecoveryConfig = field(default_factory=RecoveryConfig)
     # robust-aggregation execution strategy (DESIGN.md §2):
     #   scope  "global"  — paper-faithful: full per-worker gradient matrix
     #                      materialized, one global C1∩C2 selection.

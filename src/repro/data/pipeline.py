@@ -43,6 +43,34 @@ def timing_attack_spec(byz: Optional[ByzantineConfig]):
 STRAGGLE_DISTS = ("none", "exp", "pareto")
 
 
+def parse_straggle(arg: str) -> tuple:
+    """Parse a ``dist[:scale]`` straggle argument into ``(dist, scale)``.
+
+    One parser for every entry point (CLI, chaos harness, tests) so the
+    error text always names the legal distributions.  ``none`` takes no
+    scale; ``exp``/``pareto`` default to scale 1.0 and reject
+    non-positive scales loudly."""
+    dist, sep, scale_s = str(arg).partition(":")
+    if dist not in STRAGGLE_DISTS:
+        raise ValueError(
+            f"straggle distribution {dist!r}: choose from "
+            f"{', '.join(STRAGGLE_DISTS)} (format: dist[:scale], "
+            f"e.g. exp:0.5)")
+    if not sep:
+        return dist, 1.0
+    if dist == "none":
+        raise ValueError("straggle 'none' takes no scale")
+    try:
+        scale = float(scale_s)
+    except ValueError:
+        raise ValueError(
+            f"straggle scale {scale_s!r} is not a number "
+            f"(format: dist[:scale], e.g. pareto:2.0)") from None
+    if not scale > 0:
+        raise ValueError(f"straggle scale must be positive, got {scale}")
+    return dist, scale
+
+
 class ArrivalSchedule:
     """Per-step worker arrival delays and the quorum-selected active
     set (DESIGN.md §Elastic).

@@ -1,0 +1,12 @@
+"""Fault-injection registry + self-healing supervision (DESIGN.md
+§Faults).  Mirrors the AggregatorSpec/AttackSpec idiom: declarative
+FaultSpecs with seeded Trigger schedules, a ChaosPlan that compiles
+them into per-step masks, and a Supervisor implementing detection →
+hold → evict → rollback over the elastic train loop."""
+from .spec import (SCOPES, ChaosPlan, FaultEvent, FaultSpec, Trigger,
+                   get_spec, register, registered)
+from .supervisor import Supervisor, SupervisorError, feasible_round
+
+__all__ = ["SCOPES", "ChaosPlan", "FaultEvent", "FaultSpec", "Trigger",
+           "get_spec", "register", "registered",
+           "Supervisor", "SupervisorError", "feasible_round"]

@@ -60,6 +60,12 @@ def main(argv=None):
                     help="arrival-delay distribution dist[:scale], dist in "
                          "none|exp|pareto — e.g. 'exp:0.5' (data.pipeline."
                          "ArrivalSchedule)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="run under the recovery supervisor (DESIGN.md "
+                         "§Faults): in-step finite/spike guard, worker "
+                         "eviction, bounded rollback to last_good.  "
+                         "Implies the elastic path (quorum defaults to "
+                         "the full worker count)")
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--agg-layout", default="auto")
@@ -80,10 +86,12 @@ def main(argv=None):
     import dataclasses
 
     from ..checkpoint import ckpt
-    from ..configs import ByzantineConfig, TrainConfig, get_config
+    from ..configs import (ByzantineConfig, RecoveryConfig, TrainConfig,
+                           get_config)
     from ..core import engine, threat
-    from ..data.pipeline import (STRAGGLE_DISTS, ArrivalSchedule,
-                                 LMWorkerPipeline)
+    from ..data.pipeline import (ArrivalSchedule, LMWorkerPipeline,
+                                 parse_straggle)
+    from ..faults import Supervisor
     from ..launch.mesh import n_workers
     from ..models import params as PM
     from ..models import transformer as TF
@@ -96,13 +104,10 @@ def main(argv=None):
     if args.attack != "none" and args.attack not in threat.registered():
         ap.error(f"--attack {args.attack!r}: choose from none, "
                  f"{', '.join(threat.registered())}")
-    straggle, straggle_scale = args.straggle, 1.0
-    if ":" in straggle:
-        straggle, s = straggle.split(":", 1)
-        straggle_scale = float(s)
-    if straggle not in STRAGGLE_DISTS:
-        ap.error(f"--straggle {args.straggle!r}: dist must be one of "
-                 f"{', '.join(STRAGGLE_DISTS)}")
+    try:
+        straggle, straggle_scale = parse_straggle(args.straggle)
+    except ValueError as e:
+        ap.error(f"--straggle {args.straggle!r}: {e}")
     mesh = build_mesh(args.mesh)
     cfg = get_config(args.arch)
     if args.reduced:
@@ -119,7 +124,8 @@ def main(argv=None):
     # the worker set), so resolve the scope before sizing max_m.
     timing = (args.attack != "none"
               and threat.get_spec(args.attack).scope == "timing")
-    elastic = args.quorum > 0 or straggle != "none" or timing
+    elastic = (args.quorum > 0 or straggle != "none" or timing
+               or args.supervise)
     sched = None
     if elastic:
         scope, _ = resolve_strategy(tcfg)
@@ -129,6 +135,9 @@ def main(argv=None):
         tcfg = dataclasses.replace(tcfg, byzantine=bcfg)
         sched = ArrivalSchedule(m, quorum, straggle, straggle_scale,
                                 byz=bcfg, seed=tcfg.seed)
+    if args.supervise:
+        tcfg = dataclasses.replace(tcfg,
+                                   recovery=RecoveryConfig(guard=True))
 
     bundle = build_train_step(tcfg, mesh)
     # blocked scope folds every mesh axis (incl. 'model') into the
@@ -150,6 +159,11 @@ def main(argv=None):
 
     pipe = LMWorkerPipeline(cfg, m, args.batch_per_worker, args.seq,
                             seed=tcfg.seed, byz=bcfg)
+    sup = None
+    if args.supervise:
+        sup = Supervisor(bundle.step_fn, bcfg, tcfg.recovery, m,
+                         ckpt_dir=args.ckpt_dir, like=params,
+                         shardings=psh)
     t_start = time.time()
     history = []
     with mesh:
@@ -157,7 +171,13 @@ def main(argv=None):
             batch = {k: jax.device_put(jnp.asarray(v), bsh[k])
                      for k, v in pipe.batch(step).items()}
             n_active = m
-            if sched is not None:
+            if sup is not None:
+                active = sched.active(step)
+                params, opt_state, met = sup.run_step(
+                    params, opt_state, batch, step,
+                    jax.random.fold_in(key, step), sched_active=active)
+                n_active = int(met["n_active"])
+            elif sched is not None:
                 active = sched.active(step)
                 n_active = int(active.sum())
                 params, opt_state, met = bundle.step_fn(
@@ -168,7 +188,8 @@ def main(argv=None):
                     params, opt_state, batch, jnp.int32(step),
                     jax.random.fold_in(key, step))
             if step % args.log_every == 0 or step == args.steps - 1:
-                met = {k: float(v) for k, v in met.items()}
+                met = {k: v if isinstance(v, str) else float(v)
+                       for k, v in met.items()}
                 history.append({"step": step, "n_active": n_active, **met})
                 act_s = f" active={n_active}/{m}" if sched is not None else ""
                 print(f"step {step:4d} loss={met['loss']:.4f} "
@@ -190,14 +211,26 @@ def main(argv=None):
                     })
             if (args.ckpt_dir and args.ckpt_every
                     and (step + 1) % args.ckpt_every == 0):
-                ckpt.save(args.ckpt_dir, params, step=step + 1)
+                if sup is not None:
+                    sup.checkpoint(params, step + 1)
+                else:
+                    ckpt.save(args.ckpt_dir, params, step=step + 1)
 
     dt = time.time() - t_start
     tok = args.steps * m * args.batch_per_worker * args.seq
     print(f"done: {args.steps} steps, {dt:.1f}s, {tok/dt:.0f} tok/s")
+    if sup is not None:
+        s = sup.summary()
+        print(f"supervisor: holds={s['holds']} evictions={s['evictions']} "
+              f"rollbacks={s['rollbacks']} "
+              f"quorum_shrinks={s['quorum_shrinks']} "
+              f"quorum_holds={s['quorum_holds']}")
     if args.ckpt_dir:
         p = pathlib.Path(args.ckpt_dir)
-        ckpt.save(str(p), params, step=args.steps)
+        if sup is not None:
+            sup.checkpoint(params, args.steps)
+        else:
+            ckpt.save(str(p), params, step=args.steps)
         (p / "history.json").write_text(json.dumps(history, indent=1))
         print(f"checkpoint -> {p}")
     return history

@@ -21,6 +21,17 @@ compile per distinct prompt length (DESIGN.md §Serve).
 MoE caveat: routing is cross-batch, so dead slots consume expert
 capacity in batched decode; at serve batch sizes this only perturbs
 capacity-dropped tokens (exact parity tests use dense configs).
+
+Stalls + timeouts (DESIGN.md §Faults): a slot can stop making progress
+(wedged device — injected by the ``slot_stall`` fault via
+``inject_stall``).  Stalled slots are masked out of the live decode set
+(the same traced mask, so no recompile); a ``request_timeout`` > 0 arms
+the watchdog: a slot that makes no progress for that many scheduler
+ticks is torn down and its request REQUEUED from scratch at the front
+of the queue (generated tokens discarded — the cache slot may be the
+wedged resource), counted in ``metrics.requeues``.  Every request
+therefore eventually completes or requeues-then-completes; nothing is
+silently dropped.
 """
 from __future__ import annotations
 
@@ -56,13 +67,20 @@ class ServeLoop:
     def __init__(self, cfg: ModelConfig, max_batch: int, max_len: int,
                  params=None, swapper: Optional[HotSwapper] = None,
                  dtype=None, metrics: Optional[ServeMetrics] = None,
-                 mesh=None, cache_shardings=None):
+                 mesh=None, cache_shardings=None,
+                 request_timeout: int = 0):
         if (params is None) == (swapper is None):
             raise ValueError("pass exactly one of params / swapper")
         self.cfg, self.max_batch, self.max_len = cfg, max_batch, max_len
         self.swapper = swapper
         self._params = params
         self.metrics = metrics or ServeMetrics()
+        # per-request watchdog: 0 = off; N = requeue a slot's request
+        # after N scheduler ticks without decode progress
+        self.request_timeout = request_timeout
+        self.ticks = 0
+        self._last_progress = np.zeros((max_batch,), np.int64)
+        self._stalled_until = np.zeros((max_batch,), np.int64)
         dtype = dtype or (jnp.float32 if cfg.dtype == "float32"
                           else jnp.bfloat16)
         self.cache = SlotCache(cfg, max_batch, max_len, dtype, mesh,
@@ -140,6 +158,7 @@ class ServeLoop:
             self._tok[slot, 0] = first
             self._pos[slot] = S
             self._remaining[slot] = req.max_new - 1
+            self._last_progress[slot] = self.ticks
             if req.max_new <= 1:
                 self._finish(slot)
 
@@ -151,6 +170,35 @@ class ServeLoop:
         self.done[req.rid] = np.asarray(req.tokens, np.int32)
         self.metrics.completed += 1
 
+    # -- fault surface + watchdog --------------------------------------
+    def inject_stall(self, slot: int, ticks: int) -> None:
+        """Fault-injection hook (faults ``slot_stall``, benchmarks/
+        chaos.py): mask ``slot`` out of the live decode set for the
+        next ``ticks`` scheduler ticks — the slot stops making
+        progress, as a wedged device would."""
+        self._stalled_until[slot] = self.ticks + ticks
+
+    def _requeue(self, slot: int) -> None:
+        """Tear down a timed-out slot and restart its request from
+        scratch at the queue front (tokens discarded — the slot, and
+        anything cached in it, may be the wedged resource)."""
+        req = self._req_of_slot[slot]
+        self._req_of_slot[slot] = None
+        self._remaining[slot] = 0
+        self.table.free(req.rid)
+        req.tokens = []
+        self.queue.appendleft(req)
+        self.metrics.requeues += 1
+
+    def _check_timeouts(self) -> None:
+        if not self.request_timeout:
+            return
+        for slot in range(self.max_batch):
+            if (self._req_of_slot[slot] is not None
+                    and self.ticks - self._last_progress[slot]
+                    > self.request_timeout):
+                self._requeue(slot)
+
     # -- main loop ------------------------------------------------------
     def run(self, on_step: Optional[Callable] = None) -> dict:
         """Drain the queue; returns {rid: generated tokens [max_new]}.
@@ -159,15 +207,36 @@ class ServeLoop:
         hooks for tests/demos (e.g. publish a checkpoint mid-stream to
         force a hot swap under live decode).
         """
+        idle = 0
         while self.queue or len(self.table):
+            self.ticks += 1
             self._admit()
-            if self.swapper is not None and self.swapper.poll():
-                self.metrics.observe_swap(self.swapper.last_stall_s)
+            if self.swapper is not None:
+                if self.swapper.poll():
+                    self.metrics.observe_swap(self.swapper.last_stall_s)
+                self.metrics.gauge("ckpt_staleness_s",
+                                   self.swapper.staleness_s())
+                self.metrics.gauge("quarantined_ckpts",
+                                   len(self.swapper.quarantined))
             self.metrics.queue_depth = len(self.queue)
             self.metrics.active_slots = len(self.table)
-            live_np = self._remaining > 0
+            self._check_timeouts()
+            live_np = ((self._remaining > 0)
+                       & (self._stalled_until <= self.ticks))
             if not live_np.any():
-                continue                       # everything finished at admit
+                # nothing can decode: stalled slots (or everything
+                # finished at admit).  Ticks keep advancing so stalls
+                # expire and the watchdog still fires; the idle cap
+                # turns a stall with no timeout into a loud error
+                # instead of a silent spin.
+                idle += 1
+                if idle > 100_000:
+                    raise RuntimeError(
+                        "serve loop wedged: no decode progress for "
+                        "100000 ticks (stalled slots and no "
+                        "request_timeout?)")
+                continue
+            idle = 0
             t0 = time.perf_counter()
             bufs, tok, pos, nxt = self._step(
                 self.params(), self.cache.bufs, jnp.asarray(self._tok),
@@ -178,6 +247,7 @@ class ServeLoop:
             self._tok = np.array(tok)      # copy: host state stays writable
             self._pos = np.array(pos)
             self.steps += 1
+            self._last_progress[live_np] = self.ticks
             n_live = int(live_np.sum())
             self.metrics.observe_decode(dt, n_live)
             for slot in np.nonzero(live_np)[0]:

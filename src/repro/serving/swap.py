@@ -2,25 +2,42 @@
 decode steps.
 
 Two host-visible param trees alternate as active/standby.  ``poll()``
-(called by the serve loop between decode steps) checks
-``ckpt.latest_step`` — cheap directory listing, safe against torn writes
-because the trainer's manifest-last protocol (checkpoint/ckpt.py) makes
-half-written checkpoints invisible — and on a new step restores into the
-STANDBY slot, blocks until the transfer lands, then flips the active
-index.  The decode step never observes a partially-loaded tree, no
-request is dropped, and because both slots have identical
-shapes/dtypes/shardings the jitted decode function re-runs with zero
-recompiles (asserted in tests/test_checkpoint.py).
+(called by the serve loop between decode steps) walks the complete
+checkpoints newest-first — cheap directory listing, safe against torn
+writes because the trainer's manifest-last protocol
+(checkpoint/ckpt.py) makes half-written checkpoints invisible — and on
+a new step restores into the STANDBY slot, blocks until the transfer
+lands, then flips the active index.  The decode step never observes a
+partially-loaded tree, no request is dropped, and because both slots
+have identical shapes/dtypes/shardings the jitted decode function
+re-runs with zero recompiles (asserted in tests/test_checkpoint.py).
+
+Quarantine (DESIGN.md §Faults): a checkpoint that is *complete* by the
+manifest protocol can still fail restore — truncated npz members,
+manifest–npz key disagreement, a tree from the wrong model.  ``poll``
+catches the restore failure, records the step in ``quarantined`` (never
+retried), keeps serving the current live buffer, and falls through to
+the next-newest candidate — so one bad publish never takes the server
+down or wedges it off newer good checkpoints.
 """
 from __future__ import annotations
 
 import time
+import zipfile
+import zlib
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from ..checkpoint import ckpt
+
+# restore failure modes worth quarantining: key/shape mismatches and
+# manifest disagreement (ValueError), unreadable/truncated files
+# (OSError/EOFError/BadZipFile/zlib), garbage manifests (JSON errors
+# are ValueError subclasses).  Anything else propagates.
+RESTORE_ERRORS = (ValueError, KeyError, OSError, EOFError,
+                  zipfile.BadZipFile, zlib.error)
 
 
 class HotSwapper:
@@ -38,32 +55,49 @@ class HotSwapper:
         self.swap_count = 0
         self.swap_stall_s = 0.0
         self.last_stall_s = 0.0
+        self.quarantined: dict = {}            # step -> failure reason
+        self._last_load_t = time.perf_counter()
         if not self.poll() and require_initial:
             raise FileNotFoundError(
-                f"no complete checkpoint under {ckpt_dir}")
+                f"no restorable checkpoint under {ckpt_dir}")
 
     def params(self):
         return self._slots[self._active]
 
+    def staleness_s(self) -> float:
+        """Seconds since params last advanced — the stale-swap-source
+        detection signal the serve loop exports as a gauge."""
+        return time.perf_counter() - self._last_load_t
+
     def poll(self) -> bool:
-        """Load the newest complete checkpoint if it advanced.  Returns
-        True when the active params flipped."""
-        step = ckpt.latest_step(self.ckpt_dir)
-        if step is None or step == self.loaded_step:
-            return False
-        t0 = time.perf_counter()
-        tree, step = ckpt.restore(self.ckpt_dir, self._like, step=step,
-                                  shardings=self._shardings)
-        if self._shardings is None:
-            tree = jax.tree.map(jnp.asarray, tree)
-        jax.block_until_ready(tree)
-        standby = 1 - self._active
-        self._slots[standby] = tree
-        self._active = standby
-        stall = time.perf_counter() - t0
-        if self.loaded_step is not None:       # first load isn't a swap
-            self.swap_count += 1
-            self.swap_stall_s += stall
-        self.last_stall_s = stall
-        self.loaded_step = step
-        return True
+        """Load the newest restorable checkpoint if one newer than the
+        live buffer exists.  Returns True when the active params
+        flipped; quarantined steps are skipped forever."""
+        for step in sorted(ckpt.steps(self.ckpt_dir), reverse=True):
+            if self.loaded_step is not None and step <= self.loaded_step:
+                break
+            if step in self.quarantined:
+                continue
+            t0 = time.perf_counter()
+            try:
+                tree, step = ckpt.restore(self.ckpt_dir, self._like,
+                                          step=step,
+                                          shardings=self._shardings)
+            except RESTORE_ERRORS as e:
+                self.quarantined[step] = f"{type(e).__name__}: {e}"
+                continue                       # fall back to next-newest
+            if self._shardings is None:
+                tree = jax.tree.map(jnp.asarray, tree)
+            jax.block_until_ready(tree)
+            standby = 1 - self._active
+            self._slots[standby] = tree
+            self._active = standby
+            stall = time.perf_counter() - t0
+            if self.loaded_step is not None:   # first load isn't a swap
+                self.swap_count += 1
+                self.swap_stall_s += stall
+            self.last_stall_s = stall
+            self.loaded_step = step
+            self._last_load_t = time.perf_counter()
+            return True
+        return False

@@ -29,7 +29,12 @@ TRAIN_KEYS = ("step", "gnorm", "n_selected", "n_selected_min", "n_active",
 
 
 def append_row(ckpt_dir: str, row: dict) -> None:
-    """Append one training telemetry row (validates the schema keys)."""
+    """Append one training telemetry row (validates the schema keys).
+
+    Each row is flushed AND fsynced: a host crash mid-run loses at most
+    the in-flight row (which the torn-tail-tolerant ``read_rows``
+    skips), never buffered complete rows — the recovery supervisor's
+    post-mortem reads ride on this (DESIGN.md §Faults)."""
     missing = [k for k in TRAIN_KEYS if k not in row]
     if missing:
         raise ValueError(f"telemetry row missing keys {missing}")
@@ -37,6 +42,7 @@ def append_row(ckpt_dir: str, row: dict) -> None:
     with open(os.path.join(ckpt_dir, TELEMETRY_FILE), "a") as f:
         f.write(json.dumps({k: row[k] for k in row}) + "\n")
         f.flush()
+        os.fsync(f.fileno())
 
 
 def read_rows(ckpt_dir: str) -> list:
@@ -82,6 +88,7 @@ class ServeMetrics:
         self.swaps = 0
         self.swap_stall_s = 0.0
         self.prefills = 0
+        self.requeues = 0         # watchdog-restarted requests (§Faults)
         self._gauges: dict = {}
         self._t0 = time.perf_counter()
 
@@ -107,6 +114,7 @@ class ServeMetrics:
             "queue_depth": self.queue_depth,
             "active_slots": self.active_slots,
             "requests_completed": self.completed,
+            "requests_requeued": self.requeues,
             "prefills": self.prefills,
             "swaps": self.swaps,
             "swap_stall_ms": self.swap_stall_s * 1e3,

@@ -133,20 +133,27 @@ def _build_blocked_step(tcfg, mesh, opt, layout):
     remat = tcfg.remat == "block"
     metric_spec = P()
     elastic = bcfg.elastic
+    guard = tcfg.recovery.guard
     # the per-step active mask is a TRACED [m] f32 arg (replicated):
     # one compiled step serves every active set up to m slots —
-    # changing who straggles never recompiles (DESIGN.md §Elastic)
-    extra = (P(),) if elastic else ()
+    # changing who straggles never recompiles (DESIGN.md §Elastic).
+    # The guard (§Faults) adds a second traced [m] vector — the grad
+    # fault mask — and a per-worker finiteness metric; both replicated,
+    # so fault churn never recompiles either.
+    extra = (P(), P()) if guard else ((P(),) if elastic else ())
+    mspecs = {"loss": metric_spec, "ce": metric_spec,
+              "gnorm": metric_spec, "n_selected": metric_spec,
+              "n_selected_min": metric_spec}
+    if guard:
+        mspecs["worker_ok"] = metric_spec
 
     @partial(shard_map, mesh=mesh,
              in_specs=(pspecs, ospecs, bspecs, P(), P(), *extra),
-             out_specs=(pspecs, ospecs, {"loss": metric_spec, "ce": metric_spec,
-                                         "gnorm": metric_spec,
-                                         "n_selected": metric_spec,
-                                         "n_selected_min": metric_spec}),
+             out_specs=(pspecs, ospecs, mspecs),
              axis_names=set(waxes), check_vma=False)
     def step(params, opt_state, batch, step_idx, key, *rest):
         activef = rest[0] if elastic else None
+        faultf = rest[1] if guard else None
         lbatch = _local_batch(batch)
         lspecs = {k: _layer_slice_specs(v) for k, v in pspecs.items()
                   if k.startswith("seg_")}
@@ -178,8 +185,17 @@ def _build_blocked_step(tcfg, mesh, opt, layout):
                          for k, b in barriers.items()}
                 top_hook = lambda p: top_barrier(
                     p, toks["top"], jnp.float32(0), keyf)
-            return TF.loss_fn(cfg, params, lbatch, remat=remat,
-                              seg_hooks=hooks, top_hook=top_hook)
+            loss, met = TF.loss_fn(cfg, params, lbatch, remat=remat,
+                                   seg_hooks=hooks, top_hook=top_hook)
+            if guard:
+                # fault injection rides the LOSS inside the
+                # differentiated function: autodiff propagates the NaN
+                # into this worker's entire gradient, exactly like a
+                # real fp blow-up on the device would
+                f = faultf[jax.lax.axis_index(waxes)]
+                loss = loss * jnp.where(f > 0, jnp.float32(jnp.nan),
+                                        jnp.float32(1.0))
+            return loss, met
 
         (loss, met), (agg, tgrads) = jax.value_and_grad(
             lfn, argnums=(0, 1), has_aux=True)(params, toks)
@@ -210,13 +226,35 @@ def _build_blocked_step(tcfg, mesh, opt, layout):
         n_sel = (jnp.sum(counts * sel_hist)
                  / jnp.maximum(jnp.sum(sel_hist), 1.0))
         n_sel_min = jnp.argmax(sel_hist > 0).astype(jnp.float32)
+        if guard:
+            # per-worker finiteness, psum'd into a replicated [m]
+            # vector — the supervisor's eviction signal.  Loss metrics
+            # become ACTIVE-masked means with exact where-masking so
+            # one NaN worker (faulted but not yet evicted, or evicted
+            # but still computing) can't keep the run's loss NaN.
+            idx = jax.lax.axis_index(waxes)
+            ok_i = jnp.isfinite(loss).astype(jnp.float32)
+            worker_ok = jax.lax.psum(
+                jax.nn.one_hot(idx, m, dtype=jnp.float32) * ok_i, waxes)
+            w = activef[idx] * ok_i
+            denom = jnp.maximum(jax.lax.psum(w, waxes), 1.0)
+            loss_m = jax.lax.psum(
+                w * jnp.where(jnp.isfinite(loss), loss, 0.0), waxes) / denom
+            ce_m = jax.lax.psum(
+                w * jnp.where(jnp.isfinite(met["ce"]), met["ce"], 0.0),
+                waxes) / denom
+        else:
+            loss_m = jax.lax.pmean(loss, waxes)
+            ce_m = jax.lax.pmean(met["ce"], waxes)
         metrics = {
-            "loss": jax.lax.pmean(loss, waxes),
-            "ce": jax.lax.pmean(met["ce"], waxes),
+            "loss": loss_m,
+            "ce": ce_m,
             "gnorm": gnorm,
             "n_selected": n_sel,
             "n_selected_min": n_sel_min,
         }
+        if guard:
+            metrics["worker_ok"] = worker_ok
         return new_params, new_opt, metrics
 
     return step, pspecs, ospecs, bspecs
@@ -246,6 +284,7 @@ def _build_global_step(tcfg, mesh, opt, layout):
     remat = tcfg.remat == "block"
     is_pspec = lambda x: isinstance(x, P)
     elastic = bcfg.elastic
+    guard = tcfg.recovery.guard
     extra = (P(),) if elastic else ()
 
     # full-manual aggregation region: worker collectives in any engine
@@ -274,25 +313,60 @@ def _build_global_step(tcfg, mesh, opt, layout):
         return agg, n_sel
 
     def step(params, opt_state, batch, step_idx, key, *rest):
-        def wloss(p, wbatch):
-            return TF.loss_fn(cfg, p, wbatch, remat=remat)
+        activef = rest[0] if elastic else None
+        faultf = rest[1] if guard else None
 
-        (loss, met), grads = jax.vmap(
-            jax.value_and_grad(wloss, has_aux=True),
-            in_axes=(None, 0))(params, batch)
+        if guard:
+            # the fault flag multiplies the LOSS inside the
+            # differentiated function, so autodiff turns one flag into
+            # a fully-NaN per-worker gradient — a faithful stand-in
+            # for an fp blow-up on that worker's device
+            def wloss(p, wbatch, f):
+                loss, met = TF.loss_fn(cfg, p, wbatch, remat=remat)
+                return loss * jnp.where(f > 0, jnp.float32(jnp.nan),
+                                        jnp.float32(1.0)), met
+
+            (loss, met), grads = jax.vmap(
+                jax.value_and_grad(wloss, has_aux=True),
+                in_axes=(None, 0, 0))(params, batch, faultf)
+        else:
+            def wloss(p, wbatch):
+                return TF.loss_fn(cfg, p, wbatch, remat=remat)
+
+            (loss, met), grads = jax.vmap(
+                jax.value_and_grad(wloss, has_aux=True),
+                in_axes=(None, 0))(params, batch)
         # pin the per-worker grad stack to [worker axes, *param sharding]
         # so the hand-off into the manual region inserts no resharding
         grads = jax.tree.map(
             lambda g, s: jax.lax.with_sharding_constraint(
                 g, NamedSharding(mesh, P(wspec, *s))),
             grads, pspecs, is_leaf=is_pspec)
-        agg, n_sel = agg_region(grads, key, *rest)
+        agg, n_sel = agg_region(grads, key,
+                                *((activef,) if elastic else ()))
         new_params, new_opt = opt.update(agg, opt_state, params, step_idx)
         gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
                              for g in jax.tree.leaves(agg)))
-        metrics = {"loss": jnp.mean(loss), "ce": jnp.mean(met["ce"]),
+        if guard:
+            # active-masked finite means + the per-worker finiteness
+            # vector (the supervisor's eviction signal); exact
+            # where-masking keeps one NaN worker from poisoning the
+            # run's loss metric forever
+            worker_ok = jnp.isfinite(loss).astype(jnp.float32)
+            w = (activef > 0).astype(jnp.float32) * worker_ok
+            denom = jnp.maximum(jnp.sum(w), 1.0)
+            loss_m = jnp.sum(
+                w * jnp.where(jnp.isfinite(loss), loss, 0.0)) / denom
+            ce_m = jnp.sum(
+                w * jnp.where(jnp.isfinite(met["ce"]), met["ce"],
+                              0.0)) / denom
+        else:
+            loss_m, ce_m = jnp.mean(loss), jnp.mean(met["ce"])
+        metrics = {"loss": loss_m, "ce": ce_m,
                    "gnorm": gnorm,
                    "n_selected": n_sel, "n_selected_min": n_sel}
+        if guard:
+            metrics["worker_ok"] = worker_ok
         return new_params, new_opt, metrics
 
     return step, pspecs, ospecs, bspecs
@@ -308,11 +382,26 @@ def build_train_step(tcfg: TrainConfig, mesh, jit: bool = True) -> StepBundle:
     0/1, who reached this round's quorum), defaulting to all-ones.  The
     mask is traced, so steps at m, m−2, m+2 active workers share ONE
     executable.  Passing ``active`` to a non-elastic step is an error —
-    the fixed-m graphs would silently ignore it."""
+    the fixed-m graphs would silently ignore it.
+
+    With ``tcfg.recovery.guard`` (requires elastic) the step grows two
+    more traced args — ``faults`` ([m] 0/1 grad-fault injection flags)
+    and ``loss_ema`` (scalar, < 0 disarms the spike detector) — plus
+    metrics ``worker_ok`` ([m] per-worker gradient finiteness),
+    ``step_ok``, ``grad_finite`` and ``loss_spike``.  A non-finite or
+    spiking step returns the INPUT params/opt state unchanged (in-jit
+    hold); the host-side supervisor (faults/supervisor.py) reads the
+    metrics and decides eviction / rollback."""
     opt = get_optimizer(tcfg)
     scope, layout = resolve_strategy(tcfg)
     bcfg = tcfg.byzantine
+    rcfg = tcfg.recovery
     m = n_workers(mesh, scope)
+    if rcfg.guard and not bcfg.elastic:
+        raise ValueError(
+            "recovery.guard requires an elastic ByzantineConfig (set "
+            "quorum/max_m): eviction and hold are expressed through the "
+            "traced active mask")
     if bcfg.elastic:
         if bcfg.max_m and bcfg.max_m != m:
             raise ValueError(
@@ -329,7 +418,39 @@ def build_train_step(tcfg: TrainConfig, mesh, jit: bool = True) -> StepBundle:
     # shard_map enumerates its metric keys in out_specs, so new
     # replicated metrics belong in this wrapper (DESIGN.md §Serve
     # telemetry schema rides on it)
-    if bcfg.elastic:
+    if rcfg.guard:
+        # in-jit detection + hold (DESIGN.md §Faults): non-finite
+        # aggregate, non-finite loss, or a loss spike vs the traced EMA
+        # parks BOTH params and optimizer state on their old values —
+        # one fused select per leaf, no host round-trip, and because
+        # active/faults/loss_ema are all traced the guard costs zero
+        # recompiles across fault churn.  jnp.where is an exact select:
+        # holding against a NaN candidate tree is safe.
+        def step(params, opt_state, batch, step_idx, key, active=None,
+                 faults=None, loss_ema=None):
+            act = (jnp.ones((m,), jnp.float32) if active is None
+                   else jnp.asarray(active, jnp.float32))
+            flt = (jnp.zeros((m,), jnp.float32) if faults is None
+                   else jnp.asarray(faults, jnp.float32))
+            # EMA sentinel: < 0 disarms the spike detector (first steps)
+            ema = (jnp.float32(-1.0) if loss_ema is None
+                   else jnp.asarray(loss_ema, jnp.float32))
+            new_p, new_o, met = inner(params, opt_state, batch,
+                                      step_idx, key, act, flt)
+            grad_ok = jnp.isfinite(met["gnorm"])
+            loss_ok = jnp.isfinite(met["loss"])
+            spike = (ema > 0) & (met["loss"] > rcfg.spike_mult * ema)
+            ok = grad_ok & loss_ok & ~spike
+            held_p = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
+                                  new_p, params)
+            held_o = jax.tree.map(lambda n, o: jnp.where(ok, n, o),
+                                  new_o, opt_state)
+            met = {**met, "n_active": jnp.sum(act),
+                   "step_ok": ok.astype(jnp.float32),
+                   "grad_finite": grad_ok.astype(jnp.float32),
+                   "loss_spike": spike.astype(jnp.float32)}
+            return held_p, held_o, met
+    elif bcfg.elastic:
         def step(params, opt_state, batch, step_idx, key, active=None):
             act = (jnp.ones((m,), jnp.float32) if active is None
                    else jnp.asarray(active, jnp.float32))

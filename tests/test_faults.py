@@ -1,0 +1,333 @@
+"""FaultSpec registry, ChaosPlan schedules, checkpoint retention /
+last_good, HotSwapper quarantine, and the recovery supervisor's state
+machine (DESIGN.md §Faults).
+
+The supervisor tests drive a FAKE host-side step function so the full
+policy (eviction, probation re-admission, quorum shrink/hold, bounded
+rollback with backoff) runs in milliseconds; the real guarded compiled
+step is covered by ``test_guarded_step_holds_and_recovers`` on an
+8-device subprocess and end-to-end by ``benchmarks/chaos.py`` in CI.
+"""
+from __future__ import annotations
+
+import textwrap
+
+import numpy as np
+import pytest
+
+from conftest import run_multidevice
+from repro.checkpoint import ckpt
+from repro.configs import ByzantineConfig, RecoveryConfig
+from repro.faults import (ChaosPlan, FaultEvent, FaultSpec, Supervisor,
+                          SupervisorError, Trigger, feasible_round,
+                          get_spec, registered)
+
+SHIPPED = ("corrupt_ckpt", "flap", "host_crash", "nan_burst",
+           "slot_stall", "stale_swap", "torn_ckpt")
+
+
+# ---------------------------------------------------------------------------
+# registry + triggers
+# ---------------------------------------------------------------------------
+
+def test_registry_ships_the_taxonomy():
+    assert set(SHIPPED) <= set(registered())
+    with pytest.raises(KeyError, match="registered"):
+        get_spec("nope")
+    with pytest.raises(ValueError, match="scope"):
+        FaultSpec("x", "disk", lambda: None)
+    with pytest.raises(ValueError, match="permanent"):
+        FaultSpec("x", "grad", lambda: None, permanent=True)
+
+
+def test_trigger_schedules():
+    rng = np.random.default_rng(0)
+    # one-shot with duration
+    s = Trigger(at=3, duration=2).schedule(8, rng)
+    np.testing.assert_array_equal(s, [0, 0, 0, 1, 1, 0, 0, 0])
+    # periodic
+    s = Trigger(at=1, every=3).schedule(8, rng)
+    np.testing.assert_array_equal(s, [0, 1, 0, 0, 1, 0, 0, 1])
+    # bernoulli draws are seeded => reproducible, and never before `at`
+    a = Trigger(at=4, prob=0.5).schedule(64, np.random.default_rng(7))
+    b = Trigger(at=4, prob=0.5).schedule(64, np.random.default_rng(7))
+    np.testing.assert_array_equal(a, b)
+    assert not a[:4].any() and a.any()
+    with pytest.raises(ValueError, match="duration"):
+        Trigger(duration=0)
+    with pytest.raises(ValueError, match="prob"):
+        Trigger(prob=1.5)
+
+
+def test_chaos_plan_masks_crash_vs_flap():
+    """host_crash latches (permanent); flap rejoins after duration."""
+    plan = ChaosPlan([
+        FaultEvent("host_crash", Trigger(at=2), workers=(6,)),
+        FaultEvent("flap", Trigger(at=3, duration=2), workers=(4,)),
+        FaultEvent("nan_burst", Trigger(at=5), workers=(1,)),
+    ], m=8, n_steps=10)
+    expect_gone = {2: {6}, 3: {6, 4}, 4: {6, 4}, 5: {6}, 9: {6}}
+    for step, gone in expect_gone.items():
+        mask = plan.worker_mask(step)
+        assert set(np.flatnonzero(mask == 0)) == gone, step
+    assert plan.grad_faults(4).sum() == 0
+    np.testing.assert_array_equal(np.flatnonzero(plan.grad_faults(5)), [1])
+    # edges: flap fires once at 3 (not again at 4)
+    assert [ev.fault for ev, _ in plan.fired(3)] == ["flap"]
+    assert plan.fired(4) == []
+    # drawn targets are recorded back onto the events + describe() rows
+    plan2 = ChaosPlan([FaultEvent("nan_burst", Trigger(at=0), n=2)],
+                      m=8, n_steps=4, seed=3)
+    assert len(plan2.events[0].workers) == 2
+    rows = plan2.describe()
+    assert rows[0]["fault"] == "nan_burst" and rows[0]["at"] == 0
+    assert rows[0]["workers"] == list(plan2.events[0].workers)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint retention + last_good + validation
+# ---------------------------------------------------------------------------
+
+def _tree(x):
+    return {"w": np.full((4, 3), x, np.float32), "b": np.arange(3.0)}
+
+
+def test_keep_last_k_spares_last_good(tmp_path):
+    d = str(tmp_path)
+    for s in range(1, 6):
+        ckpt.save(d, _tree(s), step=s, keep=2)
+        if s == 2:
+            ckpt.mark_good(d, 2)
+    # keep=2 would leave {4, 5}; last_good=2 survives regardless of age
+    assert ckpt.steps(d) == [2, 4, 5]
+    assert ckpt.last_good_step(d) == 2
+
+
+def test_mark_good_refuses_corruption(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, _tree(1), step=1)
+    ckpt.mark_good(d, 1, like=_tree(0))
+    ckpt.save(d, _tree(2), step=2)
+    get_spec("corrupt_ckpt").inject(d, 2, np.random.default_rng(0))
+    with pytest.raises(ValueError, match="disagree"):
+        ckpt.mark_good(d, 2)
+    assert ckpt.last_good_step(d) == 1      # pointer did not move
+    ckpt.save(d, _tree(3), step=3)
+    get_spec("torn_ckpt").inject(d, 3, np.random.default_rng(0))
+    with pytest.raises(Exception):          # zlib/zip error on truncation
+        ckpt.validate(d, 3)
+
+
+def test_hot_swapper_quarantines_bad_publish(tmp_path):
+    jax = pytest.importorskip("jax")
+    from repro.serving.swap import HotSwapper
+    d = str(tmp_path)
+    like = _tree(0)
+    ckpt.save(d, _tree(1), step=1)
+    sw = HotSwapper(d, like=like)
+    assert sw.loaded_step == 1
+    ckpt.save(d, _tree(2), step=2)
+    get_spec("corrupt_ckpt").inject(d, 2, np.random.default_rng(0))
+    assert not sw.poll()                    # bad publish: kept serving 1
+    assert sw.loaded_step == 1 and 2 in sw.quarantined
+    ckpt.save(d, _tree(3), step=3)
+    assert sw.poll()                        # newer good ckpt still lands
+    assert sw.loaded_step == 3
+    assert not sw.poll()                    # quarantined step never retried
+    np.testing.assert_array_equal(np.asarray(sw.params()["w"]),
+                                  _tree(3)["w"])
+
+
+# ---------------------------------------------------------------------------
+# supervisor state machine (fake host-side step)
+# ---------------------------------------------------------------------------
+
+BCFG = ByzantineConfig(alpha=0.25, max_m=8, quorum=6)
+
+
+class FakeStep:
+    """Mimics the guarded step's contract: held when any active worker
+    is faulted, per-worker finiteness in ``worker_ok``."""
+
+    def __init__(self, m=8):
+        self.m = m
+        self.calls = 0
+
+    def __call__(self, params, opt_state, batch, step, key, act, flt, ema):
+        self.calls += 1
+        act, flt = np.asarray(act), np.asarray(flt)
+        bad = (flt > 0) & (act > 0)
+        ok = not bad.any()
+        met = {"loss": 1.0 if ok else float("nan"), "ce": 1.0,
+               "gnorm": 1.0 if ok else float("nan"),
+               "n_selected": act.sum(), "n_selected_min": act.sum(),
+               "n_active": act.sum(),
+               "worker_ok": 1.0 - bad.astype(np.float32),
+               "step_ok": float(ok), "grad_finite": float(ok),
+               "loss_spike": 0.0}
+        return (params if not ok else params + 1), opt_state, met
+
+
+def test_supervisor_evicts_and_readmits():
+    rcfg = RecoveryConfig(guard=True, evict_after=1, readmit_after=3)
+    sup = Supervisor(FakeStep(), BCFG, rcfg, 8)
+    flt = np.zeros(8, np.float32)
+    flt[5] = 1
+    p, _, met = sup.run_step(0.0, (), None, 0, None, faults=flt)
+    assert met["held"] == "nonfinite" and p == 0.0
+    assert sup.evicted[5] and sup.evictions == 1
+    # evicted worker is masked out -> healthy even though still faulted
+    p, _, met = sup.run_step(p, (), None, 1, None, faults=flt)
+    assert "held" not in met and p == 1.0
+    assert met["n_active"] == 7.0
+    # probation re-admission after readmit_after steps (fault cleared)
+    p, _, met = sup.run_step(p, (), None, 4, None)
+    assert not sup.evicted[5] and sup.readmissions == 1
+    assert met["n_active"] == 8.0
+
+
+def test_supervisor_quorum_shrink_and_hold():
+    # alpha=0.5 makes the bound falsifiable below quorum: feasible iff
+    # n_active > 2*floor(n_active/2), i.e. iff n_active is odd.  (At
+    # alpha=0.25 every n_active >= 1 passes — shrink always runs.)
+    bcfg = ByzantineConfig(alpha=0.5, max_m=8, quorum=7)
+    rcfg = RecoveryConfig(guard=True)
+    sup = Supervisor(FakeStep(), bcfg, rcfg, 8)
+    # 5 < quorum=7 but 5 > 2*floor(.5*5)=4: shrink and run
+    act = np.ones(8, np.float32)
+    act[:3] = 0
+    p, _, met = sup.run_step(0.0, (), None, 0, None, sched_active=act)
+    assert "held" not in met and sup.quorum_shrinks == 1
+    assert met["n_active"] == 5.0
+    # 2 active fails the honest-majority bound (2 <= 2*floor(1)): hold,
+    # the step never runs
+    fake = sup.step_fn
+    calls = fake.calls
+    act = np.zeros(8, np.float32)
+    act[:2] = 1
+    p, _, met = sup.run_step(p, (), None, 1, None, sched_active=act)
+    assert met["held"] == "quorum" and fake.calls == calls
+    assert sup.quorum_holds == 1 and np.isnan(met["loss"])
+    assert feasible_round(5, 0.5) and not feasible_round(2, 0.5)
+
+
+def test_supervisor_rollback_backoff_and_budget(tmp_path):
+    d = str(tmp_path)
+    rcfg = RecoveryConfig(guard=True, evict_after=99, rollback_after=2,
+                          max_rollbacks=2, backoff_base=2, keep_ckpts=4)
+    like = _tree(0)
+    sup = Supervisor(FakeStep(), BCFG, rcfg, 8, ckpt_dir=d, like=like)
+    sup.checkpoint(_tree(7), 1)
+    assert ckpt.last_good_step(d) == 1
+    flt = np.zeros(8, np.float32)
+    flt[3] = 1
+    p = like
+    # two consecutive held steps -> rollback #1 restores last_good
+    p, _, met = sup.run_step(p, (), None, 0, None, faults=flt)
+    assert sup.rollbacks == 0
+    p, _, met = sup.run_step(p, (), None, 1, None, faults=flt)
+    assert sup.rollbacks == 1
+    np.testing.assert_array_equal(p["w"], _tree(7)["w"])
+    # cooldown: held steps during backoff don't re-roll
+    p, _, met = sup.run_step(p, (), None, 2, None, faults=flt)
+    assert sup.rollbacks == 1
+    # past cooldown (step >= 1 + 2*2^0 = 3): two more bad -> rollback #2
+    p, _, met = sup.run_step(p, (), None, 3, None, faults=flt)
+    p, _, met = sup.run_step(p, (), None, 4, None, faults=flt)
+    assert sup.rollbacks == 2
+    # budget exhausted -> SupervisorError, not a crash loop
+    with pytest.raises(SupervisorError, match="budget"):
+        for s in range(7, 20):
+            p, _, met = sup.run_step(p, (), None, s, None, faults=flt)
+
+
+def test_supervisor_rollback_skips_corrupt_last_good(tmp_path):
+    d = str(tmp_path)
+    rcfg = RecoveryConfig(guard=True, evict_after=99, rollback_after=1,
+                          keep_ckpts=4)
+    like = _tree(0)
+    sup = Supervisor(FakeStep(), BCFG, rcfg, 8, ckpt_dir=d, like=like)
+    sup.checkpoint(_tree(5), 1)
+    sup.checkpoint(_tree(6), 2)           # last_good -> 2
+    get_spec("corrupt_ckpt").inject(d, 2, np.random.default_rng(0))
+    flt = np.zeros(8, np.float32)
+    flt[3] = 1
+    p, _, _ = sup.run_step(like, (), None, 0, None, faults=flt)
+    # corrupt last_good skipped, older good anchor restored
+    assert sup.rollbacks == 1
+    np.testing.assert_array_equal(p["w"], _tree(5)["w"])
+    assert any(e["kind"] == "rollback_skip" for e in sup.events)
+
+
+def test_supervisor_requires_elastic():
+    with pytest.raises(ValueError, match="elastic"):
+        Supervisor(FakeStep(), ByzantineConfig(), RecoveryConfig(), 8)
+
+
+# ---------------------------------------------------------------------------
+# the real guarded compiled step (8-device subprocess)
+# ---------------------------------------------------------------------------
+
+def test_guarded_step_holds_and_recovers():
+    """NaN burst on an honest worker: the step holds params on-device
+    and reports the culprit; evicting it recovers — all with zero
+    recompiles (active/faults/ema are traced)."""
+    code = textwrap.dedent("""
+        import dataclasses
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import (ARCHS, TrainConfig, ByzantineConfig,
+                                   RecoveryConfig)
+        from repro.training.step import build_train_step
+        from repro.models import transformer as TF, params as PM
+        from repro.data.pipeline import LMWorkerPipeline
+        from repro.launch.mesh import make_mesh, n_workers
+
+        mesh = make_mesh((8,), ("data",))
+        cfg = ARCHS["qwen3-0.6b"].reduced()
+        bcfg = ByzantineConfig(aggregator="brsgd", attack="sign_flip",
+                               alpha=0.25, membership="prefix",
+                               max_m=8, quorum=6)
+        tcfg = TrainConfig(model=cfg, byzantine=bcfg, optimizer="sgd",
+                           lr=0.05, agg_scope="global", agg_layout="a2a",
+                           recovery=RecoveryConfig(guard=True))
+        bundle = build_train_step(tcfg, mesh)
+        psh, osh, bsh = bundle.shardings(mesh)
+        key = jax.random.PRNGKey(0)
+        params = jax.device_put(PM.init_params(TF.param_defs(cfg), key), psh)
+        pipe = LMWorkerPipeline(cfg, 8, 2, 32, byz=bcfg)
+
+        def one(s, act, flt, ema, params):
+            batch = {k: jax.device_put(jnp.asarray(v), bsh[k])
+                     for k, v in pipe.batch(s).items()}
+            params, _, met = bundle.step_fn(
+                params, (), batch, jnp.int32(s), jax.random.fold_in(key, s),
+                jnp.asarray(act, jnp.float32), jnp.asarray(flt, jnp.float32),
+                np.float32(ema))
+            jax.block_until_ready(met["loss"])
+            return params, {k: np.asarray(v) for k, v in met.items()}
+
+        ones, zeros = np.ones(8, np.float32), np.zeros(8, np.float32)
+        with mesh:
+            for s in range(2):
+                params, met = one(s, ones, zeros, -1.0, params)
+            steady = bundle.step_fn._cache_size()
+            clean = float(met["loss"])
+            assert met["step_ok"] == 1.0 and met["worker_ok"].sum() == 8
+
+            flt = zeros.copy(); flt[5] = 1
+            before = np.asarray(jax.tree.leaves(params)[0])
+            params, met = one(2, ones, flt, clean, params)
+            assert met["step_ok"] == 0.0 and met["grad_finite"] == 0.0
+            assert met["worker_ok"][5] == 0 and met["worker_ok"].sum() == 7
+            assert np.isfinite(met["loss"])     # masked mean stays finite
+            np.testing.assert_array_equal(
+                before, np.asarray(jax.tree.leaves(params)[0]))
+
+            act = ones.copy(); act[5] = 0       # evict: recovers
+            params, met = one(3, act, flt, clean, params)
+            assert met["step_ok"] == 1.0 and met["n_active"] == 7
+            assert np.isfinite(met["loss"])
+            assert bundle.step_fn._cache_size() == steady
+        print("OK steady=" + str(steady))
+    """)
+    assert "OK" in run_multidevice(code, n_devices=8, timeout=560)

@@ -197,6 +197,53 @@ def test_streaming_fold_bitexact_with_bulk(G, data):
     np.testing.assert_array_equal(np.asarray(state.valid), valid)
 
 
+@given(matrices(min_m=3, max_m=12, min_d=1, max_d=40), st.data())
+def test_streaming_fold_survives_mid_stream_drops(G, data):
+    """The fault-tolerance corollary of the streaming contract
+    (DESIGN.md §Faults): workers that CRASH mid-stream — scheduled to
+    arrive in a later bucket but never delivered — must leave the fold
+    bit-exact with the bulk pass over the post-fault validity mask.
+    The accumulator state never has to be rebuilt or corrected when a
+    host dies between arrival buckets; the crash simply edits which
+    rows ever fold in."""
+    from repro.core import engine
+    m, d = G.shape
+    needs = tuple(sorted(data.draw(
+        st.sets(st.sampled_from(ref.STAT_NAMES), min_size=1))))
+    perm = data.draw(st.permutations(list(range(m))))
+    n_sched = data.draw(st.integers(2, m))
+    sched = perm[:n_sched]
+    cuts = sorted(data.draw(st.sets(st.integers(1, n_sched - 1),
+                                    max_size=3)))
+    bounds = [0, *cuts, n_sched]
+    arrival = np.zeros((len(bounds) - 1, m), np.float32)
+    bucket_of = {}
+    for b, (a, e) in enumerate(zip(bounds, bounds[1:])):
+        arrival[b, sched[a:e]] = 1.0
+        for w in sched[a:e]:
+            bucket_of[w] = b
+    # crash schedule: each faulted worker dies at some bucket; if it
+    # dies at (or before) its scheduled arrival bucket, it never lands
+    faulted = data.draw(st.sets(st.sampled_from(list(sched)),
+                                min_size=1, max_size=min(3, n_sched)))
+    for w in faulted:
+        die_at = data.draw(st.integers(0, len(bounds) - 2))
+        if die_at <= bucket_of[w]:
+            arrival[bucket_of[w], w] = 0.0
+    valid = arrival.sum(axis=0)
+    if valid.sum() == 0:            # everyone died before arriving
+        return
+
+    state = engine.stream_leaf_stats(jnp.asarray(G), needs, m,
+                                     jnp.asarray(arrival))
+    bulk = engine.leaf_stats(jnp.asarray(G), needs, m, use_pallas=False,
+                             valid=jnp.asarray(valid))
+    for k in needs:
+        np.testing.assert_array_equal(np.asarray(state.stats[k]),
+                                      np.asarray(bulk[k]), err_msg=k)
+    np.testing.assert_array_equal(np.asarray(state.valid), valid)
+
+
 @given(st.integers(2, 16), st.integers(1, 50))
 def test_identical_workers_all_selected(m, d):
     """If every worker reports the same gradient, nobody is filtered and
