@@ -140,6 +140,25 @@ def _distributed_rows():
     return []
 
 
+def _geomean(ratios, label: str = "") -> float:
+    """Geometric mean over the POSITIVE, finite ratios only.
+
+    A zero or sub-timer-resolution timing used to flow straight into
+    np.log as -inf/NaN and silently corrupt the printed speedup and the
+    committed elastic_overhead fit; bad rows are now dropped with a
+    warning (and an all-bad group returns NaN, which check_bench.py
+    rejects loudly)."""
+    arr = np.asarray(list(ratios), dtype=float)
+    keep = np.isfinite(arr) & (arr > 0)
+    if not np.all(keep):
+        print(f"# WARNING: {label or 'geomean'}: dropped "
+              f"{int((~keep).sum())}/{arr.size} non-positive or "
+              "non-finite timing ratios")
+    if not np.any(keep):
+        return float("nan")
+    return float(np.exp(np.mean(np.log(arr[keep]))))
+
+
 def compare(base: dict, cur: dict) -> None:
     """Print per-(aggregator × layout) speedup of ``cur`` over ``base``
     (geometric mean across the (m, d) grid points both files share)."""
@@ -158,10 +177,11 @@ def compare(base: dict, cur: dict) -> None:
               f"rev={mt.get('git_rev', '?')} date={mt.get('date', '?')}")
     groups: dict = {}
     for k in shared:
-        groups.setdefault(k[:2], []).append(b[k] / c[k])
+        if c[k] > 0:                    # guard the division itself too
+            groups.setdefault(k[:2], []).append(b[k] / c[k])
     print("aggregator,layout,n_points,speedup_geomean")
     for (agg, layout), ratios in sorted(groups.items()):
-        gm = float(np.exp(np.mean(np.log(ratios))))
+        gm = _geomean(ratios, f"compare {agg}/{layout}")
         print(f"{agg},{layout},{len(ratios)},{gm:.2f}x")
 
 
@@ -224,7 +244,7 @@ def main():
     for name in ("brsgd", "mean"):
         xs, ys = [], []
         for (n, m, d), us in times.items():
-            if n == name:
+            if n == name and np.isfinite(us) and us > 0:
                 xs.append([np.log(m), np.log(d), 1.0])
                 ys.append(np.log(us))
         coef, *_ = np.linalg.lstsq(np.asarray(xs), np.asarray(ys), rcond=None)
@@ -236,8 +256,8 @@ def main():
     overhead = {}
     for name in sorted(A.AGGREGATORS):
         ratios = [times_e[k] / times[k] for k in times
-                  if k[0] == name and k in times_e]
-        overhead[name] = float(np.exp(np.mean(np.log(ratios))))
+                  if k[0] == name and k in times_e and times[k] > 0]
+        overhead[name] = _geomean(ratios, f"{name} elastic/local")
         print(f"# {name} elastic/local overhead: x{overhead[name]:.2f}")
 
     # krum m-scaling at fixed d (expect ~quadratic at large m)

@@ -89,6 +89,31 @@ def check(path: str) -> list:
                 and us > 0):
             errors.append(f"{ctx}: us_per_call must be positive finite")
 
+    # derived sections: scaling-law fits and the elastic-overhead table
+    # feed the perf-trajectory compare — garbage there (NaN exponents
+    # from a degenerate geomean, zero overheads) silently corrupts every
+    # later --compare, so reject it at commit time
+    fits = bench.get("fits")
+    if not isinstance(fits, dict) or not fits:
+        errors.append("'fits' must be a non-empty dict of scaling fits")
+    else:
+        for agg, fit in sorted(fits.items()):
+            exps = [fit.get("m_exp"), fit.get("d_exp")] \
+                if isinstance(fit, dict) else [None]
+            if not all(isinstance(v, (int, float)) and math.isfinite(v)
+                       for v in exps):
+                errors.append(f"fits[{agg}]: m_exp/d_exp must be finite "
+                              f"floats, got {fit!r}")
+    eo = bench.get("elastic_overhead")
+    if not isinstance(eo, dict) or not eo:
+        errors.append("'elastic_overhead' must be a non-empty dict")
+    else:
+        for agg, v in sorted(eo.items()):
+            if not (isinstance(v, (int, float)) and math.isfinite(v)
+                    and v > 0):
+                errors.append(f"elastic_overhead[{agg}]: must be positive "
+                              f"finite, got {v!r}")
+
     # every registered aggregator has local rows (needs PYTHONPATH=src;
     # skipped gracefully when repro isn't importable, e.g. bare checkout)
     try:
@@ -104,6 +129,19 @@ def check(path: str) -> list:
                 errors.append(
                     f"registered aggregators without {layout} rows: "
                     f"{sorted(missing)} — re-run benchmarks/agg_cost.py")
+
+    # the cost-model drift gate: measured rows must keep the analytic
+    # shape (within 2x after per-group calibration) and the layout
+    # planner must pick within the acceptance band of the best measured
+    # layout (DESIGN.md §Cost) — a committed bench that fails either is
+    # a perf regression or a broken measurement, not a re-anchor
+    try:
+        from repro.analysis import costmodel
+    except ImportError:
+        costmodel = None
+    if costmodel is not None:
+        errors += costmodel.validate_rows(bench)
+        errors += costmodel.validate_pick(bench)
     return errors
 
 
@@ -179,6 +217,16 @@ def check_contracts(path: str) -> list:
                 f"missing (aggregator × layout) contract coverage: "
                 f"{sorted(missing)} — re-run "
                 f"`python -m repro.launch.lint --all --record`")
+
+    # analytic cross-check: every extracted case must match the cost
+    # model's predicted collective counts/bytes EXACTLY — the contract
+    # formulas and the extractor keep each other honest
+    try:
+        from repro.analysis import costmodel
+    except ImportError:
+        costmodel = None
+    if costmodel is not None and not errors:
+        errors += costmodel.validate_contracts(bench)
     return errors
 
 

@@ -6,17 +6,26 @@ context) and ``hlo`` (lowered text via ``launch.hlo_stats``) — checked
 by the declarative rule registry in :mod:`.rules` over the full
 (aggregator × layout × mesh) matrix in :mod:`.matrix`.  CLI:
 ``python -m repro.launch.lint``.  DESIGN.md §Analysis.
+
+:mod:`.costmodel` adds the analytic side: per-(aggregator × layout ×
+mesh × leaf-shape) cost estimates, the trace-time layout autotuner
+behind ``agg_layout="auto"``, and the predicted-vs-measured drift gate.
+CLI: ``python -m repro.launch.autotune``.  DESIGN.md §Cost.
 """
 from .contract import (COMM_KINDS, KINDS, CollectiveContract, CollectiveOp,
                        merge)
 from .jaxpr import extract, trace
 from .rules import (LintRule, RuleContext, Violation, get_rule,
                     register, registered, run_rules)
-from . import hlo, jaxpr, matrix, rules  # noqa: F401
+from .costmodel import (Cost, HardwareProfile, LayoutPlan, get_profile,
+                        plan_layouts, predict_contract, predict_time)
+from . import costmodel, hlo, jaxpr, matrix, rules  # noqa: F401
 
 __all__ = [
     "COMM_KINDS", "KINDS", "CollectiveContract", "CollectiveOp", "merge",
     "extract", "trace", "LintRule", "RuleContext", "Violation",
     "get_rule", "register", "registered", "run_rules",
-    "hlo", "jaxpr", "matrix", "rules",
+    "Cost", "HardwareProfile", "LayoutPlan", "get_profile",
+    "plan_layouts", "predict_contract", "predict_time",
+    "costmodel", "hlo", "jaxpr", "matrix", "rules",
 ]

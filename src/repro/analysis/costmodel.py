@@ -1,0 +1,687 @@
+"""Analytic cost model + trace-time layout autotuner (DESIGN.md §Cost).
+
+The paper's efficiency claim is O(md) aggregation compute; the repo's
+four execution layouts (local/gather/a2a/blocked, plus the elastic
+masked mode) realise it with very different constant factors per leaf.
+This module makes those constants *predictable*:
+
+  Cost            composable (FLOPs, HBM bytes, collective bytes/hops)
+                  record — the FlopCount idiom: every term is built per
+                  (statistic | column rule | collective) and summed, so
+                  a new aggregator or layout composes existing terms
+                  instead of re-deriving a closed form.
+  HardwareProfile turns a Cost into seconds.  ``tpu_v5e`` is the
+                  roofline lower bound (max of compute/memory/wire
+                  terms, constants from ``launch.roofline``) and drives
+                  the autotuner; ``cpu`` models the forced-host-device
+                  bench rig (serialized devices, additive terms) and
+                  anchors the drift gate.
+  plan_layouts    the trace-time autotuner: scores gather vs a2a per
+                  leaf under ``tpu_v5e`` and returns a LayoutPlan —
+                  big leaves → a2a (wire ~2·v·b beats the gather's
+                  m·v·b), tiny leaves → gather (fewer/cheaper hops),
+                  stat-free mean → the replicated pmean fast path.
+                  Purely shape-driven: deterministic for fixed shapes.
+  predict_contract per-case collective counts/bytes of the lint matrix,
+                  leaf-by-leaf from the same per-leaf formulas the
+                  planner scores — pinned EXACTLY against the
+                  ``CollectiveContract`` extraction (BENCH_contracts).
+  validate_rows   the prediction→measurement loop: measured
+                  BENCH_agg.json rows must be explainable by the
+                  analytic feature shapes within ``factor`` (2×) per
+                  row after a per-group scale calibration — CI fails
+                  on any row that drifts beyond it (check_bench.py,
+                  launch/autotune.py).
+
+Everything here is importable without devices: contract prediction
+uses the *static* sharding resolver (``models.params._spec_for`` takes
+a plain ``{axis: size}`` dict), and planning needs only leaf numels.
+jax-touching imports stay inside functions.
+"""
+from __future__ import annotations
+
+import logging
+import math
+from dataclasses import dataclass, field, replace
+from typing import Iterable, Mapping, Optional, Sequence
+
+import numpy as np
+
+from ..launch.hlo_stats import dtype_bytes
+from ..launch import roofline
+
+log = logging.getLogger("repro.costmodel")
+
+# --------------------------------------------------------------------------
+# Cost — the composable record
+# --------------------------------------------------------------------------
+
+COLL_KINDS = ("all_gather", "all_reduce", "all_to_all", "reduce_scatter",
+              "ppermute")
+
+
+def _merge(a: Mapping, b: Mapping, k: float = 1.0) -> dict:
+    out = dict(a)
+    for key, v in b.items():
+        out[key] = out.get(key, 0.0) + v * k
+    return {key: v for key, v in out.items() if v}
+
+
+@dataclass(frozen=True)
+class Cost:
+    """One additive cost term (or a sum of them).
+
+    ``coll_bytes``/``coll_count`` are keyed by collective kind (the
+    :mod:`.contract` vocabulary) — bytes are per-step payload totals,
+    counts are executions per step, exactly the quantities
+    ``CollectiveContract.summary()`` records.
+    """
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Mapping[str, float] = field(default_factory=dict)
+    coll_count: Mapping[str, float] = field(default_factory=dict)
+
+    def __add__(self, other: "Cost") -> "Cost":
+        return Cost(self.flops + other.flops,
+                    self.hbm_bytes + other.hbm_bytes,
+                    _merge(self.coll_bytes, other.coll_bytes),
+                    _merge(self.coll_count, other.coll_count))
+
+    def __mul__(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.hbm_bytes * k,
+                    _merge({}, self.coll_bytes, k),
+                    _merge({}, self.coll_count, k))
+
+    __rmul__ = __mul__
+
+    @property
+    def total_coll_bytes(self) -> float:
+        return float(sum(self.coll_bytes.values()))
+
+    def to_dict(self) -> dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "coll_bytes": dict(self.coll_bytes),
+                "coll_count": dict(self.coll_count)}
+
+
+ZERO = Cost()
+
+
+def compute(flops: float, hbm_bytes: float = 0.0) -> Cost:
+    return Cost(flops=flops, hbm_bytes=hbm_bytes)
+
+
+def collective(kind: str, nbytes: float, count: float = 1.0) -> Cost:
+    if kind not in COLL_KINDS:
+        raise ValueError(f"unknown collective kind {kind!r}")
+    return Cost(coll_bytes={kind: nbytes * count},
+                coll_count={kind: count})
+
+
+# --------------------------------------------------------------------------
+# hardware profiles
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HardwareProfile:
+    """Seconds from a Cost.  ``additive=False`` is the roofline lower
+    bound (overlap assumed: max of the three terms); ``additive=True``
+    models a rig with no overlap (the CPU bench host).  ``serialize``
+    multiplies compute by the device count sharing one chip (forced
+    host devices)."""
+    name: str
+    flops: float
+    hbm_bw: float
+    coll_bw: float
+    coll_lat_s: float = 1e-6       # per collective execution
+    a2a_lat_factor: float = 2.0    # all_to_all hop premium vs all_gather
+    dispatch_s: float = 0.0        # per-step fixed overhead
+    additive: bool = False
+    serialize: int = 1
+
+    def time_s(self, cost: Cost) -> float:
+        compute_s = cost.flops * self.serialize / self.flops
+        memory_s = cost.hbm_bytes / self.hbm_bw
+        lat = 0.0
+        for kind, n in cost.coll_count.items():
+            f = self.a2a_lat_factor if kind == "all_to_all" else 1.0
+            lat += n * self.coll_lat_s * f
+        coll_s = cost.total_coll_bytes / self.coll_bw + lat
+        if self.additive:
+            return self.dispatch_s + compute_s + memory_s + coll_s
+        return self.dispatch_s + max(compute_s, memory_s, coll_s)
+
+
+PROFILES = {
+    # the planning profile: deterministic, from launch.roofline's
+    # TPU v5e constants — layout choices never depend on the backend
+    # the trace happens to run on
+    "tpu_v5e": HardwareProfile(
+        name="tpu_v5e", flops=roofline.PEAK_FLOPS, hbm_bw=roofline.HBM_BW,
+        coll_bw=roofline.LINK_BW),
+    # the bench rig: 8 forced host devices share one CPU, so per-device
+    # compute serializes and nothing overlaps
+    "cpu": HardwareProfile(
+        name="cpu", flops=5e10, hbm_bw=2e10, coll_bw=2e10,
+        coll_lat_s=2e-5, dispatch_s=3e-5, additive=True, serialize=8),
+}
+
+
+def get_profile(profile) -> HardwareProfile:
+    if isinstance(profile, HardwareProfile):
+        return profile
+    try:
+        return PROFILES[profile]
+    except KeyError:
+        raise KeyError(f"unknown profile {profile!r}; "
+                       f"known: {sorted(PROFILES)}") from None
+
+
+# --------------------------------------------------------------------------
+# analytic compute features — the stat/select contract as FLOP shapes
+# --------------------------------------------------------------------------
+#
+# Everything the executors do per leaf decomposes into four flop
+# classes over the worker matrix [m, d]:
+#
+#   lin     streaming passes (means, L1 norms, masking, the weighted
+#           combine): c·m·d with a small per-term constant
+#   gram    pairwise distances (krum-family): 2·m²·d
+#   sort    the stage-vectorized bitonic stack (kernels.ref
+#           sorted_worker_stack, all elastic sorts): m·log²₂(m)·d
+#   refuse  the row-list bitonic network (kernels.ref
+#           sorted_worker_rows): XLA re-fuses the compare-exchange cone
+#           once PER CONSUMED ROW, so reading r rows costs r·cone(m)·d
+#           with cone(m) ≈ m·log²₂(m)/2 — the honest model of the
+#           measured trimmed-mean cliff, not a smooth idealization.
+#
+# Per-statistic term table (stat names are the engine's leaf_stats
+# contract); column rules and selects add their own terms below.
+#           (lin·m·d, gram·m²·d, needs a coordinate-median sort pass)
+STAT_TERMS = {
+    "scores": (6.0, 0.0, True),
+    "l1": (2.0, 0.0, False),
+    "gram": (0.0, 2.0, False),
+    "d2med": (2.0, 0.0, True),
+}
+_COMBINE_LIN = 2.0          # Σ wᵢgᵢ / Σ wᵢ
+
+# kernels.ref._TRIM_STACK_MIN_M: below this the trimmed-mean column
+# rule reads its kept rows off the row-list network (refuse class);
+# at/above it the stage-vectorized stack takes over.  Pinned against
+# the kernel constant in tests/test_costmodel.py.
+TRIM_STACK_MIN_M = 33
+# XLA:CPU stops re-fusing a consumed row's compare-exchange cone once
+# the network exceeds ~this many compare ops; the materialized
+# intermediates then stream through memory (the refuse_b split below).
+CONE_FUSE_OPS = 512.0
+# working-set threshold for the bench host's last-level cache
+L3_BYTES = 16e6
+
+FEATURE_NAMES = ("const", "fast", "lin", "sort", "gram",
+                 "refuse_s", "refuse_b", "lin_sp", "sort_sp", "gram_sp",
+                 "wire")
+
+
+def _cone(m: int) -> float:
+    lg = math.log2(max(m, 2))
+    return m * lg * lg / 2.0
+
+
+def _trim_rows(m: int, trim_frac: float = 0.25) -> int:
+    k = int(trim_frac * m)
+    if 2 * k >= m:
+        k = (m - 1) // 2
+    return m - 2 * k
+
+
+def _spec_terms(aggregator: str):
+    """(stats frozenset, column kind | None) for an aggregator —
+    resolved from the live engine registry so new registrations are
+    covered, with the shipped column rules recognised by name."""
+    from ..core.engine import get_spec
+    spec = get_spec(aggregator)
+    column = None
+    if spec.column is not None:
+        column = ("trimmed" if "trimmed" in getattr(
+            spec.column, "__name__", "") else "median")
+    return spec.stats, column
+
+
+def compute_features(aggregator: str, m: int, d: float,
+                     elastic: bool = False) -> dict:
+    """Flop-class magnitudes of one local aggregation over [m, d]."""
+    stats, column = _spec_terms(aggregator)
+    lg = math.log2(max(m, 2))
+    stack = m * lg * lg * d
+    lin = sort = refuse = gram = 0.0
+    needs_median = False
+    for s in stats:
+        lw, gw, med = STAT_TERMS.get(s, (2.0, 0.0, False))
+        lin += lw * m * d
+        gram += gw * m * m * d
+        needs_median = needs_median or med
+    if column == "median":
+        needs_median = True
+    elif column == "trimmed":
+        rr = _trim_rows(m)
+        lin += rr * d
+        if elastic or m >= TRIM_STACK_MIN_M:
+            sort += stack
+        else:
+            refuse += rr * _cone(m) * d
+    if needs_median:
+        if elastic:
+            sort += stack
+        else:
+            refuse += 2 * _cone(m) * d      # two rows bracket the median
+    if column is None:
+        lin += _COMBINE_LIN * m * d         # weighted combine
+    if elastic:
+        lin += 2.0 * m * d                  # validity masking passes
+    big_cone = (m * lg * lg) > CONE_FUSE_OPS
+    spill = (m * d * 4.0) > L3_BYTES
+    return {
+        "const": 1.0, "fast": 0.0,
+        "lin": lin, "sort": sort, "gram": gram,
+        "refuse_s": 0.0 if big_cone else refuse,
+        "refuse_b": refuse if big_cone else 0.0,
+        "lin_sp": lin if spill else 0.0,
+        "sort_sp": sort if spill else 0.0,
+        "gram_sp": gram if spill else 0.0,
+        "wire": 0.0,
+    }
+
+
+def local_cost(aggregator: str, m: int, d: float, dtype="f32",
+               elastic: bool = False) -> Cost:
+    """Collapsed Cost of one local aggregation (flops = Σ flop classes,
+    hbm = the G matrix streamed once per pass-equivalent)."""
+    f = compute_features(aggregator, m, d, elastic)
+    flops = f["lin"] + f["sort"] + f["gram"] + f["refuse_s"] + f["refuse_b"]
+    return compute(flops, hbm_bytes=m * d * dtype_bytes(dtype))
+
+
+def row_features(row: Mapping) -> dict:
+    """Feature vector of one BENCH_agg.json timing row.
+
+    Distributed rows (gather/a2a/blocked on the forced-host-device rig)
+    serialize: the gather layout computes stats on the FULL [m, d]
+    matrix on every device (×m work), a2a/blocked on 1/m chunks (×1),
+    and the wire feature carries the serialized payload totals."""
+    agg, layout, m, d = (row["aggregator"], row["layout"],
+                         int(row["m"]), float(row["d"]))
+    if layout in ("local", "elastic"):
+        return compute_features(agg, m, d, elastic=layout == "elastic")
+    fast = agg == "mean" and layout in ("gather", "a2a")
+    rep = m if layout == "gather" else 1.0
+    f = compute_features(agg, m, d)
+    out = {k: 0.0 for k in FEATURE_NAMES}
+    out["const"] = 1.0
+    out["fast"] = 1.0 if fast else 0.0
+    if not fast:
+        for k in ("lin", "sort", "gram", "refuse_s", "refuse_b"):
+            out[k] = f[k] * rep
+    if fast:
+        out["wire"] = m * d * 4
+    elif layout == "gather":
+        out["wire"] = m * m * d * 4 + m * d * 4
+    else:
+        out["wire"] = 2 * m * d * 4
+    return out
+
+
+# --------------------------------------------------------------------------
+# per-leaf collective formulas — engine.aggregate_sharded's conventions
+# --------------------------------------------------------------------------
+
+def leaf_collectives(aggregator: str, layout: str, m: int, numel: int,
+                     dtype="f32", fast_paths: bool = True) -> Cost:
+    """Collective Cost of ONE leaf (per-worker shard numel ``numel``)
+    through one layout — counts and payload bytes exactly as the
+    engine emits them (pinned against the CollectiveContract
+    extraction by predict_contract / tests):
+
+      gather  one all_gather [m, v] for the stats/column view; select
+              specs add the gather-free f32 psum combine.
+      a2a     one all_to_all + one tiled all_gather over the m-padded
+              flattened leaf; the stats psum is accounted separately
+              (:func:`stats_psum_cost` — once per step, not per leaf).
+      mean    fast path: one pmean (all_reduce) per leaf, nothing else.
+    """
+    b = dtype_bytes(dtype)
+    stats, column = _spec_terms(aggregator)
+    mean_fast = aggregator == "mean" and fast_paths
+    if layout == "local":
+        return ZERO
+    if mean_fast and layout in ("gather", "a2a"):
+        return collective("all_reduce", numel * b)
+    padded = m * math.ceil(numel / m)
+    if layout == "a2a":
+        return (collective("all_to_all", padded * b)
+                + collective("all_gather", padded * b))
+    if layout == "gather":
+        cost = ZERO
+        if stats or column is not None:
+            cost += collective("all_gather", m * numel * b)
+        if column is None:                  # select spec: psum combine
+            cost += collective("all_reduce", numel * 4)
+        return cost
+    raise ValueError(f"unknown layout {layout!r}")
+
+
+def stats_psum_cost(aggregator: str, m: int) -> Cost:
+    """The once-per-step stats psum: one all_reduce operand per
+    statistic, [m] f32 each ([m, m] for gram)."""
+    stats, _ = _spec_terms(aggregator)
+    cost = ZERO
+    for s in sorted(stats):
+        elems = m * m if s == "gram" else m
+        cost += collective("all_reduce", elems * 4)
+    return cost
+
+
+def leaf_cost(aggregator: str, layout: str, m: int, numel: int,
+              dtype="f32", fast_paths: bool = True,
+              elastic: bool = False) -> Cost:
+    """Full per-leaf Cost (compute + collectives) of one layout.
+
+    gather computes stats on the full gathered [m, v] on every worker;
+    a2a on this worker's [m, ⌈v/m⌉] chunk — the m× compute asymmetry
+    that, with the m× wire asymmetry, drives the autotuner."""
+    cols = numel if layout == "gather" else math.ceil(numel / m)
+    comp = local_cost(aggregator, m, cols, dtype, elastic)
+    return comp + leaf_collectives(aggregator, layout, m, numel,
+                                   dtype, fast_paths)
+
+
+# --------------------------------------------------------------------------
+# the trace-time autotuner
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LayoutPlan:
+    """Per-leaf layout decisions for one aggregation region."""
+    aggregator: str
+    m: int
+    layouts: tuple                  # "gather" | "a2a" per leaf
+    fast_path: bool = False         # replicated pmean (stat-free mean)
+    profile: str = "tpu_v5e"
+
+    def describe(self) -> str:
+        n = len(self.layouts)
+        n_a2a = sum(1 for l in self.layouts if l == "a2a")
+        head = (f"plan[{self.aggregator} m={self.m} {self.profile}] "
+                f"{n} leaves: {n_a2a} a2a / {n - n_a2a} gather")
+        return head + (" (mean fast path)" if self.fast_path else "")
+
+
+def plan_layouts(aggregator: str, m: int,
+                 leaves: Sequence, profile="tpu_v5e",
+                 fast_paths: bool = True,
+                 elastic: bool = False) -> LayoutPlan:
+    """Score gather vs a2a per leaf and pick the cheaper one.
+
+    ``leaves``: (numel, dtype) pairs of the PER-WORKER leaf shards (what
+    the engine sees inside the manual region).  Deterministic: depends
+    only on the shapes, m, the aggregator contract and the (fixed)
+    planning profile — never on the runtime backend."""
+    prof = get_profile(profile)
+    if aggregator == "mean" and fast_paths and not elastic:
+        return LayoutPlan(aggregator, m, ("gather",) * len(leaves),
+                          fast_path=True, profile=prof.name)
+    n = max(len(leaves), 1)
+    share = stats_psum_cost(aggregator, m) * (1.0 / n)
+    picks = []
+    for numel, dtype in leaves:
+        t = {}
+        for layout in ("gather", "a2a"):
+            cost = leaf_cost(aggregator, layout, m, int(numel), dtype,
+                             fast_paths, elastic)
+            if layout == "a2a":
+                cost += share
+            t[layout] = prof.time_s(cost)
+        # strict inequality: ties (e.g. zero-size leaves) stay on the
+        # paper-faithful gather
+        picks.append("a2a" if t["a2a"] < t["gather"] else "gather")
+    return LayoutPlan(aggregator, m, tuple(picks), profile=prof.name)
+
+
+def predict_time(aggregator: str, layout: str, m: int,
+                 leaves: Sequence, profile="tpu_v5e",
+                 fast_paths: bool = True, elastic: bool = False) -> float:
+    """Predicted step-time lower bound (seconds) of one uniform layout
+    over a leaf list — the roofline combination of the summed Cost."""
+    prof = get_profile(profile)
+    total = ZERO
+    needs_psum = False
+    for numel, dtype in leaves:
+        total += leaf_cost(aggregator, layout, m, int(numel), dtype,
+                           fast_paths, elastic)
+        needs_psum = needs_psum or layout == "a2a"
+    if needs_psum and not (aggregator == "mean" and fast_paths):
+        total += stats_psum_cost(aggregator, m)
+    return prof.time_s(total)
+
+
+# --------------------------------------------------------------------------
+# contract prediction — the 49-case lint matrix, leaf by leaf
+# --------------------------------------------------------------------------
+
+def _lint_leaves(mesh_name: str):
+    """Static leaf inventory of the lint arch on one lint mesh:
+    [(bucket key, full numel, per-worker numel (global scope), stack
+    trips)] — no Mesh, no devices: sharding comes from the static
+    resolver (``params._spec_for`` on a plain {axis: size} dict)."""
+    import jax
+
+    from ..configs import ARCHS
+    from ..models import params as PM
+    from ..models import transformer as TF
+    from .matrix import LINT_ARCH, LINT_MESHES
+
+    cfg = ARCHS[LINT_ARCH].reduced()
+    defs = TF.param_defs(cfg)
+    shape, axes = LINT_MESHES[mesh_name]
+    mesh_shape = dict(zip(axes, shape))
+    model_n = mesh_shape.get("model", 1)
+    is_def = lambda x: isinstance(x, PM.ParamDef)
+    out = []
+    for key, sub in defs.items():
+        for d in jax.tree.leaves(sub, is_leaf=is_def):
+            numel = 1
+            for s in d.shape:
+                numel *= int(s)
+            spec = PM._spec_for(d, mesh_shape, (), True)
+            sharded = any("model" in ((e,) if isinstance(e, str) else
+                                      tuple(e or ()))
+                          for e in spec)
+            v_local = numel // model_n if sharded else numel
+            trips = int(d.shape[0]) if key.startswith("seg_") else 1
+            out.append((key, numel, v_local, trips))
+    return out
+
+
+def predict_contract(aggregator: str, layout: str, mesh_name: str) -> dict:
+    """Predicted per-step collective counts/bytes of one lint-matrix
+    case — same roll-up shape as ``CollectiveContract.summary()``
+    (communication kinds only; axis_index is not communication).
+    Pinned exactly against BENCH_contracts.json by the cost-model test
+    suite and check_bench.py."""
+    from .matrix import LINT_MESHES, N_DEVICES
+
+    if layout == "local":
+        return {"counts": {}, "bytes": {}, "collective_bytes": 0.0}
+    shape, axes = LINT_MESHES[mesh_name]
+    mesh_shape = dict(zip(axes, shape))
+    leaves = _lint_leaves(mesh_name)
+    total = ZERO
+    if layout == "blocked":
+        # every axis is a worker axis; per-bucket a2a aggregation runs
+        # inside the backward scan — seg buckets once per layer slice,
+        # the top bucket once — plus the step's three scalar psums
+        # (gnorm, loss, ce)
+        m = N_DEVICES
+        seg_trips: dict = {}
+        for key, numel, _v, trips in leaves:
+            slice_numel = numel // trips
+            total += leaf_collectives(aggregator, "a2a", m, slice_numel,
+                                      "f32", fast_paths=False) * trips
+            if key.startswith("seg_"):
+                seg_trips[key] = trips
+        bucket_execs = sum(seg_trips.values()) + 1
+        total += stats_psum_cost(aggregator, m) * bucket_execs
+        total += collective("all_reduce", 4.0, count=3)
+    else:
+        m = mesh_shape["data"]
+        needs_psum = False
+        for _key, _numel, v_local, _trips in leaves:
+            total += leaf_collectives(aggregator, layout, m, v_local, "f32")
+            needs_psum = needs_psum or layout == "a2a"
+        # gather on a tensor-parallel mesh closes model-sharded stat
+        # partials with the same worker(+model) psum a2a needs
+        if layout == "gather" and mesh_shape.get("model", 1) > 1:
+            needs_psum = True
+        if needs_psum and aggregator != "mean":
+            total += stats_psum_cost(aggregator, m)
+    counts = {k: v for k, v in sorted(total.coll_count.items())}
+    nbytes = {k: round(v, 1) for k, v in sorted(total.coll_bytes.items())}
+    return {"counts": counts, "bytes": nbytes,
+            "collective_bytes": round(total.total_coll_bytes, 1)}
+
+
+def validate_contracts(contracts: dict) -> list:
+    """Exact predicted-vs-extracted comparison over every case of a
+    BENCH_contracts.json payload.  Returns error strings."""
+    errors = []
+    for c in contracts.get("cases", []):
+        case = f"{c['aggregator']}/{c['layout']}/{c['mesh']}"
+        try:
+            want = predict_contract(c["aggregator"], c["layout"], c["mesh"])
+        except Exception as e:            # unknown aggregator etc.
+            errors.append(f"{case}: prediction failed ({e})")
+            continue
+        got_counts = {k: v for k, v in c["counts"].items()
+                      if k != "axis_index"}
+        if got_counts != want["counts"]:
+            errors.append(f"{case}: collective counts {got_counts} != "
+                          f"predicted {want['counts']}")
+        for k, v in want["bytes"].items():
+            gv = c["bytes"].get(k)
+            if gv is None or abs(gv - v) > 0.5:
+                errors.append(f"{case}: {k} bytes {gv} != predicted {v}")
+        extra = set(c["bytes"]) - set(want["bytes"])
+        if extra:
+            errors.append(f"{case}: unpredicted collective bytes for "
+                          f"{sorted(extra)}")
+        if abs(c["collective_bytes"] - want["collective_bytes"]) > 0.5:
+            errors.append(f"{case}: collective_bytes "
+                          f"{c['collective_bytes']} != predicted "
+                          f"{want['collective_bytes']}")
+    return errors
+
+
+# --------------------------------------------------------------------------
+# the drift gate — measured rows vs the analytic shapes
+# --------------------------------------------------------------------------
+
+def _group_key(row: Mapping):
+    layout = row["layout"]
+    if layout in ("local", "elastic"):
+        return (row["aggregator"], layout)
+    return ("*", layout)        # distributed rows: cross-aggregator fit
+
+
+def fit_group(rows: Sequence[Mapping]):
+    """Calibrate one group: nonnegative least squares of measured times
+    over the analytic features, minimizing RELATIVE error, then a
+    geometric-mean scale.  Returns (per-row predictions, drift array)
+    where drift[i] = measured / predicted (scale-normalized)."""
+    t = np.array([float(r["us_per_call"]) for r in rows])
+    F = np.array([[row_features(r)[n] for n in FEATURE_NAMES]
+                  for r in rows])
+    keep = [j for j in range(F.shape[1]) if F[:, j].any()]
+    # relative least squares with a nonnegativity projection: clip
+    # negative weights and refit on the surviving columns until stable
+    # (at most n_features rounds — each drops at least one column)
+    for _ in range(len(keep)):
+        X = F[:, keep] / t[:, None]
+        w, *_ = np.linalg.lstsq(X, np.ones(len(t)), rcond=None)
+        if np.all(w >= 0.0) or len(keep) == 1:
+            break
+        keep = [j for j, wj in zip(keep, w) if wj > 0]
+        if not keep:
+            keep = [0]
+    w = np.maximum(w, 0.0)
+    pred = np.maximum(F[:, keep] @ w, 1e-9)
+    scale = math.exp(float(np.mean(np.log(t / pred))))
+    pred = pred * scale
+    return pred, t / pred
+
+
+def validate_rows(bench: dict, factor: float = 2.0) -> list:
+    """The drift gate: every measured BENCH_agg.json row must sit
+    within ``factor`` (either way) of the analytic prediction after
+    per-group calibration.  A row that drifts means the measurement
+    changed shape — a perf regression (or a broken bench) — and CI
+    fails instead of silently re-anchoring."""
+    errors = []
+    groups: dict = {}
+    for r in bench.get("rows", []):
+        if not isinstance(r, dict):
+            continue
+        us = r.get("us_per_call")
+        if not (isinstance(us, (int, float)) and math.isfinite(us)
+                and us > 0):
+            continue        # schema checks reject these separately
+        groups.setdefault(_group_key(r), []).append(r)
+    for key in sorted(groups):
+        rows = groups[key]
+        try:
+            pred, drift = fit_group(rows)
+        except Exception as e:
+            errors.append(f"group {key}: cost-model fit failed ({e})")
+            continue
+        for r, p, dd in zip(rows, pred, drift):
+            if dd > factor or dd < 1.0 / factor:
+                errors.append(
+                    f"{r['aggregator']}/{r['layout']} m={r['m']} "
+                    f"d={r['d']}: measured {r['us_per_call']:.1f}us "
+                    f"drifts {max(dd, 1 / dd):.2f}x from the cost-model "
+                    f"prediction {p:.1f}us (> {factor:g}x gate) — "
+                    f"re-profile or fix the regression")
+    return errors
+
+
+def validate_pick(bench: dict, tol: float = 0.25) -> list:
+    """The autotune acceptance check: for every (aggregator × mesh
+    family) with measured distributed rows, the layout the planner
+    picks must be within ``tol`` of the best measured layout's row."""
+    errors = []
+    by_case: dict = {}
+    for r in bench.get("rows", []):
+        if isinstance(r, dict) and r.get("layout") in ("gather", "a2a",
+                                                       "blocked"):
+            by_case.setdefault(
+                (r["aggregator"], int(r["m"]), int(r["d"])), {})[
+                    r["layout"]] = float(r["us_per_call"])
+    for (agg, m, d), times in sorted(by_case.items()):
+        plan = plan_layouts(agg, m, [(d, "f32")])
+        chosen = "a2a" if "a2a" in plan.layouts else "gather"
+        if plan.fast_path:
+            # fast-path rows measure identically through either layout;
+            # take the better of the two measured entries
+            chosen = min(("gather", "a2a"), key=lambda l:
+                         times.get(l, float("inf")))
+        if chosen not in times:
+            errors.append(f"{agg} m={m} d={d}: no measured row for the "
+                          f"planned layout {chosen!r}")
+            continue
+        best = min(times.values())
+        if times[chosen] > best * (1.0 + tol):
+            worst = times[chosen] / best
+            errors.append(
+                f"{agg} m={m} d={d}: planned layout {chosen!r} measures "
+                f"{times[chosen]:.1f}us, {worst:.2f}x the best layout "
+                f"({best:.1f}us) — beyond the {tol:.0%} acceptance band")
+    return errors

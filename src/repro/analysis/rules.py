@@ -75,6 +75,7 @@ class RuleContext:
     budget_factor: float = 2.0
     elastic: bool = False           # elastic quorum round (§Elastic)
     worker_axes: tuple = ()         # mesh axes indexing the workers
+    plan: Optional[tuple] = None    # per-leaf layouts when layout="auto"
 
 
 @dataclass(frozen=True)
@@ -173,7 +174,7 @@ register(LintRule(
 def _check_gather_counts(contract, ctx):
     from ..core.engine import expected_collectives
     want = expected_collectives(ctx.spec, ctx.layout, ctx.n_leaves,
-                                ctx.fast_paths)
+                                ctx.fast_paths, plan=ctx.plan)
     for kind, n in want.items():
         got = contract.count(kind)
         if got != n:
@@ -189,7 +190,8 @@ register(LintRule(
     _check_gather_counts,
     ir=frozenset({"jaxpr"}),
     applies=lambda ctx: (ctx.layout in ("local", "gather", "a2a")
-                         and ctx.spec is not None),
+                         or (ctx.layout == "auto" and ctx.plan is not None))
+                        and ctx.spec is not None,
 ))
 
 

@@ -62,6 +62,7 @@ written exactly once.
 """
 from __future__ import annotations
 
+import logging
 import math
 from dataclasses import dataclass, replace
 from functools import partial
@@ -517,7 +518,7 @@ def spec_with(name: str, **select_kwargs) -> AggregatorSpec:
 
 
 def expected_collectives(spec: AggregatorSpec, layout: str, n_leaves: int,
-                         fast_paths: bool = True) -> dict:
+                         fast_paths: bool = True, plan=None) -> dict:
     """Expected per-step counts of the TRANSIENT data-moving collectives
     (all_gather / all_to_all) :func:`aggregate_sharded` emits — the
     engine's half of the ``one-gather-per-leaf`` lint contract
@@ -530,10 +531,27 @@ def expected_collectives(spec: AggregatorSpec, layout: str, n_leaves: int,
       a2a     one all_to_all (chunk) + one tiled all_gather (unchunk)
               per leaf; the mean fast path (pmean) skips both.
       local   no collectives at all.
+      auto    per-leaf sum over the resolved ``plan`` (an explicit
+              per-leaf layout sequence / LayoutPlan, or — when omitted
+              — :data:`LAST_PLAN` from the traced region).
     """
     if layout == "local":
         return {"all_gather": 0, "all_to_all": 0}
     mean_fast = spec.name == "mean" and fast_paths
+    if layout == "auto":
+        plan = LAST_PLAN if plan is None else plan
+        if plan is None:
+            raise ValueError("layout='auto' needs the resolved plan "
+                             "(none traced yet)")
+        layouts = tuple(getattr(plan, "layouts", plan))
+        if getattr(plan, "fast_path", False) or mean_fast:
+            layouts = ()
+        want = {"all_gather": 0, "all_to_all": 0}
+        for ll in layouts:
+            per = expected_collectives(spec, ll, 1, fast_paths)
+            for k in want:
+                want[k] += per[k]
+        return want
     if layout == "a2a":
         n = 0 if mean_fast else n_leaves
         return {"all_gather": n, "all_to_all": n}
@@ -674,12 +692,59 @@ def _model_origin(model_axes):
     return ok.astype(jnp.float32)
 
 
+# the most recent layout="auto" plan resolved by aggregate_sharded —
+# trace-time introspection for tests and the lint driver (the plan is
+# also logged through the repro.engine logger)
+LAST_PLAN = None
+
+_log = logging.getLogger("repro.engine")
+
+
+def _resolve_plan(spec, m, leaves, layout, plan, elastic,
+                  allow_fast_paths):
+    """Per-leaf layout list for one aggregation region.  A fixed layout
+    broadcasts; "auto" defers to the analytic cost model
+    (analysis.costmodel.plan_layouts) over the LOCAL leaf shards —
+    deterministic in the shapes, logged, and recorded in LAST_PLAN."""
+    global LAST_PLAN
+    if layout != "auto":
+        return (layout,) * len(leaves)
+    if plan is None:
+        from ..analysis import costmodel
+        plan = costmodel.plan_layouts(
+            spec.name, m, [(int(g.size), g.dtype) for g in leaves],
+            fast_paths=allow_fast_paths, elastic=elastic)
+    layouts = tuple(getattr(plan, "layouts", plan))
+    if len(layouts) != len(leaves):
+        raise ValueError(f"layout plan covers {len(layouts)} leaves, "
+                         f"tree has {len(leaves)}")
+    bad = set(layouts) - {"gather", "a2a"}
+    if bad:
+        raise ValueError(f"layout plan contains unknown layouts {bad}")
+    LAST_PLAN = plan
+    _log.info("%s", plan.describe() if hasattr(plan, "describe")
+              else f"layout plan: {layouts}")
+    return layouts
+
+
+def _worker_origin(axes):
+    """1.0 on the devices whose WORKER-axis indices are all zero —
+    the mask that keeps worker-replicated gather-leaf stat partials
+    from being counted m times when a mixed layout plan closes the
+    stats with a worker-axis psum (the a2a leaves' reduction)."""
+    ok = jnp.bool_(True)
+    for a in axes:
+        ok = ok & (jax.lax.axis_index((a,)) == 0)
+    return ok.astype(jnp.float32)
+
+
 def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
                       layout: str = "gather",
                       spec: AggregatorSpec | None = None,
                       allow_fast_paths: bool = True,
                       flatten_columns: bool = False,
-                      model_axes=(), leaf_specs=None, valid=None):
+                      model_axes=(), leaf_specs=None, valid=None,
+                      plan=None):
     """Aggregate a gradient pytree across the worker mesh axes.
 
     Must be called inside a FULL-manual shard_map (every mesh axis
@@ -711,14 +776,26 @@ def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
     the a2a layout the validity mask itself RIDES the stats psum as a
     one-hot slot per active worker — the trace-level signal the
     ``masked-psum-validity`` lint rule checks for (DESIGN.md §Elastic).
+
+    ``layout="auto"`` scores gather vs a2a PER LEAF at trace time
+    (analysis.costmodel.plan_layouts — big leaves → a2a, tiny leaves →
+    gather, stat-free mean → the replicated fast path) and runs the
+    mixed plan: one stats psum closes a2a partials over the worker
+    axes with gather-leaf partials masked to the worker origin, then
+    each leaf combines through its own layout.  ``plan`` overrides the
+    model with an explicit per-leaf layout sequence (or LayoutPlan).
+    The resolved plan is logged and stored in :data:`LAST_PLAN`.
     """
-    if layout not in ("gather", "a2a"):
+    if layout not in ("gather", "a2a", "auto"):
         raise ValueError(f"unknown layout {layout!r}")
     spec = spec or get_spec(cfg.aggregator)
     axes = (axes,) if isinstance(axes, str) else tuple(axes)
     model_axes = tuple(model_axes)
     m = axis_size(axes)
     leaves, tdef = jax.tree.flatten(grads)
+    leaf_layouts = _resolve_plan(spec, m, leaves, layout, plan,
+                                 valid is not None, allow_fast_paths)
+    any_a2a = "a2a" in leaf_layouts
     if leaf_specs is None:
         spec_leaves = [None] * len(leaves)
     else:
@@ -747,8 +824,8 @@ def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
     if spec.column is not None:
         colkw = {"valid": vf, "use_pallas": False} if elastic else {}
         out = []
-        for g in leaves:
-            if layout == "a2a":
+        for g, ll in zip(leaves, leaf_layouts):
+            if ll == "a2a":
                 Gc, _pad = a2a_chunk(g, axes, m)
                 out.append(unchunk(spec.column(Gc, cfg, m, **colkw),
                                    g, axes))
@@ -777,30 +854,38 @@ def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
     # them in place.
     stats = zero_stats(spec.stats, m)
     cached, total_pad = [], 0
-    for g, ps in zip(leaves, spec_leaves):
+    # mixed plans: gather-leaf partials are computed from the full
+    # gathered view, hence REPLICATED across workers — when a2a leaves
+    # force a worker-axis psum they must be masked to the worker origin
+    worigin = _worker_origin(axes) if any_a2a else None
+    for g, ps, ll in zip(leaves, spec_leaves, leaf_layouts):
         n_split = _model_split(ps, model_axes)
-        if layout == "a2a":
+        if ll == "a2a":
             Gv, pad = a2a_chunk(g, axes, m)
             # each model shard pads its own flattened chunk; the psum
             # below sums them, so sharded leaves contribute n_split pads
             total_pad += pad * n_split if n_split > 1 else pad
             cached.append(Gv)
         elif not stats:
+            cached.append(None)
             continue        # stat-free select (mean): nothing to gather
         else:
             Gv = gather_leaf(g, axes, m)
+            cached.append(None)
         part = leaf_stats(Gv, spec.stats, m,
                           valid=vf if elastic else None)
         if origin is not None and n_split == 1:
             # model-replicated leaf: every model shard would add the
             # same partial — keep only the model-origin copy
             part = {k: v * origin for k, v in part.items()}
+        if worigin is not None and ll == "gather":
+            part = {k: v * worigin for k, v in part.items()}
         stats = {k: stats[k] + part[k] for k in stats}
-    if stats and (layout == "a2a" or model_axes):
+    if stats and (any_a2a or model_axes):
         # a2a partials close over the worker axes; model-sharded leaves'
         # partials close over the model axes in the same reduction
-        psum_axes = (axes if layout == "a2a" else ()) + model_axes
-        if elastic and layout == "a2a":
+        psum_axes = (axes if any_a2a else ()) + model_axes
+        if elastic and any_a2a:
             # the validity mask rides the stats psum: each worker
             # contributes its own one-hot slot (masked to the model
             # origin so model shards don't double-count it).  This is
@@ -819,20 +904,26 @@ def aggregate_sharded(grads, cfg: ByzantineConfig, axes=("data",),
 
     # -- phase 2: replicated selection + weighted combine ---------------
     w, st, denom = resolve_select(spec, stats, cfg, m)
-    out = []
-    if layout == "a2a":
-        for g, Gv in zip(leaves, cached):
-            out.append(unchunk(jnp.tensordot(w, Gv, axes=1) / denom, g, axes))
-        # stop XLA hoisting the optimizer's f32 upcast back across the
-        # all_gather (it would re-widen the wire to f32)
-        out = list(jax.lax.optimization_barrier(tuple(out)))
-    else:
-        # gather-free combine: Σᵢ wᵢgᵢ is a psum of each worker's OWN
-        # weighted gradient — no leaf is gathered twice and no gathered
-        # copy crosses the phase boundary.  The psum runs in f32 (a
-        # weighted reduction; 2L wire vs the (m-1)L a re-gather costs).
-        wi = w[jax.lax.axis_index(axes)]
-        for g in leaves:
+    out, a2a_idx = [], []
+    # gather-free combine: Σᵢ wᵢgᵢ is a psum of each worker's OWN
+    # weighted gradient — no leaf is gathered twice and no gathered
+    # copy crosses the phase boundary.  The psum runs in f32 (a
+    # weighted reduction; 2L wire vs the (m-1)L a re-gather costs).
+    wi = (w[jax.lax.axis_index(axes)] if "gather" in leaf_layouts
+          else None)
+    for i, (g, Gv, ll) in enumerate(zip(leaves, cached, leaf_layouts)):
+        if ll == "a2a":
+            out.append(unchunk(jnp.tensordot(w, Gv, axes=1) / denom,
+                               g, axes))
+            a2a_idx.append(i)
+        else:
             agg = jax.lax.psum(wi * g.astype(jnp.float32), axes) / denom
             out.append(agg.astype(g.dtype))
+    if a2a_idx:
+        # stop XLA hoisting the optimizer's f32 upcast back across the
+        # all_gather (it would re-widen the wire to f32)
+        barred = jax.lax.optimization_barrier(
+            tuple(out[i] for i in a2a_idx))
+        for i, v in zip(a2a_idx, barred):
+            out[i] = v
     return jax.tree.unflatten(tdef, out), st

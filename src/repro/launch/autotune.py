@@ -1,0 +1,145 @@
+"""Layout-autotuner CLI: plan, predict, and gate the cost model.
+
+Static companion to ``agg_layout="auto"`` (training/step.py →
+core/engine._resolve_plan → analysis.costmodel.plan_layouts): everything
+here runs WITHOUT devices — the planner and the contract predictor are
+pure functions of shapes, so this is safe in any CI job.
+
+Usage:
+  python -m repro.launch.autotune                # all three checks
+  python -m repro.launch.autotune --plan         # plan the lint arch,
+                                                 #   both meshes, every
+                                                 #   aggregator; assert
+                                                 #   determinism
+  python -m repro.launch.autotune --predict      # BENCH_agg.json drift
+                                                 #   gate + pick check
+  python -m repro.launch.autotune --contracts    # exact predicted-vs-
+                                                 #   extracted counts
+                                                 #   over BENCH_contracts
+  python -m repro.launch.autotune --factor 2.0   # drift gate (×, both
+                                                 #   ways)
+  python -m repro.launch.autotune --tol 0.25     # pick acceptance band
+
+Exit code 1 on any drift/pick/contract failure.  DESIGN.md §Cost.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[3]
+DEFAULT_AGG = REPO_ROOT / "BENCH_agg.json"
+DEFAULT_CONTRACTS = REPO_ROOT / "BENCH_contracts.json"
+
+
+def _load(path) -> dict | None:
+    path = pathlib.Path(path)
+    if not path.exists():
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def run_plan(out=print) -> int:
+    """Plan the lint arch's leaves for every registered aggregator on
+    both lint meshes; print the plans and assert they are deterministic
+    (two calls, identical picks — the trace-cache contract)."""
+    from ..core.engine import registered
+    from ..analysis.costmodel import _lint_leaves, plan_layouts
+    from ..analysis.matrix import LINT_MESHES
+
+    failures = 0
+    for mesh_name in sorted(LINT_MESHES):
+        leaves = [(v_local, "f32")
+                  for _k, _n, v_local, _t in _lint_leaves(mesh_name)]
+        m = dict(zip(LINT_MESHES[mesh_name][1],
+                     LINT_MESHES[mesh_name][0]))["data"]
+        for agg in sorted(registered()):
+            p1 = plan_layouts(agg, m, leaves)
+            p2 = plan_layouts(agg, m, leaves)
+            if p1 != p2:
+                out(f"FAIL {agg}/{mesh_name}: plan not deterministic")
+                failures += 1
+                continue
+            out(f"{mesh_name:>4} m={m} {p1.describe()}")
+    return failures
+
+
+def run_predict(agg_path, factor: float, tol: float, out=print) -> int:
+    from ..analysis.costmodel import validate_pick, validate_rows
+
+    bench = _load(agg_path)
+    if bench is None:
+        out(f"skip: {agg_path} not found (run benchmarks/agg_cost.py)")
+        return 0
+    errors = validate_rows(bench, factor=factor)
+    errors += validate_pick(bench, tol=tol)
+    for e in errors:
+        out(f"FAIL {e}")
+    if not errors:
+        n = len(bench.get("rows", []))
+        out(f"predict: {n} measured rows within {factor:g}x of the "
+            f"cost model; planner picks within {tol:.0%} of best")
+    return len(errors)
+
+
+def run_contracts(contracts_path, out=print) -> int:
+    from ..analysis.costmodel import validate_contracts
+
+    contracts = _load(contracts_path)
+    if contracts is None:
+        out(f"skip: {contracts_path} not found "
+            f"(run python -m repro.launch.lint --all --record)")
+        return 0
+    errors = validate_contracts(contracts)
+    for e in errors:
+        out(f"FAIL {e}")
+    if not errors:
+        n = len(contracts.get("cases", []))
+        out(f"contracts: {n} cases match the predicted collective "
+            f"counts/bytes exactly")
+    return len(errors)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.autotune",
+        description="layout-autotuner planner / drift-gate CLI")
+    ap.add_argument("--plan", action="store_true",
+                    help="plan the lint arch on both meshes")
+    ap.add_argument("--predict", action="store_true",
+                    help="BENCH_agg.json drift gate + pick check")
+    ap.add_argument("--contracts", action="store_true",
+                    help="exact contract prediction check")
+    ap.add_argument("--agg", default=str(DEFAULT_AGG),
+                    help="BENCH_agg.json path")
+    ap.add_argument("--budgets", default=str(DEFAULT_CONTRACTS),
+                    help="BENCH_contracts.json path")
+    ap.add_argument("--factor", type=float, default=2.0,
+                    help="drift gate: measured within FACTOR of "
+                         "predicted, both ways (default 2.0)")
+    ap.add_argument("--tol", type=float, default=0.25,
+                    help="pick acceptance band vs best measured layout "
+                         "(default 0.25)")
+    args = ap.parse_args(argv)
+
+    which = [args.plan, args.predict, args.contracts]
+    run_all = not any(which)
+    failures = 0
+    if args.plan or run_all:
+        failures += run_plan()
+    if args.predict or run_all:
+        failures += run_predict(args.agg, args.factor, args.tol)
+    if args.contracts or run_all:
+        failures += run_contracts(args.budgets)
+    if failures:
+        print(f"autotune: {failures} failure(s)")
+        return 1
+    print("autotune: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,11 +31,68 @@ import re
 from collections import defaultdict
 from typing import Dict, Tuple
 
-_DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
-    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+# Canonical dtype -> bytes-per-element table for the WHOLE repo: the
+# roofline terms, the analytic cost model and the byte lint all import
+# it from here (one table, one module — they can never diverge).
+# Sub-byte dtypes are fractional (s4/u4 pack two elements per byte);
+# "token" is a zero-byte ordering artifact.
+DTYPE_BYTES: dict = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3": 1, "f8e4m3fn": 1, "f8e4m3fnuz": 1, "f8e4m3b11fnuz": 1,
+    "f8e5m2": 1, "f8e5m2fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    "f4e2m1fn": 0.5,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 0.5, "s2": 0.25,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 0.5, "u2": 0.25,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0,
 }
+_DTYPE_BYTES = DTYPE_BYTES          # back-compat alias
+
+# numpy/jax spellings accepted by :func:`dtype_bytes` alongside the HLO
+# short names above
+_DTYPE_ALIASES = {
+    "float64": "f64", "float32": "f32", "float16": "f16",
+    "bfloat16": "bf16",
+    "float8_e4m3": "f8e4m3", "float8_e4m3fn": "f8e4m3fn",
+    "float8_e4m3fnuz": "f8e4m3fnuz",
+    "float8_e4m3b11fnuz": "f8e4m3b11fnuz",
+    "float8_e5m2": "f8e5m2", "float8_e5m2fnuz": "f8e5m2fnuz",
+    "float8_e3m4": "f8e3m4", "float8_e8m0fnu": "f8e8m0fnu",
+    "float4_e2m1fn": "f4e2m1fn",
+    "int64": "s64", "int32": "s32", "int16": "s16", "int8": "s8",
+    "int4": "s4", "int2": "s2",
+    "uint64": "u64", "uint32": "u32", "uint16": "u16", "uint8": "u8",
+    "uint4": "u4", "uint2": "u2",
+    "bool": "pred", "complex64": "c64", "complex128": "c128",
+}
+
+# Tokens that LOOK like an HLO element type.  _SHAPE_RE also matches
+# non-type text such as "replica_groups=[4,2]" ("groups") or
+# "dimensions=[0]" — those are silently skipped; a dtype-shaped token
+# missing from the table is a loud error instead of a silent byte
+# undercount (it used to poison collective_bytes and the bytes-budget
+# lint without any warning).
+_DTYPE_LIKE_RE = re.compile(r"^(?:pred|token|bf16|[fsu]\d{1,3}\w*|c\d{2,3})$")
+
+
+def register_dtype(name: str, nbytes: float) -> None:
+    """Register a byte width for a dtype the table doesn't know yet
+    (the escape hatch the unknown-dtype error points at)."""
+    DTYPE_BYTES[str(name)] = float(nbytes)
+
+
+def dtype_bytes(dtype) -> float:
+    """Bytes per element of ``dtype`` — HLO short name ("bf16"),
+    numpy-style name ("bfloat16"), or anything with a ``.name``/
+    ``str()`` in either spelling (np.dtype, jnp dtypes)."""
+    name = getattr(dtype, "name", None)
+    if not isinstance(name, str):
+        name = str(dtype)
+    key = _DTYPE_ALIASES.get(name, name)
+    if key in DTYPE_BYTES:
+        return float(DTYPE_BYTES[key])
+    raise KeyError(
+        f"unknown dtype {name!r}: add it via "
+        "repro.launch.hlo_stats.register_dtype(name, nbytes)")
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 # "%name = TYPE opcode(" — TYPE may be a tuple "(f32[..], /*index=5*/...)"
@@ -87,8 +144,14 @@ _COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 def _dims(type_str: str):
     out = []
     for dt, dims in _SHAPE_RE.findall(type_str):
-        if dt not in _DTYPE_BYTES:
-            continue
+        if dt not in DTYPE_BYTES:
+            if _DTYPE_LIKE_RE.match(dt):
+                raise ValueError(
+                    f"HLO element type {dt!r} has no byte width in "
+                    "hlo_stats.DTYPE_BYTES — byte accounting would "
+                    "silently undercount; register it via "
+                    "hlo_stats.register_dtype(name, nbytes)")
+            continue                    # non-type token (replica_groups=...)
         shape = [int(d) for d in dims.split(",") if d] if dims else []
         out.append((dt, shape))
     return out

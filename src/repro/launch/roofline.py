@@ -18,11 +18,13 @@ from __future__ import annotations
 
 import numpy as np
 
+from .hlo_stats import dtype_bytes  # noqa: F401  (canonical table —
+#   re-exported so roofline consumers stop growing private dtype maps;
+#   hlo_stats.DTYPE_BYTES is the ONE place byte widths live)
+
 PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
 HBM_BW = 819e9             # B/s per chip
 LINK_BW = 50e9             # B/s per ICI link (one link assumed serial)
-
-_BYTES = {"bfloat16": 2, "float32": 4, "float16": 2}
 
 
 def active_params(cfg) -> int:

@@ -53,21 +53,25 @@ from ..models import transformer as TF
 from ..optim import get_optimizer
 
 GIANT_PARAMS = 20e9
-# §Perf: the a2a (workers×dims re-shard) layout beat the paper-faithful
-# gather at every size measured (EXPERIMENTS.md §Perf pair 2) — auto
-# now always picks it; agg_layout="gather" restores the paper baseline.
-A2A_PARAMS = 0.0
 
 
 def resolve_strategy(tcfg: TrainConfig) -> tuple[str, str]:
-    """(scope, layout) with 'auto' resolved by model size."""
+    """(scope, layout) with 'auto' resolved by model size.
+
+    Global-scope ``agg_layout="auto"`` stays "auto": the engine scores
+    gather vs a2a PER LEAF at trace time through the analytic cost
+    model (analysis.costmodel.plan_layouts — big leaves → a2a, tiny
+    leaves → gather, stat-free mean → the replicated fast path) and
+    logs the resolved plan.  The blocked scope runs its per-bucket a2a
+    barrier regardless; explicit "gather"/"a2a" force a uniform layout
+    (the paper baseline / EXPERIMENTS.md §Perf pair 2 setting)."""
     n = PM.count_params(TF.param_defs(tcfg.model))
     scope = tcfg.agg_scope
     if scope == "auto":
         scope = "blocked" if n > GIANT_PARAMS else "global"
     layout = tcfg.agg_layout
-    if layout == "auto":
-        layout = "a2a" if (scope == "blocked" or n >= A2A_PARAMS) else "gather"
+    if layout == "auto" and scope == "blocked":
+        layout = "a2a"
     return scope, layout
 
 

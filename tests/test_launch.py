@@ -21,13 +21,17 @@ def test_resolve_strategy_giants_blocked():
         assert scope == "blocked" and layout == "a2a"
 
 
-def test_resolve_strategy_small_global_a2a_default():
+def test_resolve_strategy_small_global_auto_default():
     scope, layout = resolve_strategy(_tcfg("qwen3-0.6b"))
     assert scope == "global"
-    assert layout == "a2a"          # §Perf default
-    # paper-faithful baseline stays selectable
+    # global scope keeps "auto": the engine's per-leaf cost-model
+    # planner resolves it at trace time (DESIGN.md §Cost)
+    assert layout == "auto"
+    # forced layouts stay selectable
     scope, layout = resolve_strategy(_tcfg("qwen3-0.6b", agg_layout="gather"))
     assert layout == "gather"
+    scope, layout = resolve_strategy(_tcfg("qwen3-0.6b", agg_layout="a2a"))
+    assert layout == "a2a"
 
 
 def test_variant_long500k_policy():
@@ -84,3 +88,50 @@ def test_all_archs_have_positive_params_and_source():
     for name, cfg in ARCHS.items():
         assert cfg.source, name
         assert count_params(TF.param_defs(cfg)) > 1e8, name
+
+
+# ---------------------------------------------------------------------------
+# hlo_stats dtype table — the byte accounting every cost/bytes number
+# rides on (roofline imports it; private per-module maps are banned)
+# ---------------------------------------------------------------------------
+
+def test_dtype_bytes_table_and_aliases():
+    import numpy as np
+    from repro.launch import hlo_stats as hs
+    from repro.launch.roofline import dtype_bytes as roofline_db
+    assert roofline_db is hs.dtype_bytes        # one table, one module
+    assert hs.dtype_bytes("f32") == 4
+    assert hs.dtype_bytes("bf16") == 2
+    assert hs.dtype_bytes("s4") == 0.5          # sub-byte packing
+    assert hs.dtype_bytes("f8e4m3fn") == 1
+    assert hs.dtype_bytes("token") == 0         # ordering artifact
+    # numpy spellings and dtype objects resolve through the alias map
+    assert hs.dtype_bytes("float32") == 4
+    assert hs.dtype_bytes(np.dtype("int8")) == 1
+    assert hs.dtype_bytes(np.dtype(np.float16)) == 2
+
+
+def test_dtype_bytes_unknown_is_loud():
+    import pytest
+    from repro.launch import hlo_stats as hs
+    with pytest.raises(KeyError, match="register_dtype"):
+        hs.dtype_bytes("f12weird")
+    # _dims: a dtype-shaped token missing from the table must raise
+    # (silent skipping is what used to undercount collective_bytes) ...
+    with pytest.raises(ValueError, match="register_dtype"):
+        hs._dims("f12weird[8,128]")
+    # ... while non-type tokens (attribute text) stay silently skipped
+    assert hs._dims("replica_groups=[4,2]") == []
+    assert hs._dims("dimensions=[0]") == []
+
+
+def test_register_dtype_escape_hatch():
+    from repro.launch import hlo_stats as hs
+    assert "f12weird" not in hs.DTYPE_BYTES
+    try:
+        hs.register_dtype("f12weird", 1.5)
+        assert hs.dtype_bytes("f12weird") == 1.5
+        assert hs._dims("f12weird[4]") == [("f12weird", [4])]
+        assert hs._type_bytes("f12weird[4]") == 6.0
+    finally:
+        del hs.DTYPE_BYTES["f12weird"]
